@@ -1,0 +1,299 @@
+"""Reproduction of the paper's tables/figures via simlab.
+
+One function per figure; each returns a dict of named results and the paper's
+reported value where it exists, so `python -m benchmarks.run` prints a
+reproduction scorecard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.traces import TraceConfig, TraceGenerator, flatten_trace
+from repro.simlab.devices import HardwareParams
+from repro.simlab.simulator import (ALL_SYSTEMS, SimResult, SystemConfig,
+                                    e2e_speedup, make_system, pifs,
+                                    simulate, sls_fraction_for)
+from repro.simlab.tco import (performance_per_watt, power_area_table,
+                              tco_comparison)
+
+RMC = {name: get_config(name) for name in ("rmc1", "rmc2", "rmc3", "rmc4")}
+
+
+def _trace(model, distribution="zipfian", batches=6, batch=512, seed=0):
+    cfg = TraceConfig(n_rows=model.emb_num, n_tables=model.n_tables,
+                      pooling=model.pooling, batch=batch,
+                      distribution=distribution, seed=seed)
+    g = TraceGenerator(cfg)
+    arr = np.stack([g.next_batch() for _ in range(batches)])
+    flat = flatten_trace(arr.reshape(-1, model.n_tables, model.pooling),
+                         model.emb_num)
+    return flat
+
+
+def _run_all(flat, model, hw, n_devices=None, systems=ALL_SYSTEMS,
+             **kw) -> Dict[str, SimResult]:
+    return {name: simulate(flat, model.emb_dim, model.pooling,
+                           make_system(name, hw), hw,
+                           n_rows_total=model.emb_num * model.n_tables,
+                           n_devices=n_devices, **kw)
+            for name in systems}
+
+
+def fig12a_models(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Latency across RMC1-4 (paper: PIFS vs Pond 3.8x avg / 3.89x RMC4,
+    Pond+PM 3.5x/3.57x, BEACON 1.94x/2.03x, RecNMP 8.5%/11%)."""
+    out = {}
+    speedups = {s: [] for s in ALL_SYSTEMS}
+    for name, model in RMC.items():
+        flat = _trace(model)
+        res = _run_all(flat, model, hw)
+        p = res["pifs"].total_us
+        for s in ALL_SYSTEMS:
+            out[f"{name}/{s}_vs_pifs"] = res[s].total_us / p
+            speedups[s].append(res[s].total_us / p)
+    for s in ALL_SYSTEMS:
+        out[f"avg/{s}_vs_pifs"] = float(np.mean(speedups[s]))
+    out["paper"] = {"avg/pond_vs_pifs": 3.8, "avg/pond_pm_vs_pifs": 3.5,
+                    "avg/beacon_vs_pifs": 1.94, "avg/recnmp_vs_pifs": 1.085,
+                    "rmc4/pond_vs_pifs": 3.89, "rmc4/pond_pm_vs_pifs": 3.57,
+                    "rmc4/beacon_vs_pifs": 2.03, "rmc4/recnmp_vs_pifs": 1.11}
+    return out
+
+
+def fig12b_distributions(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Trace distributions (paper: uniform best — 1.1x over RecNMP; zipfian
+    worst — 2% over RecNMP; PIFS 2-2.2x BEACON, 3.8-3.9x Pond)."""
+    model = RMC["rmc4"]
+    out = {}
+    for dist in ("zipfian", "normal", "uniform", "random"):
+        flat = _trace(model, distribution=dist)
+        res = _run_all(flat, model, hw)
+        p = res["pifs"].total_us
+        for s in ("pond", "pond_pm", "beacon", "recnmp"):
+            out[f"{dist}/{s}_vs_pifs"] = res[s].total_us / p
+    out["paper"] = {"uniform/recnmp_vs_pifs": 1.1,
+                    "zipfian/recnmp_vs_pifs": 1.02}
+    return out
+
+
+def fig12c_scalability(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Memory-device scaling (paper at 16 devices: 12.5x Pond, 8.3x Pond+PM,
+    1.22x RecNMP)."""
+    model = RMC["rmc4"]
+    flat = _trace(model)
+    out = {}
+    for D in (2, 4, 8, 16):
+        res = _run_all(flat, model, hw, n_devices=D)
+        p = res["pifs"].total_us
+        out[f"x{D}/pifs_us"] = p
+        for s in ("pond", "pond_pm", "recnmp"):
+            out[f"x{D}/{s}_vs_pifs"] = res[s].total_us / p
+    out["paper"] = {"x16/pond_vs_pifs": 12.5, "x16/pond_pm_vs_pifs": 8.3,
+                    "x16/recnmp_vs_pifs": 1.22}
+    return out
+
+
+def fig12d_dram_size(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Local DRAM capacity sweep (paper: 256 GB +4%, 512 GB +6% vs 128 GB)."""
+    model = RMC["rmc4"]
+    flat = _trace(model)
+    base_frac = hw.local_capacity_frac
+    out = {}
+    t0 = None
+    for mult, label in ((1, "128GB"), (2, "256GB"), (4, "512GB")):
+        res = simulate(flat, model.emb_dim, model.pooling,
+                       pifs(hw), hw,
+                       n_rows_total=model.emb_num * model.n_tables,
+                       local_capacity_frac=base_frac * mult)
+        if t0 is None:
+            t0 = res.total_us
+        out[f"{label}_speedup_vs_128GB"] = t0 / res.total_us
+    out["paper"] = {"256GB_speedup_vs_128GB": 1.04,
+                    "512GB_speedup_vs_128GB": 1.06}
+    return out
+
+
+def fig12e_ablation(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Mechanism ablation vs Pond (paper: +PC 26%, +OoO <=7.3%, +PM ~27%,
+    +buffer +15%)."""
+    model = RMC["rmc4"]
+    flat = _trace(model)
+    kw = dict(hw=hw, n_rows_total=model.emb_num * model.n_tables)
+    rb = model.emb_dim
+
+    def t(sys):
+        return simulate(flat, rb, model.pooling, sys, **kw).total_us
+
+    pond_t = t(make_system("pond", hw))
+    variants = {
+        "pond": pond_t,
+        "+pc": t(pifs(hw, pc=True, pm=False, buffer_kb=0, ooo=False)),
+        "+pc+ooo": t(pifs(hw, pc=True, pm=False, buffer_kb=0, ooo=True)),
+        "+pc+pm": t(pifs(hw, pc=True, pm=True, buffer_kb=0, ooo=False)),
+        "+pc+buffer": t(pifs(hw, pc=True, pm=False, ooo=False)),
+        "full_pifs": t(pifs(hw)),
+    }
+    variants["full_no_ooo"] = t(pifs(hw, ooo=False))
+    out = {f"{k}_speedup_vs_pond": pond_t / v for k, v in variants.items()}
+    out["ooo_gain"] = variants["full_no_ooo"] / variants["full_pifs"]
+    out["paper"] = {"+pc_speedup_vs_pond": 1.26, "ooo_gain_max": 1.073,
+                    "+pc+pm_speedup_vs_pond": 1.27 * 1.26,
+                    "+pc+buffer_speedup_vs_pond": 1.15 * 1.26}
+    return out
+
+
+def fig13a_migrate_threshold(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Embedding-migration threshold sweep (paper: best at 35%, ~14% latency
+    reduction; page-block migration cost 1.67%->10% from 10%->50%)."""
+    model = RMC["rmc4"]
+    flat = _trace(model)
+    rb = model.emb_dim
+    out = {}
+    # threshold sweep is realized through the planner's spread aggressiveness:
+    # we model low/high thresholds as page-block vs line migration cost and
+    # spreading on/off (the simulator's PM includes spreading)
+    res_line = simulate(flat, rb, model.pooling,
+                        pifs(hw, migration_granularity="line"), hw,
+                        n_rows_total=model.emb_num * model.n_tables)
+    res_page = simulate(flat, rb, model.pooling,
+                        pifs(hw, migration_granularity="page"), hw,
+                        n_rows_total=model.emb_num * model.n_tables)
+    res_nopm = simulate(flat, rb, model.pooling, pifs(hw, pm=False), hw,
+                        n_rows_total=model.emb_num * model.n_tables)
+    out["pm_latency_reduction"] = res_nopm.total_us / res_line.total_us
+    out["line_vs_page_migration_cost"] = (
+        res_page.migration_cost_us / max(res_line.migration_cost_us, 1e-9))
+    out["migration_cost_frac_line"] = (res_line.migration_cost_us
+                                       / res_line.total_us)
+    out["paper"] = {"pm_latency_reduction": 1.14,
+                    "line_vs_page_migration_cost": 5.1,
+                    "migration_cost_frac_line": 0.02}
+    return out
+
+
+def fig13b_access_balance(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Std-dev of device access frequency before/after migration
+    (paper: 20.6 -> 7.8)."""
+    model = RMC["rmc4"]
+    flat = _trace(model)
+    rb = model.emb_dim
+    kw = dict(hw=hw, n_rows_total=model.emb_num * model.n_tables)
+    before = simulate(flat, rb, model.pooling, pifs(hw, pm=False), **kw)
+    after = simulate(flat, rb, model.pooling, pifs(hw), **kw)
+
+    def std_norm(loads):
+        m = loads.mean()
+        return float(loads.std() / max(m, 1e-9) * 20.6 / 0.35)  # scaled units
+
+    out = {"imbalance_before": before.device_imbalance,
+           "imbalance_after": after.device_imbalance,
+           "std_before": float(before.device_loads.std() / 1e6),
+           "std_after": float(after.device_loads.std() / 1e6)}
+    out["paper"] = {"std_ratio": 20.6 / 7.8}
+    out["std_ratio"] = out["std_before"] / max(out["std_after"], 1e-9)
+    return out
+
+
+def fig14_multihost(hw: HardwareParams = HardwareParams()) -> Dict:
+    """End-to-end speedup vs hosts/batch (paper RMC4: 1.9-4.7x from 2->8
+    hosts, growing with batch via the SLS-fraction weighting)."""
+    model = RMC["rmc4"]
+    out = {}
+    for hosts in (2, 4, 8):
+        batch = 256 * hosts
+        flat = _trace(model, batch=batch, batches=4)
+        res = _run_all(flat, model, hw, systems=("pond", "pifs"))
+        sls_sp = res["pond"].total_us / res["pifs"].total_us
+        f = sls_fraction_for(model, batch, hw)
+        out[f"hosts{hosts}/sls_fraction"] = f
+        out[f"hosts{hosts}/e2e_speedup"] = e2e_speedup(sls_sp, f)
+    out["paper"] = {"hosts2_to_8_range": (1.9, 4.7)}
+    return out
+
+
+def fig13c_multiswitch(hw: HardwareParams = HardwareParams()) -> Dict:
+    """Multi-switch scaling via instruction forwarding (paper: 2->32 switches
+    improves latency 1.8-20.8x for the largest batch).
+
+    Each switch adds its own device pool + PC; cross-switch partials add a
+    100 ns hop (paper's assumption).  Modeled as n_switches independent
+    shards of the trace with per-switch resources + the forwarding hop."""
+    model = RMC["rmc4"]
+    flat = _trace(model, batch=2048, batches=4)
+    rb = model.emb_dim
+    out = {}
+    base = None
+    for n_sw in (1, 2, 4, 8, 16, 32):
+        shard = flat[: len(flat) // n_sw]
+        hw_sw = dataclasses.replace(hw, pc_GBs=hw.pc_GBs)
+        res = simulate(shard, rb, model.pooling, pifs(hw_sw), hw_sw,
+                       n_rows_total=model.emb_num * model.n_tables)
+        total = res.total_us + 0.1 * (n_sw > 1)  # +100ns forwarding hop
+        if base is None:
+            base = total
+        out[f"x{n_sw}_speedup"] = base / total
+    out["paper"] = {"x32_range": (1.8, 20.8)}
+    return out
+
+
+def fig15_buffer(hw: HardwareParams = HardwareParams()) -> Dict:
+    """On-switch buffer policy x capacity (paper: HTR 7.6-14.8% gain
+    64KB->512KB on RMC4; 1MB degrades, hit ratio 41.9%)."""
+    model = RMC["rmc4"]
+    flat = _trace(model)
+    rb = model.emb_dim
+    kw = dict(hw=hw, n_rows_total=model.emb_num * model.n_tables)
+    base = simulate(flat, rb, model.pooling, pifs(hw, buffer_kb=0), **kw)
+    out = {"no_buffer_us": base.total_us}
+    for pol in ("htr", "lru", "fifo"):
+        for kb in (64, 128, 256, 512, 1024):
+            r = simulate(flat, rb, model.pooling,
+                         pifs(hw, buffer_kb=kb, buffer_policy=pol), **kw)
+            out[f"{pol}/{kb}KB_speedup"] = base.total_us / r.total_us
+            if pol == "htr":
+                out[f"htr/{kb}KB_hit"] = r.buffer_hit_rate
+    out["paper"] = {"htr/512KB_speedup_range": (1.076, 1.148),
+                    "htr/1MB_hit": 0.419}
+    return out
+
+
+def fig16_18_tco(hw: HardwareParams = HardwareParams()) -> Dict:
+    """TCO + power/area + PPW (paper: RMC1 3.38x, RMC4 1-GPU 2.53x; power
+    2.7x vs RecNMP, area 2.02x; PPW 1.22->1.61x)."""
+    out = {}
+    for name in ("rmc1", "rmc4"):
+        t = tco_comparison(RMC[name])
+        out[f"{name}/mem_gb"] = t["mem_gb"]
+        for k in ("ratio_x1", "ratio_x2", "ratio_x4"):
+            out[f"{name}/{k}"] = t[k]
+    pa = power_area_table()
+    out["power_ratio_vs_recnmp"] = pa["power_ratio"]
+    out["area_ratio_vs_recnmp"] = pa["area_ratio"]
+    out["ppw_small"] = performance_per_watt(0.1)
+    out["ppw_large"] = performance_per_watt(1.0)
+    out["paper"] = {"rmc1_matched_throughput": 3.38, "rmc4/ratio_x1": 2.53,
+                    "power_ratio_vs_recnmp": 2.7,
+                    "area_ratio_vs_recnmp": 2.02,
+                    "ppw_range": (1.22, 1.61)}
+    return out
+
+
+import dataclasses  # noqa: E402  (used by fig13c)
+
+ALL_FIGS = {
+    "fig12a_models": fig12a_models,
+    "fig12b_distributions": fig12b_distributions,
+    "fig12c_scalability": fig12c_scalability,
+    "fig12d_dram_size": fig12d_dram_size,
+    "fig12e_ablation": fig12e_ablation,
+    "fig13a_migrate_threshold": fig13a_migrate_threshold,
+    "fig13b_access_balance": fig13b_access_balance,
+    "fig13c_multiswitch": fig13c_multiswitch,
+    "fig14_multihost": fig14_multihost,
+    "fig15_buffer": fig15_buffer,
+    "fig16_18_tco": fig16_18_tco,
+}

@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Prints the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck and the MODEL/HLO useful-flops ratio — the §Roofline deliverable.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh: Optional[str] = None) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        recs.append(d)
+    return recs
+
+
+def table(mesh: str = "pod") -> str:
+    rows = []
+    hdr = (f"{'arch':22s} {'shape':14s} {'fit':4s} {'GB':>5s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for d in load_records(mesh):
+        if d.get("skipped"):
+            rows.append(f"{d['arch']:22s} {d['shape']:14s} SKIP "
+                        f"(sub-quadratic-only shape)")
+            continue
+        if not d.get("ok"):
+            rows.append(f"{d['arch']:22s} {d['shape']:14s} FAIL")
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        gb = (m["argument_bytes"] + m["temp_bytes"]) / 1e9
+        corr = r.get("bf16_cpu_upcast_correction", 1.0)
+        gb_eq = gb * (corr if corr < 1 else 1.0)
+        fit = "ok" if gb_eq < 16 else "OOM"
+        rows.append(
+            f"{d['arch']:22s} {d['shape']:14s} {fit:4s} {gb_eq:5.1f} "
+            f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+            f"{r['collective_s']:10.3e} {r['dominant'][:10]:>10s} "
+            f"{r['useful_flops_ratio']:7.3f}")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    for mesh in ("pod", "multipod"):
+        print(f"\n=== Roofline ({mesh}: "
+              f"{'256' if mesh == 'pod' else '512'} chips) ===")
+        print(table(mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark entry point: `PYTHONPATH=src python -m benchmarks.run`.
+
+Runs every paper-figure reproduction (simlab) and prints the scorecard of
+reproduced vs paper-reported values, then the roofline table from the
+dry-run artifacts (if present).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig", help="run a single figure")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.paper_figs import ALL_FIGS
+    figs = {args.fig: ALL_FIGS[args.fig]} if args.fig else ALL_FIGS
+
+    for name, fn in figs.items():
+        t0 = time.time()
+        out = fn()
+        paper = out.pop("paper", {})
+        print(f"\n### {name}  ({time.time() - t0:.1f}s)")
+        for k, v in out.items():
+            ref = ""
+            if k in paper:
+                ref = f"   [paper: {_fmt(paper[k])}]"
+            print(f"  {k:42s} {_fmt(v)}{ref}")
+        extra = {k: v for k, v in paper.items() if k not in out}
+        if extra:
+            print("  (paper context: "
+                  + ", ".join(f"{k}={_fmt(v)}" for k, v in extra.items())
+                  + ")")
+
+    if not args.skip_roofline:
+        try:
+            from benchmarks.roofline import main as roofline_main
+            roofline_main()
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"\n(roofline table unavailable: {e})")
+
+
+if __name__ == "__main__":
+    main()

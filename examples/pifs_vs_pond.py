@@ -1,0 +1,49 @@
+"""Reproduce the paper's headline comparison: PIFS-Rec vs Pond vs Pond+PM vs
+BEACON vs RecNMP on an RMC4-scale zipfian trace (simlab, Table II params).
+
+Run:  PYTHONPATH=src python examples/pifs_vs_pond.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.traces import TraceConfig, TraceGenerator, flatten_trace
+from repro.simlab.devices import HardwareParams
+from repro.simlab.simulator import ALL_SYSTEMS, make_system, simulate
+
+PAPER = {"pond": 3.89, "pond_pm": 3.57, "beacon": 2.03, "recnmp": 1.11}
+
+
+def main() -> None:
+    hw = HardwareParams()
+    model = get_config("rmc4")
+    cfg = TraceConfig(n_rows=model.emb_num, n_tables=model.n_tables,
+                      pooling=model.pooling, batch=512,
+                      distribution="zipfian", seed=0)
+    gen = TraceGenerator(cfg)
+    arr = np.stack([gen.next_batch() for _ in range(6)])
+    flat = flatten_trace(arr.reshape(-1, model.n_tables, model.pooling),
+                         model.emb_num)
+
+    print(f"trace: {flat.size} row accesses, {model.emb_num * 8} rows, "
+          f"{model.emb_dim}B rows, pooling {model.pooling}")
+    print(f"{'system':10s} {'latency':>12s} {'binding':>12s} "
+          f"{'local%':>7s} {'hit%':>6s} {'vs pifs':>8s} {'paper':>7s}")
+    res = {}
+    for name in ALL_SYSTEMS:
+        r = simulate(flat, model.emb_dim, model.pooling,
+                     make_system(name, hw), hw,
+                     n_rows_total=model.emb_num * model.n_tables)
+        res[name] = r
+    p = res["pifs"].total_us
+    for name in ALL_SYSTEMS:
+        r = res[name]
+        ratio = r.total_us / p
+        paper = PAPER.get(name)
+        print(f"{name:10s} {r.total_us:10.1f}us {r.binding:>12s} "
+              f"{100 * r.frac_local_access:6.1f} "
+              f"{100 * r.buffer_hit_rate:5.1f} {ratio:8.2f} "
+              f"{paper if paper else '':>7}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Sharded, asynchronous, atomic checkpointing with elastic restore.
+
+Design (what a 1000-node deployment needs, realized single-process here):
+
+  * **Sharded save** — every array leaf is written as one .npy per leaf
+    (fetched via jax.device_get; on a multi-host runtime each host would
+    write only its addressable shards — the layout and manifest already
+    carry the full logical shape, so the single-host writer is the
+    degenerate case of the same format).
+  * **Async** — `save()` snapshots the pytree (device_get) and hands the
+    file I/O to a background thread; training continues immediately.  The
+    snapshot is taken synchronously (consistent cut), only serialization
+    overlaps compute.
+  * **Atomic commit** — writes go to `step_<N>.tmp/`; a manifest with
+    content checksums is written last, then the directory is renamed to
+    `step_<N>/`.  A crash mid-write leaves only a .tmp that restore ignores
+    (tested by the fault-tolerance suite).
+  * **Elastic restore** — leaves are stored with their *logical* shapes;
+    `restore(..., shardings=...)` re-places them under ANY mesh whose
+    shapes divide the logical shapes, so a 512-chip checkpoint restores
+    onto 256 chips (or 8 CPU devices in tests) unchanged.
+  * **Retention** — `keep` most recent checkpoints are retained; commits
+    prune older ones.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+_SEP = "::"  # path separator in flattened keys
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        """Snapshot now, write in background (or synchronously)."""
+        flat = {k: np.asarray(jax.device_get(v))
+                for k, v in _flatten(tree).items()}
+        self.wait()  # one outstanding write at a time
+        t = threading.Thread(target=self._write, args=(step, flat),
+                             daemon=True)
+        t.start()
+        self._pending = t
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        tmp = os.path.join(self.dir, f"step_{step:012d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:012d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}, "time": time.time()}
+        for i, (key, arr) in enumerate(sorted(flat.items())):
+            fname = f"leaf_{i:06d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc": _crc(arr),
+            }
+        # manifest written last = commit barrier
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+
+    def _prune(self) -> None:
+        with self._lock:
+            steps = self.all_steps()
+            for s in steps[: -self.keep]:
+                shutil.rmtree(os.path.join(self.dir, f"step_{s:012d}"),
+                              ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None, validate: bool = True) -> Any:
+        """Restore into the structure of `tree_like`.  `shardings` (same
+        structure) re-places leaves under the current mesh — elastic restore
+        across mesh shapes."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        leaves_meta = manifest["leaves"]
+        flat_struct = _flatten(tree_like)
+        if set(flat_struct) != set(leaves_meta):
+            missing = set(flat_struct) ^ set(leaves_meta)
+            raise ValueError(f"checkpoint/tree structure mismatch: {missing}")
+
+        flat_shard = (_flatten_nonarray(shardings, flat_struct)
+                      if shardings is not None else {})
+
+        restored: Dict[str, Any] = {}
+        for key, meta in leaves_meta.items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            if validate and _crc(arr) != meta["crc"]:
+                raise IOError(f"checksum mismatch on {key}")
+            if key in flat_shard and flat_shard[key] is not None:
+                restored[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                restored[key] = jax.numpy.asarray(arr)
+        # rebuild in tree_like's structure
+        paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+            tree_like)
+        ordered = [restored[_SEP.join(_path_str(p) for p in path)]
+                   for path, _ in paths_and_leaves]
+        return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def _flatten_nonarray(tree: Any, ref: Dict[str, Any]) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: x is None or hasattr(x, "memory_kind")
+    )[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _crc(arr: np.ndarray) -> str:
+    return hashlib.md5(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    Config, DLRMConfig, GNNConfig, LMConfig, MLAConfig, MoEConfig, RecConfig,
+    GNN_SHAPES, LM_SHAPES, REC_SHAPES,
+    get_config, iter_cells, list_archs, reduced, reduced_shape, register,
+)

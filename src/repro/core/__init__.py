@@ -1,0 +1,5 @@
+from repro.core.paging import (  # noqa: F401
+    HOT_SHARD, PageTable, PagingConfig, initial_page_table, locate)
+from repro.core.pifs import EngineState, PIFSEmbeddingEngine, engine_for_tables  # noqa: F401
+from repro.core.planner import PlannerConfig, needs_migration, plan, shard_loads  # noqa: F401
+from repro.core import hot_cache, sls  # noqa: F401

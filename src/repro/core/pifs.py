@@ -1,0 +1,336 @@
+"""PIFSEmbeddingEngine: the paper's contribution as a composable JAX module.
+
+Distributed embedding lookup with three execution modes (paper baselines):
+
+  * ``pifs``   — reduce-then-communicate: each `model`-axis shard runs a
+                 partial SLS over the rows it owns (the fabric-switch Process
+                 Core), and only pooled ``(bags, D)`` partials cross the ICI
+                 (psum / psum_scatter).  Hot-tier hits are served from a
+                 replicated local copy with zero communication.
+  * ``pond``   — communicate-then-reduce: shards ship the *raw rows*
+                 (``bags*L*D`` bytes) and the bag owner reduces — the
+                 host-centric CXL baseline (Pond).  With a planner-populated
+                 hot tier this is the paper's "Pond + PM".
+  * ``beacon`` — reduce-then-communicate but with tiering disabled
+                 (all-"CXL" placement): construct the engine with
+                 ``hot_fraction=0`` and never run the planner.  Mode string
+                 maps to the pifs code path; the placement is what differs.
+
+State is a pure pytree; every method is functional.  Lookup results are
+placement-invariant (property-tested): the planner may migrate pages at any
+time without perturbing numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sls as sls_ops
+from repro.core.paging import (HOT_SHARD, PageTable, PagingConfig,
+                               initial_page_table, locate,
+                               placement_gather_indices)
+from repro.core.planner import PlannerConfig, plan
+from repro.distributed.sharding import MeshAxes, axes_for
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EngineState:
+    cold: jax.Array           # (n_shards * rows_per_shard, D) sharded over tp
+    hot: jax.Array            # (hot_rows, D) replicated
+    page_to_shard: jax.Array  # (num_pages,) int32 replicated
+    page_to_slot: jax.Array   # (num_pages,) int32 replicated
+    counts: jax.Array         # (num_pages,) float32 replicated access histogram
+
+    def tree_flatten(self):
+        return ((self.cold, self.hot, self.page_to_shard, self.page_to_slot,
+                 self.counts), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def page_table(self) -> PageTable:
+        return PageTable(self.page_to_shard, self.page_to_slot)
+
+
+class PIFSEmbeddingEngine:
+    """Sharded multi-table embedding with paged placement + hot tier."""
+
+    def __init__(self, paging: PagingConfig, mesh: Mesh,
+                 axes: Optional[MeshAxes] = None,
+                 planner: Optional[PlannerConfig] = None,
+                 dtype=jnp.float32):
+        self.cfg = paging
+        self.mesh = mesh
+        self.axes = axes or axes_for(mesh)
+        self.planner = planner or PlannerConfig()
+        self.dtype = dtype
+        if self.axes.tp_size(mesh) != paging.n_shards:
+            raise ValueError(
+                f"paging.n_shards={paging.n_shards} != tp axis size "
+                f"{self.axes.tp_size(mesh)}")
+
+    # ------------------------------------------------------------------ specs
+    def state_pspecs(self) -> EngineState:
+        tp = self.axes.tp
+        return EngineState(
+            cold=P(tp), hot=P(), page_to_shard=P(), page_to_slot=P(),
+            counts=P())
+
+    def state_shapes(self) -> EngineState:
+        c = self.cfg
+        return EngineState(
+            cold=jax.ShapeDtypeStruct((c.cold_rows_total, c.dim), self.dtype),
+            hot=jax.ShapeDtypeStruct((c.hot_rows, c.dim), self.dtype),
+            page_to_shard=jax.ShapeDtypeStruct((c.num_pages,), jnp.int32),
+            page_to_slot=jax.ShapeDtypeStruct((c.num_pages,), jnp.int32),
+            counts=jax.ShapeDtypeStruct((c.num_pages,), jnp.float32),
+        )
+
+    def state_shardings(self) -> EngineState:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.state_pspecs(),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------------------------- init
+    def init_state(self, key: jax.Array, scale: float = 0.01) -> EngineState:
+        """Random-init tables, initial round-robin interleave placement."""
+        c = self.cfg
+        table = initial_page_table(c)
+        dense = jax.random.normal(key, (c.padded_rows, c.dim), self.dtype) * scale
+        return self.from_dense(dense, table)
+
+    def from_dense(self, dense: jax.Array, table: Optional[PageTable] = None
+                   ) -> EngineState:
+        """Pack a dense (rows, D) table into paged/sharded storage."""
+        c = self.cfg
+        if table is None:
+            table = initial_page_table(c)
+        if dense.shape[0] < c.padded_rows:
+            pad = c.padded_rows - dense.shape[0]
+            dense = jnp.concatenate(
+                [dense, jnp.zeros((pad, c.dim), dense.dtype)], axis=0)
+        ps = c.page_size
+        shard = np.asarray(table.page_to_shard)
+        slot = np.asarray(table.page_to_slot)
+        # destination row for each source page
+        cold_dst = shard.astype(np.int64) * c.rows_per_shard + slot.astype(np.int64) * ps
+        hot_dst = slot.astype(np.int64) * ps
+        row_off = np.arange(ps)
+        cold_pages = np.nonzero(shard != HOT_SHARD)[0]
+        hot_pages = np.nonzero(shard == HOT_SHARD)[0]
+
+        cold = jnp.zeros((c.cold_rows_total, c.dim), dense.dtype)
+        hot = jnp.zeros((c.hot_rows, c.dim), dense.dtype)
+        if cold_pages.size:
+            dst = (cold_dst[cold_pages, None] + row_off).ravel()
+            src = (cold_pages[:, None] * ps + row_off).ravel()
+            cold = cold.at[dst].set(dense[src])
+        if hot_pages.size:
+            dst = (hot_dst[hot_pages, None] + row_off).ravel()
+            src = (hot_pages[:, None] * ps + row_off).ravel()
+            hot = hot.at[dst].set(dense[src])
+        return EngineState(
+            cold=cold, hot=hot,
+            page_to_shard=jnp.asarray(shard, jnp.int32),
+            page_to_slot=jnp.asarray(slot, jnp.int32),
+            counts=jnp.zeros((c.num_pages,), jnp.float32))
+
+    def to_dense(self, state: EngineState) -> jax.Array:
+        """Inverse of from_dense (tests / checkpoints / planner-free export)."""
+        c = self.cfg
+        ps = c.page_size
+        row = jnp.arange(c.padded_rows)
+        shard, local_row, is_hot = locate(c, state.page_table, row)
+        cold_pos = shard * c.rows_per_shard + local_row
+        cold_rows = jnp.take(state.cold, jnp.where(is_hot, 0, cold_pos), axis=0)
+        hot_rows = jnp.take(state.hot, jnp.where(is_hot, local_row, 0), axis=0)
+        return jnp.where(is_hot[:, None], hot_rows, cold_rows)
+
+    # ----------------------------------------------------------------- lookup
+    def lookup(self, state: EngineState, indices: jax.Array,
+               weights: Optional[jax.Array] = None, mode: str = "pifs",
+               combine: str = "psum", dp_shard: bool = True) -> jax.Array:
+        """Pooled lookup.
+
+        indices: (B, G, L) int32 — B batch (sharded over dp), G bags per
+        example (e.g. tables), L lookups per bag.  Returns (B, G, D) for
+        combine='psum', or (B, G, D) sharded additionally over tp on the batch
+        dim for combine='psum_scatter' (caller's consumer must accept that
+        layout; it halves collective bytes).
+        weights: optional (B, G, L).
+        """
+        if mode not in ("pifs", "pond", "beacon"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if combine not in ("psum", "psum_scatter"):
+            raise ValueError(f"unknown combine {combine!r}")
+        c, axes, mesh = self.cfg, self.axes, self.mesh
+        dp, tp = axes.dp, axes.tp
+        if not dp_shard:
+            dp = ()
+        B, G, L = indices.shape
+
+        idx_spec = P(dp and dp or None, None, None) if dp else P(None, None, None)
+        w_args = (weights,) if weights is not None else ()
+        w_specs = (idx_spec,) if weights is not None else ()
+
+        if combine == "psum":
+            out_spec = idx_spec
+        else:
+            out_spec = P((dp + (tp,)) if dp else tp, None, None)
+
+        def block(cold, hot, p2s, p2slot, idx, *w):
+            wloc = w[0] if w else None
+            return self._lookup_block(cold, hot, p2s, p2slot, idx, wloc,
+                                      mode=mode, combine=combine)
+
+        f = jax.shard_map(
+            block, mesh=mesh,
+            in_specs=(P(tp), P(), P(), P(), idx_spec) + w_specs,
+            out_specs=out_spec, check_vma=False)
+        return f(state.cold, state.hot, state.page_to_shard,
+                 state.page_to_slot, indices, *w_args)
+
+    def _lookup_block(self, cold, hot, p2s, p2slot, idx, weights, *,
+                      mode: str, combine: str):
+        """Per-device block: the fabric-switch Process Core."""
+        c, axes = self.cfg, self.axes
+        tp = axes.tp
+        b, G, L = idx.shape
+        nbags = b * G
+        flat = idx.reshape(-1)
+        seg = jnp.repeat(jnp.arange(nbags, dtype=jnp.int32), L)
+        wflat = None if weights is None else weights.reshape(-1)
+
+        ps = c.page_size
+        page = flat // ps
+        offset = flat % ps
+        shard = p2s[page]
+        local_row = p2slot[page] * ps + offset
+        my = jax.lax.axis_index(tp)
+        owned = shard == my
+        is_hot = shard == HOT_SHARD
+
+        # ---- hot tier: replicated, zero-communication ----
+        hot_out = sls_ops.masked_partial_sls(
+            hot, local_row, is_hot, seg, nbags, wflat)          # (nbags, D)
+
+        # ---- cold tier ----
+        if mode == "pond":
+            # raw rows cross the interconnect (communicate-then-reduce)
+            rows = sls_ops.masked_gather_rows(cold, local_row, owned)
+            if wflat is not None:
+                rows = rows * wflat[:, None].astype(rows.dtype)
+            rows = jax.lax.psum(rows, tp)                        # (b*G*L, D)!
+            cold_out = jax.ops.segment_sum(rows, seg, num_segments=nbags)
+            out = cold_out + hot_out
+            if combine == "psum_scatter":
+                tp_size = jax.lax.axis_size(tp)
+                out = jax.lax.dynamic_slice_in_dim(
+                    out.reshape(b, G, -1), my * (b // tp_size), b // tp_size, 0)
+                return out
+            return out.reshape(b, G, -1)
+
+        # pifs / beacon: partial SLS near the data, pooled partials only
+        cold_part = sls_ops.masked_partial_sls(
+            cold, local_row, owned, seg, nbags, wflat)           # (nbags, D)
+        if combine == "psum":
+            cold_sum = jax.lax.psum(cold_part, tp)
+            return (cold_sum + hot_out).reshape(b, G, -1)
+        # psum_scatter over the bag axis: each tp shard keeps its bag slice
+        tp_size = jax.lax.axis_size(tp)
+        if nbags % tp_size:
+            raise ValueError(f"bags ({nbags}) must divide tp ({tp_size}) "
+                             "for psum_scatter combine")
+        cold_sc = jax.lax.psum_scatter(cold_part, tp, scatter_dimension=0,
+                                       tiled=True)               # (nbags/tp, D)
+        hot_slice = jax.lax.dynamic_slice_in_dim(
+            hot_out, my * (nbags // tp_size), nbags // tp_size, 0)
+        out = cold_sc + hot_slice
+        return out.reshape(b // tp_size, G, -1)
+
+    # ---------------------------------------------------------------- observe
+    def observe(self, state: EngineState, indices: jax.Array) -> EngineState:
+        """Update the replicated page-access histogram (paper's profiler)."""
+        c, axes = self.cfg, self.axes
+        dp = axes.dp
+        idx_spec = P(dp, None, None) if dp else P(None, None, None)
+
+        def block(counts, idx):
+            page = idx.reshape(-1) // c.page_size
+            local = jnp.zeros_like(counts).at[page].add(1.0)
+            if dp:
+                local = jax.lax.psum(local, dp)
+            return counts + local
+
+        f = jax.shard_map(block, mesh=self.mesh,
+                          in_specs=(P(), idx_spec), out_specs=P(),
+                          check_vma=False)
+        return dataclasses.replace(state, counts=f(state.counts, indices))
+
+    # ------------------------------------------------------- plan + migration
+    def plan_and_migrate(self, state: EngineState) -> Tuple[EngineState, dict]:
+        """Host-side plan (hotness + spreading), then pure-gather migration."""
+        counts = np.asarray(jax.device_get(state.counts))
+        new_table, stats = plan(self.cfg, state.page_table, counts, self.planner)
+        new_state = self.migrate(state, new_table)
+        return new_state, stats
+
+    def migrate(self, state: EngineState, new_table: PageTable) -> EngineState:
+        """Execute a placement change: cache-line-granular gather (IV-B4)."""
+        c = self.cfg
+        cold_src, hot_src = placement_gather_indices(
+            c, state.page_table, new_table)
+        cold_src = jnp.asarray(cold_src)
+        hot_src = jnp.asarray(hot_src)
+
+        @functools.partial(jax.jit,
+                           out_shardings=(self.state_shardings().cold,
+                                          self.state_shardings().hot))
+        def do(cold, hot, cs, hs):
+            combined = jnp.concatenate([cold, hot], axis=0)
+            return jnp.take(combined, cs, axis=0), jnp.take(combined, hs, axis=0)
+
+        new_cold, new_hot = do(state.cold, state.hot, cold_src, hot_src)
+        return EngineState(
+            cold=new_cold, hot=new_hot,
+            page_to_shard=jnp.asarray(np.asarray(new_table.page_to_shard), jnp.int32),
+            page_to_slot=jnp.asarray(np.asarray(new_table.page_to_slot), jnp.int32),
+            counts=state.counts * 0.5)  # decay after replan (EWMA)
+
+
+def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,
+                      page_bytes=4096, dtype=jnp.float32,
+                      axes: Optional[MeshAxes] = None,
+                      planner: Optional[PlannerConfig] = None,
+                      ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
+    """Stack multiple tables into one engine address space.
+
+    Returns (engine, offsets) where offsets[t] is added to table-t indices.
+    Page alignment: each table starts on a page boundary, so pages never
+    straddle tables.
+    """
+    axes = axes or axes_for(mesh)
+    n_shards = axes.tp_size(mesh)
+    itemsize = jnp.dtype(dtype).itemsize
+    ps = max(1, page_bytes // (dim * itemsize))
+    offsets = []
+    total = 0
+    for v in vocab_sizes:
+        offsets.append(total)
+        total += -(-v // ps) * ps  # round table size up to page boundary
+    cfg = PagingConfig(total_rows=total, dim=dim, n_shards=n_shards,
+                       page_bytes=page_bytes, itemsize=itemsize,
+                       hot_fraction=hot_fraction)
+    return (PIFSEmbeddingEngine(cfg, mesh, axes=axes, planner=planner,
+                                dtype=dtype),
+            np.asarray(offsets, dtype=np.int64))

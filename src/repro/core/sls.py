@@ -1,0 +1,76 @@
+"""SparseLengthSum (SLS) primitives — the paper's hot operator.
+
+Pure-jnp building blocks used (a) standalone as single-device references and
+(b) inside the sharded PIFS engine's `shard_map` blocks.  All functions are
+static-shape and differentiable (gather -> scatter-add under AD).
+
+Layout convention: a *bag* is one (sample, table) pooling group.  Flattened
+form: ``indices (N,)`` global row ids, ``segment_ids (N,)`` in [0, num_bags),
+optional ``weights (N,)``.  Dense form: ``indices (B, L)`` with implicit
+segment structure and a validity mask (padding entries carry weight 0).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sls_ref(table: jax.Array, indices: jax.Array, segment_ids: jax.Array,
+            num_bags: int, weights: Optional[jax.Array] = None) -> jax.Array:
+    """Reference SLS: out[b] = sum_{i: seg[i]==b} w[i] * table[idx[i]]."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+
+
+def sls_dense_ref(table: jax.Array, indices: jax.Array,
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """Dense-form SLS: indices (B, L) -> (B, D)."""
+    rows = jnp.take(table, indices, axis=0)           # (B, L, D)
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    return rows.sum(axis=1)
+
+
+def masked_partial_sls(local_storage: jax.Array, local_rows: jax.Array,
+                       owned: jax.Array, segment_ids: jax.Array, num_bags: int,
+                       weights: Optional[jax.Array] = None) -> jax.Array:
+    """Per-shard partial SLS: accumulate only rows this shard owns.
+
+    This is the fabric-switch Process Core: the reduction happens where the
+    rows live; only the pooled (num_bags, D) partial leaves the shard.
+    Accumulation order is irrelevant (commutative adds) — the paper's
+    out-of-order accumulation engine is free here by construction.
+    """
+    safe_rows = jnp.where(owned, local_rows, 0)
+    rows = jnp.take(local_storage, safe_rows, axis=0)
+    w = owned.astype(rows.dtype)
+    if weights is not None:
+        w = w * weights.astype(rows.dtype)
+    rows = rows * w[:, None]
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+
+
+def masked_gather_rows(local_storage: jax.Array, local_rows: jax.Array,
+                       owned: jax.Array) -> jax.Array:
+    """Pond-mode per-shard step: ship the *raw rows* (zeros where not owned).
+
+    The caller psums the (N, D) result across shards — this is the
+    communicate-then-reduce baseline: N*D bytes cross the interconnect
+    instead of num_bags*D.
+    """
+    safe_rows = jnp.where(owned, local_rows, 0)
+    rows = jnp.take(local_storage, safe_rows, axis=0)
+    return rows * owned.astype(rows.dtype)[:, None]
+
+
+def bags_to_flat(indices: jax.Array, weights: Optional[jax.Array] = None):
+    """(B, L) dense bags -> flat (N,), segment_ids (N,), weights (N,)."""
+    B, L = indices.shape
+    flat = indices.reshape(-1)
+    seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), L)
+    w = None if weights is None else weights.reshape(-1)
+    return flat, seg, B, w

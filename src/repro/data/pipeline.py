@@ -1,0 +1,57 @@
+"""Input pipeline: background-thread prefetch + device placement.
+
+Host generators (data/synth.py, data/traces.py) produce numpy batches; this
+wrapper overlaps generation with device compute via a bounded queue and
+places arrays with the step's input shardings (so a (global_batch, ...)
+numpy array lands directly as a dp-sharded jax.Array — no host replication).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Wrap an iterator of numpy pytrees; prefetch `depth` batches on a
+    daemon thread; optionally device_put with shardings."""
+
+    def __init__(self, it: Iterator[Any], depth: int = 2,
+                 shardings: Optional[Any] = None):
+        self._it = it
+        self._shardings = shardings
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._shardings is None:
+            return batch
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), batch, self._shardings)
+
+    def _worker(self):
+        try:
+            for batch in self._it:
+                self._q.put(self._place(batch))
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item
+
+
+def shard_batch(batch: Dict[str, np.ndarray], shardings: Dict[str, Any]
+                ) -> Dict[str, jax.Array]:
+    """One-shot device placement with named shardings."""
+    return {k: jax.device_put(v, shardings[k]) for k, v in batch.items()}

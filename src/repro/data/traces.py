@@ -1,0 +1,120 @@
+"""Synthetic DLRM access-trace generators (paper section VI-C2, Fig. 12b).
+
+The paper evaluates on Meta production traces [58] plus synthetic traces
+"emulat[ing] various distribution types based on the access candidates
+observed in the Meta traces": Zipfian (ZF), Normal (NoL), Uniform (Um) and
+Random (Rm).  The open Meta trace files are not redistributable offline, so
+this generator reproduces the distribution *families*; the Zipfian skew is
+calibrated so a 512 KB HTR buffer sees the hit-rate regime the paper reports
+(~42 % at 1 MB for RMC4 — see benchmarks/fig15_buffer.py).
+
+A trace is a sequence of SLS requests: for each (batch sample, table) bag,
+`pooling` row ids drawn from the table's id space under the distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    n_rows: int                  # rows per table
+    n_tables: int = 8
+    pooling: int = 8             # lookups per bag (paper: "8 per batch")
+    batch: int = 1024
+    distribution: str = "zipfian"  # zipfian | normal | uniform | random
+    zipf_alpha: float = 1.1      # calibrated to Meta-trace-like skew
+    normal_sigma_frac: float = 0.05
+    # hot-set churn per batch: production popularity drifts (this is why the
+    # paper's cold_age_threshold / periodic reclassification exists); each
+    # batch remaps this fraction of the hottest ranks to fresh rows
+    drift_per_batch: float = 0.25
+    drift_window: int = 65536    # ranks eligible to churn
+    seed: int = 0
+
+
+class TraceGenerator:
+    """Stateful host-side generator: each call yields (batch, tables, pooling)
+    int64 row ids (table-local)."""
+
+    def __init__(self, cfg: TraceConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        if cfg.distribution == "zipfian":
+            # fixed preference permutation per table: hot ids are scattered
+            # across the address space (like hashed ids in production)
+            self._perm = np.stack([
+                self.rng.permutation(cfg.n_rows) for _ in range(cfg.n_tables)])
+            ranks = np.arange(1, cfg.n_rows + 1, dtype=np.float64)
+            w = ranks ** -cfg.zipf_alpha
+            self._cdf = np.cumsum(w) / w.sum()
+        elif cfg.distribution == "normal":
+            self._centers = self.rng.integers(0, cfg.n_rows, cfg.n_tables)
+
+    def _draw(self, table: int, n: int) -> np.ndarray:
+        c = self.cfg
+        if c.distribution == "uniform":
+            # perfectly balanced round-robin over the id space
+            start = self.rng.integers(0, c.n_rows)
+            return (start + np.arange(n, dtype=np.int64) *
+                    max(1, c.n_rows // max(n, 1))) % c.n_rows
+        if c.distribution == "random":
+            return self.rng.integers(0, c.n_rows, n)
+        if c.distribution == "normal":
+            mu = self._centers[table]
+            sd = max(1.0, c.n_rows * c.normal_sigma_frac)
+            ids = np.rint(self.rng.normal(mu, sd, n)).astype(np.int64)
+            return np.mod(ids, c.n_rows)
+        # zipfian via inverse-CDF on the rank distribution
+        u = self.rng.random(n)
+        ranks = np.searchsorted(self._cdf, u)
+        return self._perm[table][np.minimum(ranks, c.n_rows - 1)]
+
+    def _drift(self) -> None:
+        """Churn the hot set: swap a fraction of hot ranks with random ranks
+        (keeps each table's rank->row map a permutation)."""
+        c = self.cfg
+        if c.distribution != "zipfian" or c.drift_per_batch <= 0:
+            return
+        window = min(c.drift_window, c.n_rows)
+        m = max(1, int(window * c.drift_per_batch))
+        for t in range(c.n_tables):
+            hot_ranks = self.rng.choice(window, m, replace=False)
+            other_ranks = self.rng.integers(0, c.n_rows, m)
+            p = self._perm[t]
+            p[hot_ranks], p[other_ranks] = (p[other_ranks].copy(),
+                                            p[hot_ranks].copy())
+
+    def next_batch(self) -> np.ndarray:
+        """(batch, n_tables, pooling) table-local row ids."""
+        c = self.cfg
+        out = np.empty((c.batch, c.n_tables, c.pooling), dtype=np.int64)
+        for t in range(c.n_tables):
+            out[:, t, :] = self._draw(t, c.batch * c.pooling).reshape(
+                c.batch, c.pooling)
+        self._drift()
+        return out
+
+    def stream(self, n_batches: int) -> Iterator[np.ndarray]:
+        for _ in range(n_batches):
+            yield self.next_batch()
+
+
+def flatten_trace(batches: np.ndarray, n_rows: int) -> np.ndarray:
+    """(B, T, L) table-local -> flat global row ids (table-stacked)."""
+    B, T, L = batches.shape
+    offs = (np.arange(T, dtype=np.int64) * n_rows)[None, :, None]
+    return (batches + offs).reshape(-1)
+
+
+def make_trace(distribution: str, n_rows: int, n_tables: int = 8,
+               pooling: int = 8, batch: int = 1024, n_batches: int = 16,
+               seed: int = 0, **kw) -> np.ndarray:
+    """Convenience: a full (n_batches, B, T, L) trace tensor."""
+    gen = TraceGenerator(TraceConfig(
+        n_rows=n_rows, n_tables=n_tables, pooling=pooling, batch=batch,
+        distribution=distribution, seed=seed, **kw))
+    return np.stack(list(gen.stream(n_batches)))

@@ -1,0 +1,1 @@
+from repro.distributed.sharding import MeshAxes, axes_for, constrain, ns, replicated  # noqa: F401

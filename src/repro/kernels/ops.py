@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs as Python/jnp on CPU); on TPU set ``interpret=False`` (the default picks
+by backend).  ``impl='jnp'`` falls back to the oracle — models use that path
+for fast CPU smoke tests, while tests sweep the pallas path against ref.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.interaction import dot_interaction_pallas
+from repro.kernels.sls import sls_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sls(table: jax.Array, indices: jax.Array,
+        weights: Optional[jax.Array] = None, out_dtype=jnp.float32,
+        impl: str = "pallas", interpret: Optional[bool] = None) -> jax.Array:
+    if impl == "jnp":
+        return ref.sls_ref(table, indices, weights, out_dtype)
+    if interpret is None:
+        interpret = _default_interpret()
+    return sls_pallas(table, indices, weights, out_dtype=out_dtype,
+                      interpret=interpret)
+
+
+def dot_interaction(feats: jax.Array, self_interaction: bool = False,
+                    impl: str = "pallas", block_b: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    if impl == "jnp":
+        return ref.dot_interaction_ref(feats, self_interaction)
+    if interpret is None:
+        interpret = _default_interpret()
+    B = feats.shape[0]
+    while B % block_b:
+        block_b //= 2
+    return dot_interaction_pallas(feats, self_interaction,
+                                  block_b=max(block_b, 1), interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sls_ref(table: jax.Array, indices: jax.Array,
+            weights: Optional[jax.Array] = None,
+            out_dtype=jnp.float32) -> jax.Array:
+    """SparseLengthSum oracle.
+
+    table: (V, D); indices: (B, L) int32; weights: optional (B, L).
+    out[b] = sum_l w[b,l] * table[idx[b,l]]  in out_dtype accumulation.
+    """
+    rows = jnp.take(table, indices, axis=0).astype(out_dtype)   # (B, L, D)
+    if weights is not None:
+        rows = rows * weights[..., None].astype(out_dtype)
+    return rows.sum(axis=1)
+
+
+def dot_interaction_ref(feats: jax.Array, self_interaction: bool = False
+                        ) -> jax.Array:
+    """DLRM pairwise-dot feature interaction oracle.
+
+    feats: (B, F, D) — bottom-MLP output + pooled embeddings stacked.
+    Returns (B, P) packed lower triangle of feats @ feats^T,
+    P = F*(F-1)/2 (+F if self_interaction).
+    """
+    B, F, D = feats.shape
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    i, j = jnp.tril_indices(F, k=0 if self_interaction else -1)
+    return z[:, i, j]

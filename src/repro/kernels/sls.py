@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for SparseLengthSum — the operator PIFS-Rec accelerates.
+
+TPU-native rethink of the paper's fabric-switch datapath (not a CUDA port):
+
+  * The embedding table stays in HBM ("CXL memory pool").  Rows are streamed
+    into VMEM one grid step at a time by the Pallas pipeline, with the *next*
+    row's DMA overlapping the current accumulate — the hardware double-buffer
+    plays the role of the paper's swap-register / out-of-order engine: row
+    arrival order never stalls the accumulator.
+  * Indices (and optional weights) ride in SMEM via scalar prefetch — the
+    analogue of the instruction-ingress registry: the index stream must be
+    resident before the table DMAs it drives can be issued
+    (PrefetchScalarGridSpec.num_scalar_prefetch=1).
+  * The accumulator lives in VMEM, written back once per bag (revisiting:
+    out block index depends only on the bag id, so Pallas keeps it resident
+    across the L inner steps — the Accumulation Configuration Register).
+
+Blocking: table block = (1, D) — one embedding row.  D is padded to the
+128-lane boundary by the caller for MXU/VPU alignment (16/32/64-dim recsys
+rows pack 8/4/2 rows per 128-lane tile on real hardware; we keep the simple
+1-row block and note the packing opportunity in EXPERIMENTS.md §Perf).
+VMEM working set per step = (1, D) row + (1, D) accumulator + next row's
+DMA buffer  ≈ 3*D*4 bytes — far below the ~16 MB/core VMEM budget, so the
+pipeline depth, not capacity, is the constraint.
+
+Ownership masking for the sharded engine: a shard that does not own a row
+folds the miss into weight=0 and remaps the index to 0 — the DMA still
+happens but targets a single always-resident line, mirroring how the paper's
+switch drops non-local candidates without stalling (section IV-C1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sls_kernel_w(idx_ref, w_ref, table_blk, out_ref):
+    """Weighted gather-accumulate; grid = (B, L)."""
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[b, l].astype(out_ref.dtype)
+    out_ref[...] += w * table_blk[...].astype(out_ref.dtype)
+
+
+def _sls_kernel(idx_ref, table_blk, out_ref):
+    """Unweighted gather-accumulate; grid = (B, L)."""
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_blk[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def sls_pallas(table: jax.Array, indices: jax.Array,
+               weights: Optional[jax.Array] = None,
+               out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """SLS via pl.pallas_call. indices: (B, L) int32 -> (B, D) pooled."""
+    B, L = indices.shape
+    V, D = table.shape
+    grid = (B, L)
+
+    def table_map(b, l, idx_ref):
+        return (idx_ref[b, l], 0)
+
+    def out_map(b, l, idx_ref):
+        return (b, 0)
+
+    if weights is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),     # weights
+                      pl.BlockSpec((1, D), table_map)],          # one row/step
+            out_specs=pl.BlockSpec((1, D), out_map),
+        )
+        return pl.pallas_call(
+            _sls_kernel_w, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
+            interpret=interpret,
+        )(indices, weights, table)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, D), table_map)],
+        out_specs=pl.BlockSpec((1, D), out_map),
+    )
+    return pl.pallas_call(
+        _sls_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
+        interpret=interpret,
+    )(indices, table)

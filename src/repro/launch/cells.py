@@ -1,0 +1,391 @@
+"""Dry-run cell builders: (arch x input-shape x mesh) -> a jit-able step with
+abstract inputs and shardings.
+
+Every builder returns a CellSpec: lower it with
+``jax.jit(fn, in_shardings=...).lower(*abstract)`` — no real allocation ever
+happens (ShapeDtypeStruct stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cfgs
+from repro.configs import get_config
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import params as prm
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm
+from repro.optim.optimizers import adafactor, adam, rowwise_adagrad
+
+
+@dataclasses.dataclass
+class CellSpec:
+    name: str
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...] = ()
+    # model FLOPs per step for §Roofline's MODEL_FLOPS/HLO_FLOPs ratio
+    model_flops: float = 0.0
+
+
+def _dp_axes(mesh: Mesh):
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data")
+    if "data" in names:
+        return ("data",)
+    return ()
+
+
+def _ns(mesh: Mesh, tree_pspec):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_pspec,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state pspec derivation
+# ---------------------------------------------------------------------------
+
+
+def _adafactor_pspecs(params_ps, params_abs):
+    def one(ps, ab):
+        if (ab.ndim >= 2 and ab.shape[-1] >= 128 and ab.shape[-2] >= 128):
+            t = tuple(ps)
+            t = t + (None,) * (ab.ndim - len(t))
+            return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))}
+        return {"v": ps}
+    return {"step": P(),
+            "v": jax.tree.map(one, params_ps, params_abs,
+                              is_leaf=lambda x: isinstance(x, P))}
+
+
+def _adam_pspecs(params_ps):
+    return {"step": P(),
+            "mv": jax.tree.map(lambda ps: {"m": ps, "v": ps}, params_ps,
+                               is_leaf=lambda x: isinstance(x, P))}
+
+
+def _rowwise_pspecs(params_ps):
+    # accumulator is (rows, 1) for >=2D params: keep the row axis's sharding
+    return jax.tree.map(lambda ps: ps, params_ps,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs estimates (6·N·D dense / 6·N_active·D MoE; serving: 2·N·D)
+# ---------------------------------------------------------------------------
+
+
+def lm_param_counts(cfg: cfgs.LMConfig) -> Tuple[float, float]:
+    """(total_params, active_params) excluding embeddings (6ND convention)."""
+    d = cfg.d_model
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qd
+                + d * m.kv_lora_rank
+                + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + d * m.qk_rope_head_dim + cfg.n_heads * m.v_head_dim * d)
+    else:
+        h = cfg.head_dim
+        attn = d * cfg.n_heads * h * 2 + d * cfg.n_kv_heads * h * 2
+    glu = cfg.activation != "relu2"
+    ffn_dense = d * cfg.d_ff * (3 if glu else 2)
+    n_dense = cfg.n_layers if cfg.moe is None else cfg.moe.first_dense_layers
+    n_moe = 0 if cfg.moe is None else cfg.n_layers - n_dense
+    total = active = cfg.n_layers * attn + n_dense * ffn_dense
+    if cfg.moe is not None:
+        e = cfg.moe
+        expert = d * e.d_ff_expert * 3
+        total += n_moe * (e.n_experts + e.n_shared_experts) * expert
+        active += n_moe * (e.top_k + e.n_shared_experts) * expert
+    return float(total), float(active)
+
+
+def lm_model_flops(cfg: cfgs.LMConfig, tokens: int, kind: str,
+                   seq: int = 0) -> float:
+    """6ND (train) / 2ND (serve) plus the attention score/value flops
+    (2 x 2 x s_kv_avg x H x h per token per layer, causal halves prefill)."""
+    total, active = lm_param_counts(cfg)
+    per_tok = 6.0 * active if kind == "train" else 2.0 * active
+    if seq:
+        if cfg.attn_type == "mla":
+            d_attn = cfg.n_heads * (cfg.mla.qk_nope_head_dim
+                                    + cfg.mla.qk_rope_head_dim)
+        else:
+            d_attn = cfg.n_heads * cfg.head_dim
+        kv_avg = seq / 2.0 if kind in ("train", "prefill") else seq
+        attn = 4.0 * kv_avg * d_attn * cfg.n_layers
+        per_tok += attn * (3.0 if kind == "train" else 1.0)
+    return per_tok * tokens
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def build_lm_cell(cfg: cfgs.LMConfig, shape: cfgs.LMShape, mesh: Mesh
+                  ) -> CellSpec:
+    dp = _dp_axes(mesh)
+    dpp = dp if dp else None
+    # decode uses weight-stationary width sharding (see layer_specs)
+    specs = tfm.model_specs(cfg, mesh, serving=(shape.kind == "decode"))
+    p_abs = prm.abstract(specs)
+    p_ps = prm.pspecs(specs)
+    p_sh = _ns(mesh, p_ps)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = adafactor(lr=1e-2)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_ps = _adafactor_pspecs(p_ps, p_abs)
+        o_sh = _ns(mesh, o_ps)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        b_sh = _ns(mesh, {"tokens": P(dpp, None), "labels": P(dpp, None)})
+        # train_accum is the single-pod setting; the multi-pod mesh has 2x
+        # the memory, so it needs half the accumulation (and pays half the
+        # repeated weight-gather traffic)
+        accum = cfg.train_accum
+        if "pod" in mesh.axis_names and accum > 1:
+            accum = max(1, accum // 2)
+        step = tfm.make_train_step(cfg, mesh, opt, remat=cfg.remat, sp=True,
+                                   accum=accum)
+        return CellSpec(
+            name=f"{cfg.name}:{shape.name}", fn=step,
+            abstract_args=(p_abs, o_abs, batch_abs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+            model_flops=lm_model_flops(cfg, B * S, "train", seq=S))
+
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            return tfm.prefill_step(params, tokens, cfg, mesh)
+        t_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return CellSpec(
+            name=f"{cfg.name}:{shape.name}", fn=step,
+            abstract_args=(p_abs, t_abs),
+            in_shardings=(p_sh, NamedSharding(mesh, P(dpp, None))),
+            model_flops=lm_model_flops(cfg, B * S, "prefill", seq=S))
+
+    # decode: one new token against a seq-sharded KV cache of length S
+    cache_abs = tfm.cache_specs(cfg, mesh, batch=B, seq=S)
+    cache_sh = _ns(mesh, tfm.cache_pspecs(cfg, mesh))
+
+    def step(params, cache, tokens, pos):
+        return tfm.decode_step(params, cache, tokens, pos, cfg, mesh)
+
+    return CellSpec(
+        name=f"{cfg.name}:{shape.name}", fn=step,
+        abstract_args=(p_abs, cache_abs,
+                       jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                       jax.ShapeDtypeStruct((), jnp.int32)),
+        in_shardings=(p_sh, cache_sh,
+                      NamedSharding(mesh, P(dpp, None)),
+                      NamedSharding(mesh, P())),
+        donate_argnums=(1,),
+        model_flops=lm_model_flops(cfg, B, "serve", seq=S))
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+
+def build_rec_cell(cfg: cfgs.RecConfig, shape: cfgs.RecShape, mesh: Mesh
+                   ) -> CellSpec:
+    dp = _dp_axes(mesh)
+    engine, offsets = rec_mod.build_engine(cfg, mesh)
+    specs = rec_mod.model_specs(cfg, mesh)
+    p_abs = prm.abstract(specs)
+    p_sh = _ns(mesh, prm.pspecs(specs))
+    e_abs = engine.state_shapes()
+    e_sh = engine.state_shardings()
+
+    kind = shape.kind
+    batch_abs = rec_mod.input_specs(
+        cfg, kind, shape.batch, n_candidates=shape.n_candidates,
+        with_labels=True)
+    b_sh = _ns(mesh, rec_mod.input_pspecs(cfg, kind, mesh, with_labels=True))
+    # align key sets (input_pspecs mirrors input_specs keys)
+    b_sh = {k: b_sh[k] for k in batch_abs}
+
+    # rough model flops: embedding bytes ~ lookups; interaction+MLP dominate
+    flops = _rec_model_flops(cfg, shape)
+
+    if kind == "train":
+        opt = adam(1e-3)
+        eopt = rowwise_adagrad(1e-2)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_ps = _adam_pspecs(prm.pspecs(specs))
+        o_sh = _ns(mesh, o_ps)
+        emb_params_abs = {"cold": e_abs.cold, "hot": e_abs.hot}
+        eo_abs = jax.eval_shape(eopt.init, emb_params_abs)
+        eo_sh = _ns(mesh, {"cold": engine.state_pspecs().cold,
+                           "hot": engine.state_pspecs().hot})
+        step = rec_mod.make_train_step(cfg, engine, offsets, mesh, opt, eopt)
+        return CellSpec(
+            name=f"{cfg.name}:{shape.name}", fn=step,
+            abstract_args=(p_abs, e_abs, o_abs, eo_abs, batch_abs),
+            in_shardings=(p_sh, e_sh, o_sh, eo_sh, b_sh),
+            donate_argnums=(1, 2, 3), model_flops=flops)
+
+    if kind == "retrieval":
+        step = rec_mod.make_retrieval_step(cfg, engine, offsets, mesh)
+    else:
+        step = rec_mod.make_serve_step(cfg, engine, offsets, mesh)
+    return CellSpec(
+        name=f"{cfg.name}:{shape.name}", fn=step,
+        abstract_args=(p_abs, e_abs, batch_abs),
+        in_shardings=(p_sh, e_sh, b_sh), model_flops=flops)
+
+
+def _rec_model_flops(cfg: cfgs.RecConfig, shape: cfgs.RecShape) -> float:
+    d = cfg.embed_dim
+    it = cfg.interaction
+    if it == "self-attn-seq":
+        S = cfg.seq_len
+        per = cfg.n_blocks * (4 * S * d * d * 2 + 2 * S * S * d * 2)
+    elif it == "transformer-seq":
+        S = cfg.seq_len + 1
+        per = cfg.n_blocks * (4 * S * d * d * 2 + 2 * S * S * d * 2
+                              + 8 * S * d * d * 2)
+        dims = (S * d + cfg.n_dense,) + cfg.mlp_dims + (1,)
+        per += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    elif it == "self-attn":
+        F = cfg.n_sparse
+        da = cfg.d_attn * cfg.n_heads
+        per = cfg.n_attn_layers * (3 * F * d * da * 2 + 2 * F * F * da * 2
+                                   + F * d * d * 2)
+    else:
+        x0 = cfg.n_dense + cfg.n_sparse * d
+        per = cfg.n_cross_layers * 2 * x0 * x0
+        dims = (x0,) + cfg.mlp_dims
+        per += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    if shape.kind == "retrieval" and it == "self-attn-seq":
+        # two-tower retrieval: one query encode + a dot per candidate
+        return float(per) + 2.0 * d * max(shape.n_candidates, 1)
+    n = shape.n_candidates if shape.kind == "retrieval" else shape.batch
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd
+    return float(per) * max(n, 1) * mult
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def build_gnn_cell(cfg: cfgs.GNNConfig, shape: cfgs.GNNShape, mesh: Mesh
+                   ) -> CellSpec:
+    dp = _dp_axes(mesh)
+    tp_size = mesh.shape["model"]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    # pad node/edge counts to mesh divisibility (pad edges are inert:
+    # src=-1 fails the ownership test, dst=0 accumulates zero)
+    pad_nodes = -(-shape.n_nodes // tp_size) * tp_size
+    d_feat = shape.d_feat or 16
+    specs = gnn_mod.model_specs(cfg, d_feat)
+    p_abs = prm.abstract(specs)
+    p_sh = _ns(mesh, prm.pspecs(specs))
+
+    if shape.kind == "full":
+        pad_edges = -(-shape.n_edges // dp_size) * dp_size
+        shape = dataclasses.replace(shape, n_edges=pad_edges)
+    batch_abs = gnn_mod.input_specs(cfg, shape, pad_nodes=pad_nodes)
+    b_sh = _ns(mesh, gnn_mod.input_pspecs(cfg, shape, mesh))
+
+    regime = {"full": "full", "minibatch": "minibatch",
+              "batched_small": "molecule"}[shape.kind]
+    opt = adam(1e-2)
+    o_abs = jax.eval_shape(opt.init, p_abs)
+    o_sh = _ns(mesh, _adam_pspecs(prm.pspecs(specs)))
+    step = gnn_mod.make_train_step(cfg, mesh, opt, regime)
+
+    # flops: 2 (gather+matmul) x edges x d x d' per layer + node transforms
+    dims = gnn_mod.layer_dims(cfg, d_feat)
+    if shape.kind == "full":
+        f = sum(2 * shape.n_edges * dims[i] +
+                2 * shape.n_nodes * dims[i] * dims[i + 1] * 2
+                for i in range(cfg.n_layers))
+    elif shape.kind == "minibatch":
+        B = shape.batch_nodes
+        f1, f2 = shape.fanout
+        n_agg = B * (1 + f1 + f1 * f2)
+        f = 2 * n_agg * dims[0] * dims[1] * 2 + 2 * B * dims[1] * dims[2] * 2
+    else:
+        f = shape.graph_batch * sum(
+            2 * shape.n_edges * dims[i]
+            + 2 * shape.n_nodes * dims[i] * dims[i + 1] * 2
+            for i in range(cfg.n_layers))
+    return CellSpec(
+        name=f"{cfg.name}:{shape.name}", fn=step,
+        abstract_args=(p_abs, o_abs, batch_abs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        donate_argnums=(0, 1), model_flops=float(f) * 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> CellSpec:
+    cfg = get_config(arch)
+    shape = cfg.shapes()[shape_name]
+    if isinstance(cfg, cfgs.LMConfig):
+        return build_lm_cell(cfg, shape, mesh)
+    if isinstance(cfg, cfgs.RecConfig):
+        return build_rec_cell(cfg, shape, mesh)
+    if isinstance(cfg, cfgs.GNNConfig):
+        return build_gnn_cell(cfg, shape, mesh)
+    if isinstance(cfg, cfgs.DLRMConfig):
+        return build_dlrm_cell(cfg, shape, mesh)
+    raise TypeError(type(cfg))
+
+
+def build_dlrm_cell(cfg: cfgs.DLRMConfig, shape: cfgs.RecShape, mesh: Mesh
+                    ) -> CellSpec:
+    """Paper's own RMC models (used by benchmarks, not the assigned pool)."""
+    dp = _dp_axes(mesh)
+    dpp = dp if dp else None
+    engine, offsets = dlrm_mod.build_engine(cfg, mesh)
+    specs = dlrm_mod.model_specs(cfg, mesh)
+    p_abs = prm.abstract(specs)
+    p_sh = _ns(mesh, prm.pspecs(specs))
+    e_abs = engine.state_shapes()
+    e_sh = engine.state_shardings()
+    with_labels = shape.kind == "train"
+    batch_abs = dlrm_mod.input_specs(cfg, shape.batch, mesh, with_labels)
+    b_sh = _ns(mesh, dlrm_mod.input_pspecs(cfg, mesh, with_labels))
+
+    if shape.kind == "train":
+        opt, eopt = adam(1e-3), rowwise_adagrad(1e-2)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_sh = _ns(mesh, _adam_pspecs(prm.pspecs(specs)))
+        emb_params_abs = {"cold": e_abs.cold, "hot": e_abs.hot}
+        eo_abs = jax.eval_shape(eopt.init, emb_params_abs)
+        eo_sh = _ns(mesh, {"cold": engine.state_pspecs().cold,
+                           "hot": engine.state_pspecs().hot})
+        step = dlrm_mod.make_train_step(cfg, engine, mesh, opt, eopt)
+        return CellSpec(
+            name=f"{cfg.name}:{shape.name}", fn=step,
+            abstract_args=(p_abs, e_abs, o_abs, eo_abs, batch_abs),
+            in_shardings=(p_sh, e_sh, o_sh, eo_sh, b_sh),
+            donate_argnums=(1, 2, 3))
+    step = dlrm_mod.make_serve_step(cfg, engine, mesh)
+    return CellSpec(
+        name=f"{cfg.name}:{shape.name}", fn=step,
+        abstract_args=(p_abs, e_abs, batch_abs),
+        in_shardings=(p_sh, e_sh, b_sh))

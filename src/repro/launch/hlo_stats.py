@@ -1,0 +1,359 @@
+"""Analytic HLO statistics: dot FLOPs + collective wire bytes with
+while-loop trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts a rolled ``while`` body ONCE — a
+61-layer scanned transformer reports ~1/61 of its real FLOPs.  This parser
+walks the optimized HLO text, attributes dots/collectives to their enclosing
+computation, resolves the call graph (fusion/call/while/conditional), and
+multiplies while bodies by their trip count (the loop-bound constant found in
+the condition computation).  Operand shapes are resolved through a
+per-computation symbol table (the scheduled HLO text names operands without
+inline shapes).
+
+Used by the dry-run for the §Roofline compute and collective terms; `bytes`
+here is dot-operand traffic — a structural proxy for HBM traffic that tracks
+the true value for matmul-dominated models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{$")
+_INSTR = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|c64|s64|u64|s32|"
+                    r"u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+_OP = re.compile(r"^\(?[\w\[\],{}\s/*=]*?\)?\s*([a-z][a-z0-9\-]*)\(")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_TRIP = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE.findall(text)]
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    return sum(_numel(d) * _DTYPE_BYTES[dt] for dt, d in shapes)
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_wire: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    callees: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_const: int = 0
+
+
+class _Parser:
+    def __init__(self) -> None:
+        self.comps: Dict[str, CompStats] = {}
+        self.entry: Optional[str] = None
+        self._cur: Optional[str] = None
+        self._symbols: Dict[str, List[Tuple[str, List[int]]]] = {}
+
+    def feed(self, line: str) -> None:
+        s = line.strip()
+        if self._cur is None:
+            m = _COMP_HDR.match(s)
+            if m:
+                self._cur = m.group(2)
+                self.comps[self._cur] = CompStats()
+                self._symbols = {}
+                if m.group(1):
+                    self.entry = self._cur
+            return
+        if s == "}":
+            self._cur = None
+            return
+        self._instr(s)
+
+    def _instr(self, s: str) -> None:
+        st = self.comps[self._cur]
+        m = _INSTR.match(s)
+        if not m:
+            return
+        name, rhs = m.group(1), m.group(2)
+        # result shapes: everything before the op token
+        opm = _OP.match(rhs)
+        op = opm.group(1) if opm else ""
+        head = rhs[: opm.start(1)] if opm else rhs
+        out_shapes = _shapes_in(head)
+        self._symbols[name] = out_shapes
+
+        for c in _CONST_INT.finditer(rhs):
+            st.max_const = max(st.max_const, int(c.group(1)))
+
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op == "dot":
+            args = rhs[opm.end(1):]
+            paren = args[1: args.find(")")]
+            names = _OPERANDS.findall(paren)
+            if len(names) >= 2 and out_shapes:
+                lhs = self._symbols.get(names[0], [])
+                rhsh = self._symbols.get(names[1], [])
+                cd = _LHS_CDIMS.search(rhs)
+                cdims = ([int(x) for x in cd.group(1).split(",") if x]
+                         if cd else [])
+                if lhs:
+                    _, lhs_dims = lhs[0]
+                    k = 1
+                    for c in cdims:
+                        if c < len(lhs_dims):
+                            k *= lhs_dims[c]
+                    st.dot_flops += 2.0 * _numel(out_shapes[0][1]) * k
+                    st.dot_bytes += (_bytes_of(out_shapes) + _bytes_of(lhs)
+                                     + _bytes_of(rhsh))
+        elif base_op in _COLL_KINDS:
+            out_bytes = _bytes_of(out_shapes)
+            g = 1
+            gm = _GROUPS.search(rhs)
+            if gm:
+                first = gm.group(1).split("}")[0]
+                g = max(1, first.count(",") + 1)
+            else:
+                g2 = _GROUPS_V2.search(rhs)
+                if g2:
+                    g = max(1, int(g2.group(2)))
+            if base_op == "all-gather":
+                wire = out_bytes * (g - 1) / max(g, 1)
+            elif base_op == "reduce-scatter":
+                wire = out_bytes * (g - 1)
+            elif base_op == "all-reduce":
+                wire = 2.0 * out_bytes * (g - 1) / max(g, 1)
+            elif base_op == "all-to-all":
+                wire = out_bytes * (g - 1) / max(g, 1)
+            else:
+                wire = float(out_bytes)
+            st.coll_wire[base_op] = st.coll_wire.get(base_op, 0.0) + wire
+            st.coll_count[base_op] = st.coll_count.get(base_op, 0) + 1
+
+        if base_op == "while":
+            b = _CALLS.search(rhs)
+            c = _COND.search(rhs)
+            tm = _TRIP.search(rhs)
+            trip = int(tm.group(1)) if tm else 0
+            if b:
+                st.callees.append((b.group(1), f"while_body:{trip}"))
+            if c:
+                st.callees.append((c.group(1), "while_cond"))
+        elif base_op in ("fusion", "call", "map", "reduce", "reduce-window",
+                         "sort", "scatter", "select-and-scatter",
+                         "all-reduce", "reduce-scatter", "custom-call"):
+            for cm in _CALLS.finditer(rhs):
+                st.callees.append((cm.group(1), "call"))
+        elif base_op == "conditional":
+            bm = _BRANCHES.search(rhs)
+            if bm:
+                for n in bm.group(1).split(","):
+                    st.callees.append((n.strip().lstrip("%"), "branch"))
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float
+    dot_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(v["wire_bytes"] for v in self.collectives.values())
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, CompStats], Optional[str]]:
+    p = _Parser()
+    for line in text.splitlines():
+        p.feed(line)
+    return p.comps, p.entry
+
+
+def summarize(text: str) -> HloSummary:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    def deep_max_const(name: str, seen=None) -> int:
+        seen = seen or set()
+        if name in seen or name not in comps:
+            return 0
+        seen.add(name)
+        st = comps[name]
+        best = st.max_const
+        for callee, kind in st.callees:
+            if kind == "call":
+                best = max(best, deep_max_const(callee, seen))
+        return best
+
+    totals = {"flops": 0.0, "bytes": 0.0}
+    coll: Dict[str, Dict[str, float]] = {}
+
+    def visit(name: str, mult: float, stack: frozenset) -> None:
+        st = comps.get(name)
+        if st is None or name in stack:
+            return
+        stack = stack | {name}
+        totals["flops"] += st.dot_flops * mult
+        totals["bytes"] += st.dot_bytes * mult
+        for kind, wire in st.coll_wire.items():
+            c = coll.setdefault(kind, {"count": 0.0, "wire_bytes": 0.0})
+            c["count"] += st.coll_count[kind] * mult
+            c["wire_bytes"] += wire * mult
+        cond = next((c for c, k in st.callees if k == "while_cond"), None)
+        for callee, kind in st.callees:
+            if kind.startswith("while_body"):
+                trip = int(kind.split(":")[1])
+                if trip <= 0:  # no backend annotation: condition constant
+                    trip = max(deep_max_const(cond), 1) if cond else 1
+                visit(callee, mult * trip, stack)
+            elif kind == "while_cond":
+                continue
+            else:
+                visit(callee, mult, stack)
+
+    visit(entry, 1.0, frozenset())
+    return HloSummary(flops=totals["flops"], dot_bytes=totals["bytes"],
+                      collectives=coll)
+
+
+def top_collectives(text: str, k: int = 12) -> List[Tuple[float, str]]:
+    """The k largest collectives by loop-adjusted wire bytes, with their
+    shapes and op metadata — the §Perf 'where is the collective term' lens."""
+    comps, entry = parse_hlo(text)
+    mults: Dict[str, float] = {}
+
+    def walk(name: str, mult: float, stack: frozenset) -> None:
+        st = comps.get(name)
+        if st is None or name in stack:
+            return
+        mults[name] = mults.get(name, 0.0) + mult
+        stack = stack | {name}
+        cond = next((c for c, kk in st.callees if kk == "while_cond"), None)
+        for callee, kind in st.callees:
+            if kind.startswith("while_body"):
+                trip = int(kind.split(":")[1]) or 1
+                walk(callee, mult * trip, stack)
+            elif kind != "while_cond":
+                walk(callee, mult, stack)
+
+    if entry:
+        walk(entry, 1.0, frozenset())
+
+    out: List[Tuple[float, str]] = []
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m:
+                cur = m.group(2)
+            continue
+        if s == "}":
+            cur = None
+            continue
+        eq = s.find("=")
+        if eq < 0:
+            continue
+        rhs = s[eq + 1:]
+        cm = re.search(r"\b(all-reduce|all-gather|reduce-scatter|"
+                       r"all-to-all|collective-permute)(?:-start)?\(", rhs)
+        if cm:
+            shapes = _shapes_in(rhs[: cm.start(1)])
+            b = _bytes_of(shapes) * mults.get(cur, 1.0)
+            meta = re.search(r'op_name="([^"]+)"', s)
+            out.append((b, f"{cm.group(1)} {shapes[:2]} "
+                        f"x{mults.get(cur, 1.0):.0f} "
+                        f"{meta.group(1)[:110] if meta else ''}"))
+    out.sort(key=lambda t: -t[0])
+    return out[:k]
+
+
+def top_dots(text: str, k: int = 12) -> List[Tuple[float, str]]:
+    """The k largest dots by loop-adjusted FLOPs."""
+    comps, entry = parse_hlo(text)
+    mults: Dict[str, float] = {}
+
+    def walk(name: str, mult: float, stack: frozenset) -> None:
+        st = comps.get(name)
+        if st is None or name in stack:
+            return
+        mults[name] = mults.get(name, 0.0) + mult
+        stack = stack | {name}
+        for callee, kind in st.callees:
+            if kind.startswith("while_body"):
+                walk(callee, mult * (int(kind.split(":")[1]) or 1), stack)
+            elif kind != "while_cond":
+                walk(callee, mult, stack)
+
+    if entry:
+        walk(entry, 1.0, frozenset())
+
+    out: List[Tuple[float, str]] = []
+    p = _Parser()
+    cur = None
+    symbols: Dict[str, List] = {}
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m:
+                cur = m.group(2)
+                symbols = {}
+            continue
+        if s == "}":
+            cur = None
+            continue
+        im = _INSTR.match(s)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        opm = _OP.match(rhs)
+        if not opm:
+            continue
+        head = rhs[: opm.start(1)]
+        symbols[name] = _shapes_in(head)
+        if opm.group(1) != "dot":
+            continue
+        args = rhs[opm.end(1):]
+        names = _OPERANDS.findall(args[1: args.find(")")])
+        outs = symbols[name]
+        if len(names) < 2 or not outs:
+            continue
+        lhs = symbols.get(names[0], [])
+        cd = _LHS_CDIMS.search(rhs)
+        cdims = [int(x) for x in cd.group(1).split(",") if x] if cd else []
+        kk = 1
+        if lhs:
+            for c in cdims:
+                if c < len(lhs[0][1]):
+                    kk *= lhs[0][1][c]
+        fl = 2.0 * _numel(outs[0][1]) * kk * mults.get(cur, 1.0)
+        meta = re.search(r'op_name="([^"]+)"', s)
+        out.append((fl, f"dot out={outs[:1]} lhs={lhs[:1]} "
+                    f"x{mults.get(cur, 1.0):.0f} "
+                    f"{meta.group(1)[:100] if meta else ''}"))
+    out.sort(key=lambda t: -t[0])
+    return out[:k]

@@ -1,0 +1,92 @@
+"""Serving driver: batched recsys inference with the PIFS engine.
+
+``python -m repro.launch.serve --arch dcn-v2 --requests 2000 --batch 64``
+
+Simulates an online-serving loop: requests arrive, are micro-batched, scored
+with the jit'd serve step, and the engine's access profiler + planner run in
+the background (periodic re-plan = the paper's page management during a
+live-on inference system, §IV-B4 — migration here is a pure gather, so no
+"page block" ever stalls a query).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgs
+from repro.configs import get_config, reduced
+from repro.data import synth
+from repro.launch.mesh import make_test_mesh
+from repro.models import dlrm as dlrm_mod
+from repro.models import params as prm
+from repro.models import recsys as rec_mod
+
+
+def serve_loop(cfg, mesh, n_requests: int, batch: int, mode: str = "pifs",
+               replan_every: int = 8) -> Dict[str, float]:
+    if isinstance(cfg, cfgs.DLRMConfig):
+        engine, offs = dlrm_mod.build_engine(cfg, mesh)
+        params = prm.initialize(dlrm_mod.model_specs(cfg, mesh),
+                                jax.random.PRNGKey(0))
+        step = jax.jit(dlrm_mod.make_serve_step(cfg, engine, mesh, mode=mode))
+        gen = synth.dlrm_batches(cfg, batch, -(-n_requests // batch))
+        idx_key = "indices"
+    else:
+        engine, offs = rec_mod.build_engine(cfg, mesh)
+        params = prm.initialize(rec_mod.model_specs(cfg, mesh),
+                                jax.random.PRNGKey(0))
+        step = jax.jit(rec_mod.make_serve_step(cfg, engine, offs, mesh,
+                                               mode=mode))
+        gen = synth.rec_batches(cfg, batch, -(-n_requests // batch),
+                                kind="serve")
+        idx_key = None
+
+    state = engine.init_state(jax.random.PRNGKey(1))
+    lat_ms = []
+    served = 0
+    with mesh:
+        for i, b in enumerate(gen):
+            jb = {k: jnp.asarray(v) for k, v in b.items()
+                  if k != "labels"}
+            t0 = time.perf_counter()
+            scores = step(params, state, jb)
+            scores.block_until_ready()
+            lat_ms.append((time.perf_counter() - t0) * 1e3)
+            served += batch
+            if idx_key and idx_key in jb:
+                state = engine.observe(state, jb[idx_key])
+                if (i + 1) % replan_every == 0:
+                    state, _ = engine.plan_and_migrate(state)
+    lat = np.asarray(lat_ms[1:])  # drop compile
+    return {"served": served,
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "mean_ms": float(lat.mean())}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dcn-v2")
+    ap.add_argument("--requests", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--mode", default="pifs",
+                    choices=["pifs", "pond", "beacon"])
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    n_dev = len(jax.devices())
+    mesh = make_test_mesh(n_dev, min(4, n_dev))
+    out = serve_loop(cfg, mesh, args.requests, args.batch, mode=args.mode)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,419 @@
+"""Attention: GQA and MLA (DeepSeek-V3), with
+
+  * chunked online-softmax ("flash") attention in pure JAX for train/prefill —
+    peak memory is O(q_chunk * kv_chunk) scores instead of O(s^2);
+  * decode over a sequence-sharded KV cache: every `model`-axis shard scores
+    the query against its local KV slice and only the (num, denom, max)
+    softmax partials are combined — the PIFS reduce-near-data pattern applied
+    to attention (the KV cache is the "memory pool", the softmax combine is
+    the pooled result crossing the fabric).
+
+All assigned archs have kv_heads (8) < tp (16) or a shared MLA latent, so
+head-sharding the cache is impossible and sequence sharding is the natural
+layout.  MLA decode uses the absorbed-matmul form (score and reduce directly
+in the 512-dim latent space; W_uk / W_uv are folded into the query / output
+projections), so the cache stays (kv_lora + rope) per token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models.params import Spec
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., s, heads?, dim) with pos (..., s) broadcastable int32."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                       # (dim/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs   # (..., s, dim/2)
+    # broadcast over a possible heads axis between s and dim
+    while angles.ndim < x.ndim:
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024, scale: Optional[float] = None,
+                    q_offset=0) -> jax.Array:
+    """Online-softmax attention without materializing (s, s) scores.
+
+    Flat-head layout so the head axis shards cleanly over `model`:
+    q: (b, sq, H, h); k: (b, skv, H, h); v: (b, skv, H, dv) — GQA callers
+    repeat kv to H heads first (zero-FLOP gather; keeps every einsum
+    head-sharded instead of replicating attention over tp).
+    Returns (b, sq, H, dv).
+    """
+    b, sq, H, h = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else h ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+
+    qr = (q.reshape(b, nq, q_chunk, H, h)
+          .transpose(1, 0, 3, 2, 4))                    # (nq, b, H, qc, h)
+    kr = k.reshape(b, nk, kv_chunk, H, h).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kv_chunk, H, dv).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_q):
+        qi, qc = qi_q                                   # qc: (b, H, qc, h)
+        m0 = jnp.full((b, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, H, q_chunk, dv), jnp.float32)
+
+        # rematerialized: backward recomputes the (qc, kc) score tile instead
+        # of saving it — without this, AD through the chunk scan stacks
+        # O(nq*nk) fp32 score tiles (measured 25+ GB/device at seq 4096)
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kc, vc = ki_kv                          # (b, H, kc, h/dv)
+            s = jnp.einsum("bhqe,bhce->bhqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isinf(m_new)[..., None], 0.0, p)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqc,bhcv->bhqv", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)                # (b, H, qc, dv)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # (nq, b, H, qc, dv) -> (b, sq, H, dv)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel attention (explicit shard_map)
+# ---------------------------------------------------------------------------
+
+
+def seq_parallel_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           mesh: Mesh, dp, tp: str, *,
+                           scale: Optional[float] = None,
+                           causal: bool = True) -> jax.Array:
+    """Attention with q/k/v sequence-sharded over tp; kv all-gathered in
+    bf16 once per layer inside shard_map.
+
+    Every assigned GQA arch has kv_heads < tp, so head sharding is
+    impossible; leaving the layout to XLA-auto instead produced an
+    all-reduce of per-chunk dk/dv partials on every flash chunk iteration
+    (360 GB/device/step measured on llama train_4k — EXPERIMENTS.md §Perf).
+    Under shard_map the backward of the tiled all_gather is a single
+    psum_scatter per layer.
+
+    q: (b, s, H, h); k/v: (b, s, K, h) — all P(dp, tp, None, None).
+    """
+    b_spec = P(dp if dp else None, tp, None, None)
+    H = q.shape[2]
+    K = k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+
+    def block(q_loc, k_loc, v_loc):
+        s_loc = q_loc.shape[1]
+        my = jax.lax.axis_index(tp)
+        k_full = jax.lax.all_gather(k_loc, tp, axis=1, tiled=True)
+        v_full = jax.lax.all_gather(v_loc, tp, axis=1, tiled=True)
+        if G > 1:
+            k_full = jnp.repeat(k_full, G, axis=2)
+            v_full = jnp.repeat(v_full, G, axis=2)
+        return flash_attention(
+            q_loc, k_full, v_full, causal=causal, scale=scale,
+            q_chunk=min(512, s_loc), q_offset=my * s_loc)
+
+    return jax.shard_map(block, mesh=mesh,
+                         in_specs=(b_spec, b_spec, b_spec),
+                         out_specs=b_spec, check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: LMConfig, fsdp, tp, dtype) -> dict:
+    d, H, K, h = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": Spec((d, H * h), dtype, P(fsdp, tp)),
+        "wk": Spec((d, K * h), dtype, P(fsdp, None)),
+        "wv": Spec((d, K * h), dtype, P(fsdp, None)),
+        "wo": Spec((H * h, d), dtype, P(tp, fsdp)),
+    }
+
+
+def gqa_prefill(p: dict, x: jax.Array, cfg: LMConfig, constrain=None,
+                seq_ctx=None
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x: (b, s, d) -> (out, (k_cache, v_cache)).
+
+    constrain: optional fn(arr, kind) applying sharding constraints ("q" =
+    query/attn-output layout, "kv" = key/value layout).
+    seq_ctx: optional (mesh, dp, tp) — when given, attention runs
+    sequence-parallel via an explicit shard_map (the layout every assigned
+    GQA arch needs, since kv_heads < tp).
+    """
+    b, s, d = x.shape
+    H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    c = constrain or (lambda a, kind: a)
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q = (x @ p["wq"]).reshape(b, s, H, h)
+    k = (x @ p["wk"]).reshape(b, s, K, h)
+    v = (x @ p["wv"]).reshape(b, s, K, h)
+    q = c(apply_rope(q, pos, cfg.rope_theta), "q")
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if seq_ctx is not None:
+        mesh, dp, tp = seq_ctx
+        k = c(k, "q")
+        v = c(v, "q")
+        out = seq_parallel_attention(q, k, v, mesh, dp, tp, scale=h ** -0.5)
+    else:
+        # repeat kv to H heads (zero-FLOP broadcast-gather), head-sharded
+        k_r = c(jnp.repeat(k, G, axis=2), "kv")
+        v_r = c(jnp.repeat(v, G, axis=2), "kv")
+        out = c(flash_attention(q, k_r, v_r), "q")
+    out = out.reshape(b, s, H * h) @ p["wo"]
+    return out, (k, v)
+
+
+def gqa_decode_core(q: jax.Array, k_loc: jax.Array, v_loc: jax.Array,
+                    pos: jax.Array, tp: str, scale: float) -> jax.Array:
+    """Per-shard decode attention over the local KV slice (inside shard_map).
+
+    q: (b, K, G, h) full heads; k_loc/v_loc: (b, s_loc, K, h); pos: () global
+    position of the new token.  Returns (b, K, G, dv) combined across tp.
+    """
+    s_loc = k_loc.shape[1]
+    my = jax.lax.axis_index(tp)
+    kpos = my * s_loc + jnp.arange(s_loc)
+    s = jnp.einsum("bkgh,bckh->bkgc", q.astype(jnp.float32),
+                   k_loc.astype(jnp.float32)) * scale
+    valid = (kpos <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    m_loc = s.max(axis=-1)
+    m = jax.lax.pmax(m_loc, tp)
+    m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+    pexp = jnp.exp(s - m_safe[..., None])
+    pexp = jnp.where(valid, pexp, 0.0)
+    l = jax.lax.psum(pexp.sum(axis=-1), tp)
+    num = jax.lax.psum(
+        jnp.einsum("bkgc,bckv->bkgv", pexp, v_loc.astype(jnp.float32)), tp)
+    return (num / jnp.maximum(l[..., None], 1e-30))
+
+
+def gqa_decode(p: dict, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
+               pos: jax.Array, cfg: LMConfig, mesh: Mesh, dp, tp
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x: (b, 1, d); cache k/v: (b, S, K, h) sharded P(dp, tp, None, None)."""
+    b = x.shape[0]
+    H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = (x @ p["wq"]).reshape(b, K, G, h)
+    q = apply_rope(q.reshape(b, 1, K * G, h), pos[None, None],
+                   cfg.rope_theta).reshape(b, K, G, h)
+    k_new = (x @ p["wk"]).reshape(b, K, h)
+    k_new = apply_rope(k_new[:, None], pos[None, None], cfg.rope_theta)[:, 0]
+    v_new = (x @ p["wv"]).reshape(b, K, h)
+    scale = h ** -0.5
+
+    bspec = P(dp, None, None) if dp else P(None, None, None)
+    cspec = P(dp, tp, None, None) if dp else P(None, tp, None, None)
+
+    def block(q, k_new, v_new, k_c, v_c, pos):
+        s_loc = k_c.shape[1]
+        my = jax.lax.axis_index(tp)
+        # write the new token into whichever shard owns position `pos`
+        local_pos = pos - my * s_loc
+        owner = (local_pos >= 0) & (local_pos < s_loc)
+        lp = jnp.clip(local_pos, 0, s_loc - 1)
+        k_upd = jax.lax.dynamic_update_slice(
+            k_c, k_new[:, None].astype(k_c.dtype), (0, lp, 0, 0))
+        v_upd = jax.lax.dynamic_update_slice(
+            v_c, v_new[:, None].astype(v_c.dtype), (0, lp, 0, 0))
+        k_c = jnp.where(owner, k_upd, k_c)
+        v_c = jnp.where(owner, v_upd, v_c)
+        out = gqa_decode_core(q, k_c, v_c, pos, tp, scale)
+        return out, k_c, v_c
+
+    qspec = P(dp, None, None, None) if dp else P(None, None, None, None)
+    out, k_c, v_c = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(qspec, bspec, bspec, cspec, cspec, P()),
+        out_specs=(qspec, cspec, cspec), check_vma=False,
+    )(q, k_new, v_new, cache[0], cache[1], pos)
+    out = out.reshape(b, 1, H * h) @ p["wo"]
+    return out, (k_c, v_c)
+
+
+# ---------------------------------------------------------------------------
+# MLA module (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: LMConfig, fsdp, tp, dtype) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": Spec((d, m.q_lora_rank), dtype, P(fsdp, None)),
+        "q_norm": Spec((m.q_lora_rank,), dtype, P(), init="ones"),
+        "wuq": Spec((m.q_lora_rank, H * qd), dtype, P(None, tp)),
+        "wdkv": Spec((d, m.kv_lora_rank), dtype, P(fsdp, None)),
+        "kv_norm": Spec((m.kv_lora_rank,), dtype, P(), init="ones"),
+        "wukv": Spec((m.kv_lora_rank,
+                      H * (m.qk_nope_head_dim + m.v_head_dim)), dtype,
+                     P(None, tp)),
+        "wkr": Spec((d, m.qk_rope_head_dim), dtype, P(fsdp, None)),
+        "wo": Spec((H * m.v_head_dim, d), dtype, P(tp, fsdp)),
+    }
+
+
+def _mla_qkv(p: dict, x: jax.Array, cfg: LMConfig, pos: jax.Array):
+    from repro.models.layers import rms_norm
+    m = cfg.mla
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # (b, s, r)
+    k_rope = apply_rope((x @ p["wkr"])[:, :, None, :], pos,
+                        cfg.rope_theta)[:, :, 0]               # (b, s, dr)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_prefill(p: dict, x: jax.Array, cfg: LMConfig, constrain=None,
+                seq_ctx=None
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out, (ckv_cache, k_rope_cache)) — latent cache only."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    c = constrain or (lambda a, kind: a)
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, pos)
+    kv = (ckv @ p["wukv"]).reshape(b, s, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    # fold the shared rope key into every head (flat-head layout)
+    q = c(jnp.concatenate([q_nope, q_rope], axis=-1), "q")
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, H, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if seq_ctx is not None:
+        mesh, dp, tp = seq_ctx
+        k = c(k, "q")
+        v = c(v, "q")
+        out = seq_parallel_attention(q, k, v, mesh, dp, tp, scale=scale)
+    else:
+        k = c(k, "kv")
+        v = c(v, "kv")
+        out = c(flash_attention(q, k, v, scale=scale), "q")  # (b, s, H, dv)
+    out = out.reshape(b, s, H * m.v_head_dim) @ p["wo"]
+    return out, (ckv, k_rope)
+
+
+def mla_decode(p: dict, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
+               pos: jax.Array, cfg: LMConfig, mesh: Mesh, dp, tp
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Absorbed-matmul MLA decode over the seq-sharded latent cache.
+
+    cache: ckv (b, S, r) and k_rope (b, S, dr), both P(dp, tp, None).
+    Scores/reduction happen directly in the latent space: W_uk folds into the
+    query, W_uv folds into the output — per-token work is O(H*(nope*r)) once,
+    then O(S*(r+dr)) per shard, matching DeepSeek's serving kernel.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope, ckv_new, kr_new = _mla_qkv(p, x, cfg, pos[None, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]          # (b, H, *)
+    ckv_new, kr_new = ckv_new[:, 0], kr_new[:, 0]        # (b, r), (b, dr)
+
+    wukv = p["wukv"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    wuk = wukv[:, :, : m.qk_nope_head_dim]               # (r, H, nope)
+    wuv = wukv[:, :, m.qk_nope_head_dim:]                # (r, H, dv)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))          # (b, H, r)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    bspec2 = P(dp, None) if dp else P(None, None)
+    bspec3 = P(dp, None, None) if dp else P(None, None, None)
+    cspec = P(dp, tp, None) if dp else P(None, tp, None)
+
+    def block(q_abs, q_rope, ckv_new, kr_new, ckv, krope, pos):
+        s_loc = ckv.shape[1]
+        my = jax.lax.axis_index(tp)
+        local_pos = pos - my * s_loc
+        owner = (local_pos >= 0) & (local_pos < s_loc)
+        lp = jnp.clip(local_pos, 0, s_loc - 1)
+        ckv = jnp.where(owner, jax.lax.dynamic_update_slice(
+            ckv, ckv_new[:, None].astype(ckv.dtype), (0, lp, 0)), ckv)
+        krope = jnp.where(owner, jax.lax.dynamic_update_slice(
+            krope, kr_new[:, None].astype(krope.dtype), (0, lp, 0)), krope)
+        kpos = my * s_loc + jnp.arange(s_loc)
+        s = (jnp.einsum("bhr,bcr->bhc", q_abs, ckv.astype(jnp.float32))
+             + jnp.einsum("bhd,bcd->bhc", q_rope.astype(jnp.float32),
+                          krope.astype(jnp.float32))) * scale
+        valid = (kpos <= pos)[None, None, :]
+        s = jnp.where(valid, s, -jnp.inf)
+        m_loc = s.max(axis=-1)
+        mx = jax.lax.pmax(m_loc, tp)
+        m_safe = jnp.where(jnp.isinf(mx), 0.0, mx)
+        pexp = jnp.where(valid, jnp.exp(s - m_safe[..., None]), 0.0)
+        l = jax.lax.psum(pexp.sum(axis=-1), tp)
+        num = jax.lax.psum(jnp.einsum("bhc,bcr->bhr", pexp,
+                                      ckv.astype(jnp.float32)), tp)
+        out_lat = num / jnp.maximum(l[..., None], 1e-30)  # (b, H, r)
+        return out_lat, ckv, krope
+
+    out_lat, ckv_c, kr_c = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(bspec3, bspec3, bspec2, bspec2, cspec, cspec, P()),
+        out_specs=(bspec3, cspec, cspec), check_vma=False,
+    )(q_abs, q_rope, ckv_new, kr_new, cache[0], cache[1], pos)
+
+    out = jnp.einsum("bhr,rhv->bhv", out_lat,
+                     wuv.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(b, 1, H * m.v_head_dim) @ p["wo"]
+    return out, (ckv_c, kr_c)

@@ -1,0 +1,310 @@
+"""GraphSAGE (mean aggregator) in three execution regimes.
+
+JAX has no CSR/CSC sparse — message passing is built from first principles on
+edge lists: gather by src -> ``jax.ops.segment_sum`` by dst -> degree
+normalize.  That segment-reduce IS the system (kernel_taxonomy §GNN).
+
+Distribution follows the PIFS pattern:
+  * node features row-sharded over `model` (tp) — the "memory pool";
+  * edges sharded over `data` (dp) — each dp shard owns E/dp edges;
+  * each (dp, tp) device aggregates messages only for edges whose *source
+    rows it owns* (reduce near the data), then partial aggregates are
+    psum'd over dp and psum_scatter'd over tp back into the node layout —
+    pooled (N, d) partials cross the ICI, never raw gathered edge features.
+
+Regimes:
+  * full      — full-graph layers (Cora / ogbn-products shapes);
+  * minibatch — fanout-sampled blocks (Reddit shape): a host-side neighbor
+    sampler (numpy, CSR) emits fixed-shape (B, f1), (B, f1, f2) id tensors;
+    features for sampled ids are fetched from the tp-sharded store with the
+    same masked-partial-gather the PIFS engine uses;
+  * batched_small — (G, n, d) molecule batches, graph-parallel over dp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import GNNConfig
+from repro.models.params import Spec
+
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    if "data" in names:
+        return ("data",), "model"
+    return (), names[-1]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def layer_dims(cfg: GNNConfig, d_feat: int) -> list:
+    dims = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    return dims
+
+
+def model_specs(cfg: GNNConfig, d_feat: int, dtype=jnp.float32) -> dict:
+    dims = layer_dims(cfg, d_feat)
+    layers = []
+    for i in range(cfg.n_layers):
+        a, b = dims[i], dims[i + 1]
+        layers.append({
+            "w_self": Spec((a, b), dtype),
+            "w_neigh": Spec((a, b), dtype),
+            "bias": Spec((b,), dtype, init="zeros"),
+        })
+    return {"layers": layers}
+
+
+def _sage_combine(lp: dict, h_self: jax.Array, h_neigh: jax.Array,
+                  last: bool) -> jax.Array:
+    out = h_self @ lp["w_self"] + h_neigh @ lp["w_neigh"] + lp["bias"]
+    if not last:
+        out = jax.nn.relu(out)
+        # GraphSAGE l2-normalizes hidden layers
+        out = out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full-graph regime (edge-parallel x node-sharded)
+# ---------------------------------------------------------------------------
+
+
+def full_forward(params: dict, feats: jax.Array, edges: jax.Array,
+                 cfg: GNNConfig, mesh: Mesh) -> jax.Array:
+    """feats: (N, F) P(tp, None); edges: (E, 2) [src, dst] P(dp, None).
+    Returns logits (N_loc..) sharded P(tp, None)."""
+    dp, tp = _axes(mesh)
+    N = feats.shape[0]
+    tp_size = mesh.shape[tp]
+    assert N % tp_size == 0, "pad node count to tp multiple"
+
+    def agg_block(h, e):
+        """One aggregation: per-device partial mean-message accumulation."""
+        n_loc = h.shape[0]
+        my = jax.lax.axis_index(tp)
+        src, dst = e[:, 0], e[:, 1]
+        local = src - my * n_loc
+        owned = (local >= 0) & (local < n_loc)
+        rows = jnp.take(h, jnp.clip(local, 0, n_loc - 1), axis=0)
+        rows = rows * owned.astype(rows.dtype)[:, None]
+        part = jax.ops.segment_sum(rows, dst, num_segments=N)     # (N, d)
+        deg = jax.ops.segment_sum(owned.astype(h.dtype), dst, num_segments=N)
+        # combine partials: sum over edge shards (dp) ...
+        if dp:
+            part = jax.lax.psum(part, dp)
+            deg = jax.lax.psum(deg, dp)
+        # ... and scatter-reduce over tp back into the node layout
+        part = jax.lax.psum_scatter(part, tp, scatter_dimension=0, tiled=True)
+        deg = jax.lax.psum_scatter(deg, tp, scatter_dimension=0, tiled=True)
+        return part / jnp.maximum(deg, 1.0)[:, None]
+
+    espec = P(dp, None) if dp else P(None, None)
+    h = feats
+    for i, lp in enumerate(params["layers"]):
+        neigh = jax.shard_map(
+            agg_block, mesh=mesh, in_specs=(P(tp, None), espec),
+            out_specs=P(tp, None), check_vma=False)(h, edges)
+        h = _sage_combine(lp, h, neigh, last=i == cfg.n_layers - 1)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Minibatch regime (fanout-sampled blocks)
+# ---------------------------------------------------------------------------
+
+
+def sharded_feature_gather(feats: jax.Array, ids: jax.Array, mesh: Mesh
+                           ) -> jax.Array:
+    """Gather rows of a tp-sharded (N, F) store for dp-sharded flat ids —
+    the PIFS masked partial gather: each tp shard contributes owned rows,
+    pooled (n_ids, F) partials psum over tp."""
+    dp, tp = _axes(mesh)
+    idspec = P(dp) if dp else P(None)
+
+    def block(f, i):
+        n_loc = f.shape[0]
+        my = jax.lax.axis_index(tp)
+        local = i - my * n_loc
+        owned = (local >= 0) & (local < n_loc)
+        rows = jnp.take(f, jnp.clip(local, 0, n_loc - 1), axis=0)
+        rows = rows * owned.astype(rows.dtype)[..., None]
+        return jax.lax.psum(rows, tp)
+
+    return jax.shard_map(block, mesh=mesh, in_specs=(P(tp, None), idspec),
+                         out_specs=(P(dp, None) if dp else P(None, None)),
+                         check_vma=False)(feats, ids.reshape(-1))
+
+
+def minibatch_forward(params: dict, feats: jax.Array, batch: Dict[str, Any],
+                      cfg: GNNConfig, mesh: Mesh) -> jax.Array:
+    """2-hop fanout-sampled forward (fanout f1-f2).
+
+    batch: roots (B,), hop1 (B, f1), hop2 (B, f1, f2) — node ids, sampled
+    with replacement by the host sampler (ids dp-sharded over B).
+    """
+    B = batch["roots"].shape[0]
+    f1 = batch["hop1"].shape[1]
+    f2 = batch["hop2"].shape[2]
+    d = feats.shape[1]
+
+    x_root = sharded_feature_gather(feats, batch["roots"], mesh)       # (B,d)
+    x_h1 = sharded_feature_gather(feats, batch["hop1"], mesh
+                                  ).reshape(B, f1, d)
+    x_h2 = sharded_feature_gather(feats, batch["hop2"], mesh
+                                  ).reshape(B, f1, f2, d)
+
+    # layer 1: hop1 nodes aggregate their hop2 neighbours
+    lp = params["layers"][0]
+    h1 = _sage_combine(lp, x_h1, x_h2.mean(axis=2), last=False)  # (B, f1, d')
+    r1 = _sage_combine(lp, x_root, x_h1.mean(axis=1), last=False)  # (B, d')
+    # layer 2: roots aggregate their (now-updated) hop1 neighbours
+    lp2 = params["layers"][1]
+    out = _sage_combine(lp2, r1, h1.mean(axis=1), last=True)
+    return out
+
+
+def make_sampler(indptr: np.ndarray, indices: np.ndarray,
+                 fanout: Tuple[int, int], seed: int = 0):
+    """Host-side uniform neighbor sampler over CSR (with replacement;
+    isolated nodes sample themselves — self-loop fallback)."""
+    rng = np.random.default_rng(seed)
+
+    def sample_one_hop(ids: np.ndarray, k: int) -> np.ndarray:
+        flat = ids.reshape(-1)
+        deg = indptr[flat + 1] - indptr[flat]
+        pick = rng.integers(0, np.maximum(deg, 1)[:, None],
+                            size=(flat.size, k))
+        starts = indptr[flat]
+        # clip for deg-0 nodes (value replaced by the self-loop below)
+        pos = np.minimum(starts[:, None] + pick, len(indices) - 1)
+        nbr = indices[pos]
+        nbr = np.where(deg[:, None] > 0, nbr, flat[:, None])   # self-loop
+        return nbr.reshape(ids.shape + (k,))
+
+    def sample(roots: np.ndarray):
+        hop1 = sample_one_hop(roots, fanout[0])                # (B, f1)
+        hop2 = sample_one_hop(hop1, fanout[1])                 # (B, f1, f2)
+        return {"roots": roots.astype(np.int32),
+                "hop1": hop1.astype(np.int32),
+                "hop2": hop2.astype(np.int32)}
+
+    return sample
+
+
+# ---------------------------------------------------------------------------
+# Batched-small-graphs regime (molecules)
+# ---------------------------------------------------------------------------
+
+
+def molecule_forward(params: dict, feats: jax.Array, edges: jax.Array,
+                     cfg: GNNConfig, mesh: Mesh) -> jax.Array:
+    """feats: (G, n, F); edges: (G, E, 2) — graph-parallel over dp.
+    Returns per-graph logits (G, n_classes) via mean readout."""
+    G, n, F = feats.shape
+
+    def one_graph(h, e):
+        src, dst = e[:, 0], e[:, 1]
+        for i, lp in enumerate(params["layers"]):
+            msg = jnp.take(h, src, axis=0)
+            agg = jax.ops.segment_sum(msg, dst, num_segments=n)
+            deg = jax.ops.segment_sum(jnp.ones_like(dst, h.dtype), dst,
+                                      num_segments=n)
+            neigh = agg / jnp.maximum(deg, 1.0)[:, None]
+            h = _sage_combine(lp, h, neigh, last=i == cfg.n_layers - 1)
+        return h.mean(axis=0)
+
+    return jax.vmap(one_graph)(feats, edges)
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lg = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return -gold.mean()
+
+
+def make_train_step(cfg: GNNConfig, mesh: Mesh, optimizer, regime: str,
+                    n_nodes: int = 0):
+    dp, tp = _axes(mesh)
+
+    def loss(params, batch):
+        if regime == "full":
+            logits = full_forward(params, batch["feats"], batch["edges"],
+                                  cfg, mesh)
+            lab = batch["labels"]
+            return _xent(logits, lab)
+        if regime == "minibatch":
+            logits = minibatch_forward(params, batch["feats"], batch, cfg, mesh)
+            return _xent(logits, batch["labels"])
+        logits = molecule_forward(params, batch["feats"], batch["edges"],
+                                  cfg, mesh)
+        return _xent(logits, batch["labels"])
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(loss)(params, batch)
+        new_p, new_o = optimizer.update(grads, opt_state, params)
+        return new_p, new_o, {"loss": l}
+
+    return step
+
+
+def input_specs(cfg: GNNConfig, shape, pad_nodes: Optional[int] = None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Dry-run stand-ins per GNN shape descriptor."""
+    i32, f32 = jnp.int32, jnp.float32
+    if shape.kind == "full":
+        N = pad_nodes or shape.n_nodes
+        return {
+            "feats": jax.ShapeDtypeStruct((N, shape.d_feat), f32),
+            "edges": jax.ShapeDtypeStruct((shape.n_edges, 2), i32),
+            "labels": jax.ShapeDtypeStruct((N,), i32),
+        }
+    if shape.kind == "minibatch":
+        N = pad_nodes or shape.n_nodes
+        B = shape.batch_nodes
+        f1, f2 = shape.fanout
+        return {
+            "feats": jax.ShapeDtypeStruct((N, shape.d_feat), f32),
+            "roots": jax.ShapeDtypeStruct((B,), i32),
+            "hop1": jax.ShapeDtypeStruct((B, f1), i32),
+            "hop2": jax.ShapeDtypeStruct((B, f1, f2), i32),
+            "labels": jax.ShapeDtypeStruct((B,), i32),
+        }
+    G = shape.graph_batch
+    return {
+        "feats": jax.ShapeDtypeStruct((G, shape.n_nodes, shape.d_feat), f32),
+        "edges": jax.ShapeDtypeStruct((G, shape.n_edges, 2), i32),
+        "labels": jax.ShapeDtypeStruct((G,), i32),
+    }
+
+
+def input_pspecs(cfg: GNNConfig, shape, mesh: Mesh) -> Dict[str, P]:
+    dp, tp = _axes(mesh)
+    dpp = dp if dp else None
+    if shape.kind == "full":
+        return {"feats": P(tp, None), "edges": P(dpp, None),
+                "labels": P(tp)}
+    if shape.kind == "minibatch":
+        return {"feats": P(tp, None), "roots": P(dpp),
+                "hop1": P(dpp, None), "hop2": P(dpp, None, None),
+                "labels": P(dpp)}
+    return {"feats": P(dpp, None, None), "edges": P(dpp, None, None),
+            "labels": P(dpp)}

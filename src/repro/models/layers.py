@@ -1,0 +1,113 @@
+"""Common layers (pure functions over param dicts)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import Spec
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * w.astype(jnp.float32)).astype(dt)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+def ffn_specs(d: int, f: int, act: str, dtype, fsdp, tp) -> dict:
+    """Gated (silu_glu) or plain (relu2) FFN param specs."""
+    if act == "silu_glu":
+        return {
+            "gate": Spec((d, f), dtype, P(fsdp, tp)),
+            "up": Spec((d, f), dtype, P(fsdp, tp)),
+            "down": Spec((f, d), dtype, P(tp, fsdp)),
+        }
+    return {
+        "in": Spec((d, f), dtype, P(fsdp, tp)),
+        "out": Spec((f, d), dtype, P(tp, fsdp)),
+    }
+
+
+def ffn_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu_glu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+        return h @ p["down"]
+    h = activation(act)(x @ p["in"])
+    return h @ p["out"]
+
+
+def ffn_apply_sharded(p: dict, x: jax.Array, act: str, mesh, dp, tp
+                      ) -> jax.Array:
+    """Megatron-SP FFN with explicit collectives (shard_map).
+
+    x enters sequence-sharded P(dp, tp, None); weights enter in their FSDP x
+    TP layout and are all-gathered over the fsdp axis INSIDE the block.
+    Explicit per-call gathers are loop-variant when the caller scans over
+    stacked layers, so XLA cannot hoist the gathered weight stack out of the
+    loop (auto-SPMD did exactly that: 47 GB/device on nemotron-340b train).
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    glu = act == "silu_glu"
+    names = ("gate", "up", "down") if glu else ("in", "out")
+    fsdp = tuple(dp) if dp else ()
+    xspec = P(dp if dp else None, tp, None)
+    wspec_up = P(fsdp if fsdp else None, tp)     # (d, f) matrices
+    wspec_dn = P(tp, fsdp if fsdp else None)     # (f, d) matrix
+
+    def block(x_loc, *ws):
+        # gather weights over fsdp (per-layer, inside the scan body)
+        ws = [jax.lax.all_gather(w, fsdp, axis=(0 if i < len(ws) - 1 else 1),
+                                 tiled=True) if fsdp else w
+              for i, w in enumerate(ws)]
+        # gather the seq-sharded activations over tp
+        x_full = jax.lax.all_gather(x_loc, tp, axis=1, tiled=True)
+        if glu:
+            g, u, dwn = ws
+            h = jax.nn.silu(x_full @ g) * (x_full @ u)
+        else:
+            win, dwn = ws
+            h = activation(act)(x_full @ win)
+        out = h @ dwn                                # partial over tp
+        return jax.lax.psum_scatter(out, tp, scatter_dimension=1, tiled=True)
+
+    in_specs = (xspec,) + tuple(
+        wspec_dn if n in ("down", "out") else wspec_up for n in names)
+    return jax.shard_map(block, mesh=mesh, in_specs=in_specs,
+                         out_specs=xspec, check_vma=False)(
+        x, *[p[n] for n in names])
+
+
+def mlp_specs(dims: Sequence[int], dtype=jnp.float32, pspec_w=P(),
+              prefix: str = "layer") -> dict:
+    """Plain MLP tower (recsys / DLRM): dims = (in, h1, ..., out)."""
+    p = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"{prefix}{i}_w"] = Spec((a, b), dtype, pspec_w)
+        p[f"{prefix}{i}_b"] = Spec((b,), dtype, P(), init="zeros")
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, n_layers: int, act: str = "relu",
+              final_act: bool = False, prefix: str = "layer") -> jax.Array:
+    f = activation(act)
+    for i in range(n_layers):
+        x = x @ p[f"{prefix}{i}_w"] + p[f"{prefix}{i}_b"]
+        if i < n_layers - 1 or final_act:
+            x = f(x)
+    return x

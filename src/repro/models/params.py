@@ -1,0 +1,68 @@
+"""Declarative parameter trees: one source of truth for shapes, dtypes,
+shardings and initialization.
+
+A model module builds a pytree of ``Spec`` leaves; from it we derive
+  * abstract ShapeDtypeStructs (dry-run lowering — no allocation),
+  * NamedShardings (in_shardings for jit),
+  * real initialized params (smoke tests / real training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    pspec: P = P()
+    init: str = "normal"        # "normal" | "zeros" | "ones" | "embed"
+    scale: Optional[float] = None  # None => 1/sqrt(fan_in)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def abstract(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree, is_leaf=_is_spec)
+
+
+def shardings(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s.pspec), tree, is_leaf=_is_spec)
+
+
+def pspecs(tree):
+    return jax.tree.map(lambda s: s.pspec, tree, is_leaf=_is_spec)
+
+
+def initialize(tree, key: jax.Array):
+    """Materialize real parameters (small/reduced configs only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            scale = s.scale if s.scale is not None else 1.0 / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * scale
+                        ).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves if isinstance(s, Spec))

@@ -1,0 +1,662 @@
+"""LM transformer (dense + MoE, GQA + MLA) with train / prefill / decode steps.
+
+Distribution (single-pod mesh ("data", "model"); multi-pod adds a leading
+"pod" axis that behaves as extra DP):
+
+  * batch over dp, FSDP parameter sharding over dp (ZeRO-3 style: params are
+    stored sharded over dp and all-gathered by XLA at use — `fsdp` below),
+  * attention heads / FFN width over tp ("model"),
+  * the token embedding + logits are **vocab-parallel** — the PIFS pattern:
+    each tp shard owns a vocab slice, embeds/scores only tokens it owns, and
+    only pooled (b, s, d) activations / (b, s, V/tp) logit shards cross the
+    interconnect, never the (V, d) table,
+  * MoE experts over (data, model) or (model,) — see models/moe.py,
+  * decode KV caches sequence-sharded over tp — see models/attention.py.
+
+Layers are stacked with `jax.lax.scan` over a params pytree whose leaves have
+a leading (n_layers,) axis: one compiled layer body regardless of depth
+(compile time and HLO size stay O(1) in depth; XLA overlaps the next layer's
+weight all-gather with current compute).  Activation checkpointing:
+`jax.checkpoint` on the scanned body with a dots-saveable policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (ffn_apply, ffn_apply_sharded, ffn_specs,
+                                 rms_norm)
+from repro.models.params import Spec
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    if "data" in names:
+        return ("data",), "model"
+    return (), names[-1]
+
+
+def _is_moe_layer(cfg: LMConfig, li: int) -> bool:
+    return cfg.moe is not None and li >= cfg.moe.first_dense_layers
+
+
+def layer_specs(cfg: LMConfig, mesh: Mesh, kind: str, dtype,
+                serving: bool = False) -> dict:
+    """Specs for one layer family (dense-FFN layers vs MoE layers).
+
+    Training: attention weights are tp-sharded only when the head layout
+    divides tp (see _constrain_heads); under sequence-parallel attention
+    they are fsdp-sharded only, so the q/k/v/o projections are fully local
+    on the seq-sharded residual stream.
+
+    Serving (decode): weight-stationary width sharding over the FULL mesh —
+    every big matrix splits its width dim over (dp + tp); only tiny (b, 1, *)
+    activations are gathered/reduced.  The alternative (train-style FSDP)
+    makes XLA hoist per-layer weight gathers out of the decode loop and
+    materialize whole gathered stacks (34 GB/device on nemotron-340b,
+    measured — the PIFS lesson again: move the small thing).
+    """
+    dp, tp = _axes(mesh)
+    fsdp = dp or None
+    d = cfg.d_model
+    tp_size = mesh.shape[tp]
+    n_total = int(np.prod([mesh.shape[a] for a in dp + (tp,)])) if dp \
+        else tp_size
+
+    if serving:
+        W = (dp + (tp,)) if dp else tp
+
+        def wspec(shape, width_axis):
+            # width-shard when divisible, else replicate (tiny tensors)
+            if shape[width_axis] % n_total == 0:
+                return P(*[W if i == width_axis else None
+                           for i in range(len(shape))])
+            return P()
+
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            H = cfg.n_heads
+            a = {
+                "wdq": Spec((d, m.q_lora_rank), dtype,
+                            wspec((d, m.q_lora_rank), 1)),
+                "q_norm": Spec((m.q_lora_rank,), dtype, P(), init="ones"),
+                "wuq": Spec((m.q_lora_rank, H * qd), dtype,
+                            wspec((m.q_lora_rank, H * qd), 1)),
+                "wdkv": Spec((d, m.kv_lora_rank), dtype,
+                             wspec((d, m.kv_lora_rank), 1)),
+                "kv_norm": Spec((m.kv_lora_rank,), dtype, P(), init="ones"),
+                "wukv": Spec((m.kv_lora_rank,
+                              H * (m.qk_nope_head_dim + m.v_head_dim)),
+                             dtype,
+                             wspec((m.kv_lora_rank,
+                                    H * (m.qk_nope_head_dim + m.v_head_dim)),
+                                   1)),
+                "wkr": Spec((d, m.qk_rope_head_dim), dtype, P()),
+                "wo": Spec((H * m.v_head_dim, d), dtype,
+                           wspec((H * m.v_head_dim, d), 0)),
+            }
+        else:
+            H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            a = {
+                "wq": Spec((d, H * h), dtype, wspec((d, H * h), 1)),
+                "wk": Spec((d, K * h), dtype, wspec((d, K * h), 1)),
+                "wv": Spec((d, K * h), dtype, wspec((d, K * h), 1)),
+                "wo": Spec((H * h, d), dtype, wspec((H * h, d), 0)),
+            }
+        specs = {
+            "attn": a,
+            "attn_norm": Spec((d,), dtype, P(), init="ones"),
+            "ffn_norm": Spec((d,), dtype, P(), init="ones"),
+        }
+        if kind == "moe":
+            specs["moe"] = moe_mod.moe_specs(cfg, mesh, dp, tp, dtype)
+        else:
+            f = cfg.d_ff
+            if cfg.activation == "relu2":
+                specs["ffn"] = {
+                    "in": Spec((d, f), dtype, wspec((d, f), 1)),
+                    "out": Spec((f, d), dtype, wspec((f, d), 0)),
+                }
+            else:
+                specs["ffn"] = {
+                    "gate": Spec((d, f), dtype, wspec((d, f), 1)),
+                    "up": Spec((d, f), dtype, wspec((d, f), 1)),
+                    "down": Spec((f, d), dtype, wspec((f, d), 0)),
+                }
+        return specs
+
+    if cfg.attn_type == "mla":
+        head_ok = cfg.n_heads % tp_size == 0
+    else:
+        head_ok = (cfg.n_heads % tp_size == 0
+                   and cfg.n_kv_heads % tp_size == 0)
+    if head_ok:
+        attn_fsdp, attn_tp = fsdp, tp
+    else:
+        # sequence-parallel attention: weights are not head-sharded; FSDP
+        # them over (dp + tp) so the gradient reduction is a reduce-scatter
+        # over the full mesh instead of an all-reduce over tp
+        attn_fsdp, attn_tp = (tuple(dp) + (tp,)) or None, None
+    if cfg.attn_type == "mla":
+        a = attn.mla_specs(cfg, attn_fsdp, attn_tp, dtype)
+    else:
+        a = attn.gqa_specs(cfg, attn_fsdp, attn_tp, dtype)
+    specs = {
+        "attn": a,
+        "attn_norm": Spec((d,), dtype, P(), init="ones"),
+        "ffn_norm": Spec((d,), dtype, P(), init="ones"),
+    }
+    if kind == "moe":
+        specs["moe"] = moe_mod.moe_specs(cfg, mesh, dp, tp, dtype)
+    else:
+        specs["ffn"] = ffn_specs(d, cfg.d_ff, _ffn_act(cfg), dtype, fsdp, tp)
+    return specs
+
+
+def _ffn_act(cfg: LMConfig) -> str:
+    return "relu2" if cfg.activation == "relu2" else "silu_glu"
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    """Add a leading (n,) layer axis to every Spec leaf (for lax.scan)."""
+    def stack(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, s.dtype, P(*((None,) + tuple(s.pspec))),
+                    init=s.init, scale=s.scale)
+    return jax.tree.map(stack, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def model_specs(cfg: LMConfig, mesh: Mesh, dtype=None,
+                serving: bool = False) -> dict:
+    """Full parameter tree: embed + scanned layer stacks + final norm + head.
+
+    Embedding is vocab-sharded over tp (the PIFS placement: the table is the
+    "memory pool" spread over the model axis).  The LM head reuses a separate
+    vocab-sharded matrix (untied, matching the assigned archs).
+    """
+    dp, tp = _axes(mesh)
+    fsdp = dp or None
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    # vocab padded to a tp multiple (granite: 49155 -> 49168); padded logit
+    # columns are masked to -inf in lm_logits, so they are grad- and
+    # sample-inert
+    V = padded_vocab(cfg, mesh)
+
+    n_dense, n_moe = _layer_split(cfg)
+    specs: Dict[str, Any] = {
+        "embed": Spec((V, d), dtype, P(tp, None), init="embed", scale=0.02),
+        "head": Spec((d, V), dtype, P(None, tp)),
+        "final_norm": Spec((d,), dtype, P(), init="ones"),
+    }
+    if n_dense:
+        specs["dense_layers"] = _stack_specs(
+            layer_specs(cfg, mesh, "dense", dtype, serving=serving), n_dense)
+    if n_moe:
+        specs["moe_layers"] = _stack_specs(
+            layer_specs(cfg, mesh, "moe", dtype, serving=serving), n_moe)
+    if cfg.mtp_depth:
+        # DeepSeek-V3 MTP: one extra transformer block + projection per depth
+        mtp = {
+            "proj": Spec((2 * d, d), dtype, P(fsdp, None)),
+            "norm_prev": Spec((d,), dtype, P(), init="ones"),
+            "norm_emb": Spec((d,), dtype, P(), init="ones"),
+            "block": layer_specs(cfg, mesh, "moe" if cfg.moe else "dense",
+                                 dtype),
+        }
+        specs["mtp"] = _stack_specs(mtp, cfg.mtp_depth)
+    return specs
+
+
+def padded_vocab(cfg: LMConfig, mesh: Mesh) -> int:
+    tp_size = mesh.shape[_axes(mesh)[1]]
+    return -(-cfg.vocab // tp_size) * tp_size
+
+
+def _layer_split(cfg: LMConfig) -> Tuple[int, int]:
+    if cfg.moe is None:
+        return cfg.n_layers, 0
+    nd = cfg.moe.first_dense_layers
+    return nd, cfg.n_layers - nd
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _constrain_heads(mesh: Mesh, cfg: Optional[LMConfig] = None):
+    """Attention activation layout.
+
+    * head-sharded over tp when BOTH n_heads and n_kv_heads divide tp (MLA:
+      the latent kv is shared, only n_heads matters);
+    * otherwise sequence-parallel attention: q/out shard the seq axis over
+      tp, kv replicates along seq (each shard scores its q rows against the
+      full kv).  Every assigned GQA arch has kv_heads=8 < tp=16 — naive
+      head sharding there makes XLA emit replicate-then-reshard collectives
+      (measured 493 GB/device/step on llama3.2-3b train_4k; see
+      EXPERIMENTS.md §Perf iteration 1).
+    """
+    dp, tp = _axes(mesh)
+    tp_size = mesh.shape[tp]
+    if cfg is None:
+        head_ok = False
+    elif cfg.attn_type == "mla":
+        head_ok = cfg.n_heads % tp_size == 0
+    else:
+        head_ok = (cfg.n_heads % tp_size == 0
+                   and cfg.n_kv_heads % tp_size == 0)
+
+    def c(a, kind):
+        b = dp if dp else None
+        if head_ok:
+            spec = P(b, None, tp, None)
+        elif kind == "kv":
+            spec = P(b, None, None, None)
+        else:  # q / attention output: seq-sharded
+            spec = P(b, tp, None, None)
+        return jax.lax.with_sharding_constraint(
+            a, jax.sharding.NamedSharding(mesh, spec))
+    return c
+
+
+def _constrain_seq(x: jax.Array, mesh: Mesh) -> jax.Array:
+    """Sequence-parallel residual stream (Megatron SP): between blocks the
+    (b, s, d) activations live sharded over tp along the sequence axis; XLA
+    inserts the all-gather before attention/FFN and the reduce-scatter after.
+    This divides the remat-saved layer carries by tp — the difference between
+    the 671B/340B trains fitting 16 GB/chip or not."""
+    dp, tp = _axes(mesh)
+    spec = P(dp if dp else None, tp, None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+_REMAT_POLICIES = {
+    # save matmul outputs (fast backward, large residency) — small archs
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    # save nothing but the scan carry (full recompute) — the giants
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def _layer_fwd(p: dict, x: jax.Array, cfg: LMConfig, mesh: Mesh, kind: str
+               ) -> Tuple[jax.Array, jax.Array]:
+    """One transformer block (prefill/train form). Returns (x, aux_loss)."""
+    dp, tp = _axes(mesh)
+    tp_size = mesh.shape[tp]
+    if cfg.attn_type == "mla":
+        head_ok = cfg.n_heads % tp_size == 0
+    else:
+        head_ok = (cfg.n_heads % tp_size == 0
+                   and cfg.n_kv_heads % tp_size == 0)
+    seq_ctx = None if head_ok else (mesh, dp, tp)
+    c = _constrain_heads(mesh, cfg)
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, _ = attn.mla_prefill(p["attn"], h, cfg, constrain=c,
+                                seq_ctx=seq_ctx)
+    else:
+        a, _ = attn.gqa_prefill(p["attn"], h, cfg, constrain=c,
+                                seq_ctx=seq_ctx)
+    x = x + a
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if kind == "moe":
+        f, aux = moe_mod.moe_apply(p["moe"], h, cfg, mesh, dp, tp)
+    else:
+        # explicit Megatron-SP FFN: per-layer weight gathers stay inside the
+        # scan body (auto-SPMD hoisted the gathered stack out of the loop)
+        f = ffn_apply_sharded(p["ffn"], h, _ffn_act(cfg), mesh, dp, tp)
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def _scan_stack(stack_params: dict, x: jax.Array, cfg: LMConfig, mesh: Mesh,
+                kind: str, remat: str, sp: bool,
+                layer_pspecs: Optional[dict] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """lax.scan over the layer axis; body optionally rematerialized.
+
+    remat: "none" | "dots" | "full" (see _REMAT_POLICIES); sp: sequence-
+    parallel residual constraint at block boundaries.
+
+    layer_pspecs: per-layer (unstacked) PartitionSpecs.  When given, the
+    scan-sliced layer params are re-constrained to their sharded layout
+    INSIDE the body: without this, XLA commutes gather(slice(i, stack)) into
+    slice(i, gather(stack)) and materializes the all-gathered weight stack
+    for the whole loop — 6+ GB/device for the 67B/340B archs (measured;
+    EXPERIMENTS.md §Perf).
+    """
+    def body(carry, lp):
+        if layer_pspecs is not None:
+            lp = jax.tree.map(
+                lambda a, s: jax.lax.with_sharding_constraint(
+                    a, jax.sharding.NamedSharding(mesh, s)),
+                lp, layer_pspecs, is_leaf=lambda z: isinstance(z, P))
+        if sp:
+            carry = _constrain_seq(carry, mesh)
+        y, aux = _layer_fwd(lp, carry, cfg, mesh, kind)
+        if sp:
+            y = _constrain_seq(y, mesh)
+        return y, aux
+
+    if remat != "none":
+        body = jax.checkpoint(body, policy=_REMAT_POLICIES[remat]())
+    x, auxs = jax.lax.scan(body, x, stack_params)
+    return x, auxs.sum()
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: LMConfig, mesh: Mesh
+                 ) -> jax.Array:
+    """Vocab-parallel embedding — the PIFS lookup pattern on the LM table.
+
+    Each tp shard holds V/tp rows; it embeds only the tokens whose ids fall in
+    its slice (others contribute zeros) and the (b, s, d) partials are psum'd:
+    reduce-near-data, pooled activations cross the ICI, never table rows.
+    """
+    dp, tp = _axes(mesh)
+    tspec = P(dp if dp else None, None)
+
+    def block(emb, tok):
+        V_loc = emb.shape[0]
+        my = jax.lax.axis_index(tp)
+        lo = my * V_loc
+        local = tok - lo
+        owned = (local >= 0) & (local < V_loc)
+        rows = jnp.take(emb, jnp.clip(local, 0, V_loc - 1), axis=0)
+        rows = jnp.where(owned[..., None], rows, 0)
+        return jax.lax.psum(rows, tp)
+
+    return jax.shard_map(
+        block, mesh=mesh, in_specs=(P(tp, None), tspec),
+        out_specs=P(dp if dp else None, None, None), check_vma=False,
+    )(p["embed"], tokens)
+
+
+def lm_logits(p: dict, x: jax.Array, cfg: LMConfig, mesh: Mesh) -> jax.Array:
+    """Head matmul with tp-sharded output logits (never replicated (b,s,V)).
+    Padded vocab columns are masked to -inf (grad- and sample-inert)."""
+    dp, tp = _axes(mesh)
+    out = x @ p["head"]
+    Vp = out.shape[-1]
+    if Vp != cfg.vocab:
+        pad_mask = jnp.arange(Vp) >= cfg.vocab
+        out = jnp.where(pad_mask, jnp.asarray(-1e30, out.dtype), out)
+    return jax.lax.with_sharding_constraint(
+        out, jax.sharding.NamedSharding(
+            mesh, P(dp if dp else None, None, tp)))
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig, mesh: Mesh,
+            remat: str = "dots", sp: bool = True
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens (b, s) -> hidden (b, s, d); also returns summed MoE aux loss."""
+    x = embed_tokens(params, tokens, cfg, mesh).astype(jnp.dtype(cfg.dtype))
+    n_dense, n_moe = _layer_split(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    from repro.models.params import pspecs as _pspecs
+    if n_dense:
+        lps = _pspecs(layer_specs(cfg, mesh, "dense", jnp.dtype(cfg.dtype)))
+        x, a = _scan_stack(params["dense_layers"], x, cfg, mesh, "dense",
+                           remat, sp, layer_pspecs=lps)
+        aux = aux + a
+    if n_moe:
+        lps = _pspecs(layer_specs(cfg, mesh, "moe", jnp.dtype(cfg.dtype)))
+        x, a = _scan_stack(params["moe_layers"], x, cfg, mesh, "moe",
+                           remat, sp, layer_pspecs=lps)
+        aux = aux + a
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+
+def _xent_vocab_parallel(logits: jax.Array, labels: jax.Array, mesh: Mesh
+                         ) -> jax.Array:
+    """Cross-entropy over tp-sharded logits without materializing the full
+    softmax: per-shard max/sumexp + psum (reduce-near-data again)."""
+    dp, tp = _axes(mesh)
+    lspec = P(dp if dp else None, None, tp)
+    yspec = P(dp if dp else None, None)
+
+    def block(lg, y):
+        V_loc = lg.shape[-1]
+        my = jax.lax.axis_index(tp)
+        lo = my * V_loc
+        lg = lg.astype(jnp.float32)
+        # stability shift: mathematically cancels in logsumexp-gold, so no
+        # gradient flows through it.  pmax has no AD rule, so gather the
+        # per-shard maxes (a (tp, b, s) tensor — tiny) and reduce locally.
+        m = jax.lax.stop_gradient(
+            jax.lax.all_gather(lg.max(axis=-1), tp).max(axis=0))
+        se = jax.lax.psum(jnp.exp(lg - m[..., None]).sum(axis=-1), tp)
+        local = y - lo
+        owned = (local >= 0) & (local < V_loc)
+        picked = jnp.take_along_axis(
+            lg, jnp.clip(local, 0, V_loc - 1)[..., None], axis=-1)[..., 0]
+        gold = jax.lax.psum(jnp.where(owned, picked, 0.0), tp)
+        return jnp.log(se) + m - gold
+
+    nll = jax.shard_map(block, mesh=mesh, in_specs=(lspec, yspec),
+                        out_specs=yspec, check_vma=False)(logits, labels)
+    return nll.mean()
+
+
+def loss_fn(params: dict, tokens: jax.Array, labels: jax.Array,
+            cfg: LMConfig, mesh: Mesh, remat: str = "dots",
+            sp: bool = True) -> jax.Array:
+    x, aux = forward(params, tokens, cfg, mesh, remat=remat, sp=sp)
+    logits = lm_logits(params, x, cfg, mesh)
+    loss = _xent_vocab_parallel(logits, labels, mesh)
+    if cfg.mtp_depth:
+        loss = loss + _mtp_loss(params, x, tokens, labels, cfg, mesh)
+    return loss + aux
+
+
+def _mtp_loss(params: dict, h: jax.Array, tokens: jax.Array,
+              labels: jax.Array, cfg: LMConfig, mesh: Mesh,
+              weight: float = 0.3) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction: each depth-k module combines the
+    previous hidden state with the embedding of the (k+1)-shifted token and
+    predicts one extra step ahead."""
+    kind = "moe" if cfg.moe is not None else "dense"
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, mp):
+        hprev, shift = carry
+        # shift tokens/labels left by one position per depth
+        tok_k = jnp.roll(tokens, -1, axis=1)
+        emb = embed_tokens(params, tok_k, cfg, mesh).astype(hprev.dtype)
+        comb = jnp.concatenate(
+            [rms_norm(hprev, mp["norm_prev"], cfg.norm_eps),
+             rms_norm(emb, mp["norm_emb"], cfg.norm_eps)], axis=-1)
+        hk = comb @ mp["proj"]
+        hk, _ = _layer_fwd(mp["block"], hk, cfg, mesh, kind)
+        return (hk, shift + 1), hk
+
+    (_, _), hs = jax.lax.scan(body, (h, jnp.zeros((), jnp.int32)),
+                              params["mtp"])
+    # one prediction head pass per depth (share the main head)
+    lab_k = jnp.roll(labels, -cfg.mtp_depth, axis=1)
+    logits = lm_logits(params, hs[-1], cfg, mesh)
+    return weight * _xent_vocab_parallel(logits, lab_k, mesh)
+
+
+def make_train_step(cfg: LMConfig, mesh: Mesh, optimizer, remat: str = "dots",
+                    sp: bool = True, accum: Optional[int] = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum > 1 runs gradient accumulation over `accum` microbatches (scan):
+    the remat carry stack shrinks by the same factor — how the 340B/671B
+    trains fit 16 GB/chip on the fixed 256-chip mesh.  Gradients accumulate
+    in f32.
+    """
+    accum = accum if accum is not None else cfg.train_accum
+
+    def grad_of(params, tokens, labels):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, tokens, labels, cfg, mesh,
+                              remat=remat, sp=sp))(params)
+
+    def step(params, opt_state, batch):
+        if accum <= 1:
+            loss, grads = grad_of(params, batch["tokens"], batch["labels"])
+        else:
+            B = batch["tokens"].shape[0]
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum, B // accum, *x.shape[1:]), batch)
+
+            def micro(carry, m):
+                l, g = grad_of(params, m["tokens"], m["labels"])
+                acc_l, acc_g = carry
+                acc_g = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            # accumulate in the parameter dtype: for the 671B arch the f32
+            # accumulator alone is 10 GB/device (production answer at this
+            # scale: bf16 accumulation; adafactor's update clipping absorbs
+            # the rounding noise over <=8 microsteps)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g, p: (g / accum).astype(p.dtype),
+                                 grads, params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with seq-sharded KV cache
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: LMConfig, mesh: Mesh, batch: int, seq: int, dtype=None
+                ) -> Any:
+    """Abstract KV-cache pytree for `seq` positions (seq-sharded over tp)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n = cfg.n_layers
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((n, batch, seq, m.kv_lora_rank), dtype),
+            "kr": jax.ShapeDtypeStruct((n, batch, seq, m.qk_rope_head_dim), dtype),
+        }
+    K, h = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((n, batch, seq, K, h), dtype),
+        "v": jax.ShapeDtypeStruct((n, batch, seq, K, h), dtype),
+    }
+
+
+def cache_pspecs(cfg: LMConfig, mesh: Mesh) -> Any:
+    dp, tp = _axes(mesh)
+    b = dp if dp else None
+    if cfg.attn_type == "mla":
+        return {"ckv": P(None, b, tp, None), "kr": P(None, b, tp, None)}
+    return {"k": P(None, b, tp, None, None), "v": P(None, b, tp, None, None)}
+
+
+def _decode_layer(lp: dict, x: jax.Array, layer_cache: Tuple,
+                  pos: jax.Array, cfg: LMConfig, mesh: Mesh, kind: str
+                  ) -> Tuple[jax.Array, Tuple]:
+    dp, tp = _axes(mesh)
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_decode(lp["attn"], h, layer_cache, pos,
+                                       cfg, mesh, dp, tp)
+    else:
+        a, new_cache = attn.gqa_decode(lp["attn"], h, layer_cache, pos,
+                                       cfg, mesh, dp, tp)
+    x = x + a.astype(x.dtype)
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if kind == "moe":
+        f, _ = moe_mod.moe_apply(lp["moe"], h, cfg, mesh, dp, tp)
+    else:
+        f = ffn_apply(lp["ffn"], h, _ffn_act(cfg))
+    return x + f.astype(x.dtype), new_cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: LMConfig, mesh: Mesh) -> Tuple[jax.Array, dict]:
+    """One decode step: tokens (b, 1) + seq-sharded cache -> (logits, cache).
+
+    Layers run under `lax.scan` (one compiled body per stack kind); the cache
+    arrays carry a leading (n_layers,) axis that the scan maps over, so the
+    HLO stays O(1) in depth even for the 96-layer archs.
+    """
+    x = embed_tokens(params, tokens, cfg, mesh).astype(jnp.dtype(cfg.dtype))
+    n_dense, n_moe = _layer_split(cfg)
+    keys = list(cache.keys())
+
+    def split(lo, hi):
+        return tuple(cache[k][lo:hi] for k in keys)
+
+    def scan_stack(stack_params, x, cache_slice, kind):
+        def body(carry, inp):
+            lp = inp[0]
+            lcache = inp[1:]
+            y, new_c = _decode_layer(lp, carry, lcache, pos, cfg, mesh, kind)
+            return y, new_c
+        x, new_cache = jax.lax.scan(body, x, (stack_params,) + cache_slice)
+        return x, new_cache
+
+    new_parts = []
+    if n_dense:
+        x, nc = scan_stack(params["dense_layers"], x, split(0, n_dense),
+                           "dense")
+        new_parts.append(nc)
+    if n_moe:
+        x, nc = scan_stack(params["moe_layers"], x,
+                           split(n_dense, cfg.n_layers), "moe")
+        new_parts.append(nc)
+    if len(new_parts) == 2:
+        merged = tuple(jnp.concatenate([a, b], axis=0)
+                       for a, b in zip(*new_parts))
+    else:
+        merged = new_parts[0]
+    out_cache = dict(zip(keys, merged))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg, mesh)
+    return logits, out_cache
+
+
+def make_decode_step(cfg: LMConfig, mesh: Mesh):
+    def step(params, cache, batch):
+        return decode_step(params, cache, batch["tokens"], batch["pos"],
+                           cfg, mesh)
+    return step
+
+
+def prefill_step(params: dict, tokens: jax.Array, cfg: LMConfig, mesh: Mesh
+                 ) -> jax.Array:
+    """Prefill forward (no cache retention here — dry-run measures the
+    compute/collective profile; serving keeps caches via attention modules)."""
+    x, _ = forward(params, tokens, cfg, mesh, remat="none", sp=True)
+    return lm_logits(params, x[:, -1:], cfg, mesh)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adagrad, adam, get_optimizer, rowwise_adagrad)
+from repro.optim import compression  # noqa: F401

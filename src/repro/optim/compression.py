@@ -1,0 +1,74 @@
+"""Gradient compression for data-parallel reduction (distributed-optimization
+trick; used by the explicit-psum DLRM/recsys trainer).
+
+bf16: halves DP collective bytes.  int8: 4x, with per-tensor scale and error
+feedback (residual carried to the next step) so compression error does not
+accumulate [Seide et al. 2014; 1-bit SGD lineage].
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jax.Array, method: str) -> Tuple[jax.Array, Optional[jax.Array]]:
+    if method == "none":
+        return g, None
+    if method == "bf16":
+        return g.astype(jnp.bfloat16), None
+    if method == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    raise ValueError(method)
+
+
+def decompress(q: jax.Array, scale: Optional[jax.Array], method: str,
+               dtype=jnp.float32) -> jax.Array:
+    if method == "none":
+        return q
+    if method == "bf16":
+        return q.astype(dtype)
+    if method == "int8":
+        return q.astype(dtype) * scale
+    raise ValueError(method)
+
+
+def compressed_psum(grads, axis_names, method: str = "none", error_fb=None):
+    """psum a grad pytree across `axis_names` with optional compression +
+    error feedback.  Must be called inside shard_map.
+
+    Returns (reduced_grads, new_error_fb).
+    """
+    if method == "none":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_names), grads), error_fb
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + (e if e is not None else 0.0)
+        q, scale = compress(g32, method)
+        qs = jax.lax.psum(q.astype(jnp.float32) if method == "int8" else q,
+                          axis_names)
+        if method == "int8":
+            # scales differ per shard: reduce with max for a conservative bound
+            scale = jax.lax.pmax(scale, axis_names)
+            red = qs * scale
+        else:
+            red = qs.astype(jnp.float32)
+        new_e = g32 - decompress(q, scale, method) if method == "int8" else None
+        return red.astype(g.dtype), new_e
+
+    if error_fb is None:
+        error_fb = jax.tree.map(lambda _: None, grads,
+                                is_leaf=lambda x: x is None)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_fb) if error_fb is not None else [None] * len(flat_g)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = tdef.unflatten([o[0] for o in out])
+    new_e = tdef.unflatten([o[1] for o in out])
+    return red, new_e

@@ -1,0 +1,183 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+* ``adam``  — configurable state dtype.  With bf16 moments the optimizer
+  state for a 671B-param model drops from 8 TB (fp32 m+v+master) to 2.7 TB,
+  which is what lets deepseek-v3 train_4k fit 16 GB/chip at 512 ways (see
+  EXPERIMENTS.md §Dry-run).  States inherit the parameter sharding, so FSDP
+  parameters automatically give ZeRO-sharded optimizer states.
+* ``adagrad`` — DLRM-convention dense/embedding optimizer.
+* ``rowwise_adagrad`` — one accumulator per embedding *row* (the FBGEMM/
+  TorchRec trick): state is (rows, 1) instead of (rows, dim), an 16-128x
+  state-memory saving on the PIFS tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         state_dtype=jnp.float32, rowwise_keys: tuple = ()) -> Optimizer:
+    def init(params):
+        def mk(p):
+            return {"m": jnp.zeros(p.shape, state_dtype),
+                    "v": jnp.zeros(p.shape, state_dtype)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mv": jax.tree.map(mk, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, mv, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * mv["m"].astype(jnp.float32) + (1 - b1) * g32
+            v = b2 * mv["v"].astype(jnp.float32) + (1 - b2) * g32 * g32
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, {"m": m.astype(state_dtype), "v": v.astype(state_dtype)}
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_mv = tdef.flatten_up_to(state["mv"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, mv, p) for g, mv, p in zip(flat_g, flat_mv, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mv = tdef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "mv": new_mv}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 1e-2, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        def upd(g, acc, p):
+            g32 = g.astype(jnp.float32)
+            acc = acc + g32 * g32
+            new_p = (p.astype(jnp.float32)
+                     - lr * g32 / (jnp.sqrt(acc) + eps)).astype(p.dtype)
+            return new_p, acc
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    return Optimizer(init, update)
+
+
+def rowwise_adagrad(lr: float = 1e-2, eps: float = 1e-10,
+                    min_dim_for_rowwise: int = 2) -> Optimizer:
+    """Row-wise accumulators for >=2D params (embedding tables), scalar-wise
+    adagrad otherwise."""
+    def _rowwise(p):
+        return p.ndim >= min_dim_for_rowwise
+
+    def init(params):
+        def mk(p):
+            if _rowwise(p):
+                return jnp.zeros(p.shape[:1] + (1,) * (p.ndim - 1), jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+        return jax.tree.map(mk, params)
+
+    def update(grads, state, params):
+        def upd(g, acc, p):
+            g32 = g.astype(jnp.float32)
+            if _rowwise(p):
+                acc = acc + jnp.mean(g32 * g32, axis=tuple(range(1, p.ndim)),
+                                     keepdims=True)
+            else:
+                acc = acc + g32 * g32
+            new_p = (p.astype(jnp.float32)
+                     - lr * g32 / (jnp.sqrt(acc) + eps)).astype(p.dtype)
+            return new_p, acc
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, min_dim_factored: int = 128
+              ) -> Optimizer:
+    """Adafactor (Shazeer & Stern) without first moment: the second moment of
+    a (R, C) matrix is stored as rank-1 factors (R,) x (C,) — state is
+    ~(R+C)/(R*C) of the parameter size instead of 2x.  This is what lets the
+    671B/340B train steps fit the fixed 256-chip mesh: params + grads +
+    O(params/128) state instead of params + grads + 2x state.
+
+    Tensors whose two trailing dims are both >= min_dim_factored factor over
+    those dims; everything else keeps a full accumulator (they are small)."""
+    def _factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def mk(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(mk, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** -decay                      # increasing decay
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), eps)[..., None]
+                ) * vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(vv, eps))
+                new_v = {"v": vv}
+            # relative update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, new_v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"step": step, "v": tdef.unflatten([o[1] for o in out])})
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adam": adam, "adagrad": adagrad, "adafactor": adafactor,
+            "rowwise_adagrad": rowwise_adagrad}[name](**kw)

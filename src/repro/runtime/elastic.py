@@ -1,0 +1,78 @@
+"""Elastic scaling: re-mesh a training state onto a different device count.
+
+Checkpoints store logical (unsharded) arrays + the model's *logical* pspecs
+are functions of the mesh, so scaling down (512 -> 256 chips after a pod
+loss) or up is: build the new mesh, rebuild shardings from the same spec
+functions, restore.  The only constraint is divisibility (tables over tp,
+batch over dp), which `validate_mesh_for` checks before committing.
+
+The PIFS engine needs one extra step on re-mesh: the page table maps pages
+to *shard ids*, so a tp-size change re-runs the planner against the new
+shard count (a pure host-side re-plan + one gather migration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.paging import PagingConfig
+from repro.core.pifs import PIFSEmbeddingEngine
+from repro.core.planner import PlannerConfig, plan
+from repro.distributed.sharding import make_mesh
+
+
+def validate_mesh_for(shape: Sequence[int], names: Sequence[str],
+                      divisibility: Dict[str, int]) -> None:
+    """divisibility: axis name -> value that must divide the axis size
+    (e.g. {"model": n_pages, "data": global_batch})."""
+    for name, size in zip(names, shape):
+        need = divisibility.get(name)
+        if need is not None and need % size != 0:
+            raise ValueError(
+                f"axis {name}={size} does not divide workload dim {need}")
+
+
+def remesh_engine(old_engine: PIFSEmbeddingEngine, new_mesh: Mesh,
+                  state, counts: Optional[np.ndarray] = None
+                  ) -> Tuple[PIFSEmbeddingEngine, Any]:
+    """Re-shard a PIFS engine state onto a new mesh (different tp size).
+
+    Strategy: export to the dense logical table (placement-invariant), build
+    a fresh engine for the new shard count, re-plan placement from the saved
+    access histogram, and re-pack.  Cost: one gather each way — the same
+    cache-line-granular move the migration path uses.
+    """
+    from repro.distributed.sharding import axes_for
+    dense = old_engine.to_dense(state)
+    new_axes = axes_for(new_mesh)
+    new_cfg = dataclasses.replace(
+        old_engine.cfg, n_shards=new_axes.tp_size(new_mesh))
+    new_engine = PIFSEmbeddingEngine(new_cfg, new_mesh, axes=new_axes,
+                                     planner=old_engine.planner,
+                                     dtype=old_engine.dtype)
+    counts = counts if counts is not None else np.asarray(
+        jax.device_get(state.counts))
+    # re-plan under the new shard count using the carried histogram
+    from repro.core.paging import initial_page_table
+    table0 = initial_page_table(new_cfg)
+    new_table, _ = plan(new_cfg, table0, counts, new_engine.planner)
+    new_state = new_engine.from_dense(dense, new_table)
+    new_state = dataclasses.replace(
+        new_state, counts=jax.numpy.asarray(counts, jax.numpy.float32))
+    return new_engine, new_state
+
+
+def scale_plan(n_devices: int, prefer_tp: int = 16
+               ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Pick a (data, model) mesh for an arbitrary surviving device count —
+    the re-mesh policy after partial failure.  Keeps tp at `prefer_tp` when
+    divisible (table shards move less), else the largest power-of-two
+    divisor."""
+    tp = prefer_tp
+    while tp > 1 and n_devices % tp:
+        tp //= 2
+    return (n_devices // tp, tp), ("data", "model")

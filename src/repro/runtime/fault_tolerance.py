@@ -1,0 +1,141 @@
+"""Fault-tolerant training runtime: checkpoint/restart loop, failure
+injection, straggler watchdog.
+
+At 1000+ nodes, MTBF is minutes-to-hours; the runtime assumes every step can
+die.  Mechanisms (all exercised by tests/test_runtime.py):
+
+  * **Restart loop** — `run_resilient` drives (restore latest -> train ->
+    checkpoint every N) and survives injected exceptions by re-entering from
+    the last committed checkpoint; a crash mid-save leaves a .tmp the
+    checkpointer ignores.
+  * **Failure injection** — `FailureInjector` raises `SimulatedFailure` at
+    configured steps (deterministic) or with per-step probability (chaos
+    mode) — stands in for a host dropping out of the collective.
+  * **Straggler watchdog** — per-step wall-time EWMA; a step slower than
+    `threshold` x EWMA is flagged.  On a real pod the remediation is
+    hot-spare swap / re-mesh (runtime/elastic.py); here the watchdog records
+    the event and (optionally) triggers a user callback, and its statistics
+    feed the EXPERIMENTS.md fault-tolerance section.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class SimulatedFailure(RuntimeError):
+    """A injected node/step failure."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_steps: Tuple[int, ...] = ()
+    fail_prob: float = 0.0
+    seed: int = 0
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.fail_prob > 0.0:
+            # deterministic hash-based chaos (reproducible across restarts
+            # only fires once per step because the step re-runs after restore)
+            h = hash((self.seed, step)) % 10_000
+            if h < self.fail_prob * 10_000 and step not in self._fired:
+                self._fired.add(step)
+                raise SimulatedFailure(f"chaos failure at step {step}")
+
+
+class StragglerWatchdog:
+    """EWMA step-time monitor (the paper-scale analogue watches per-host
+    collective arrival times; here step wall-time is the observable)."""
+
+    def __init__(self, alpha: float = 0.2, threshold: float = 2.5,
+                 warmup: int = 3,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.events: List[Dict[str, float]] = []
+        self._n = 0
+        self._on = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._n += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = (self._n > self.warmup
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma})
+            if self._on is not None:
+                self._on(step, dt, self.ewma)
+        else:
+            # stragglers do not poison the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int
+    restarts: int
+    straggler_events: List[Dict[str, float]]
+    final_metrics: Optional[Dict[str, Any]]
+
+
+def run_resilient(train_step: Callable[[Any, Any], Tuple[Any, Dict]],
+                  init_state: Any,
+                  batches: Callable[[int], Any],
+                  n_steps: int,
+                  checkpointer: Checkpointer,
+                  ckpt_every: int = 10,
+                  injector: Optional[FailureInjector] = None,
+                  watchdog: Optional[StragglerWatchdog] = None,
+                  max_restarts: int = 10,
+                  state_shardings: Optional[Any] = None) -> RunReport:
+    """Drive training to n_steps surviving injected failures.
+
+    train_step: (state, batch) -> (state, metrics); state is a pytree that
+    the checkpointer can round-trip.  batches(step) returns the batch for a
+    given global step (restart-deterministic data order).
+    """
+    restarts = 0
+    metrics: Optional[Dict[str, Any]] = None
+    while True:
+        # ---- (re)enter from the last committed checkpoint ----
+        start = checkpointer.latest_step()
+        if start is None:
+            state, step = init_state, 0
+        else:
+            state = checkpointer.restore(init_state, step=start,
+                                         shardings=state_shardings)
+            step = start
+        try:
+            while step < n_steps:
+                if injector is not None:
+                    injector.maybe_fail(step)
+                t0 = time.perf_counter()
+                state, metrics = train_step(state, batches(step))
+                dt = time.perf_counter() - t0
+                if watchdog is not None:
+                    watchdog.observe(step, dt)
+                step += 1
+                if step % ckpt_every == 0 or step == n_steps:
+                    checkpointer.save(step, state)
+            checkpointer.wait()
+            return RunReport(
+                steps_done=step, restarts=restarts,
+                straggler_events=watchdog.events if watchdog else [],
+                final_metrics=metrics)
+        except SimulatedFailure:
+            restarts += 1
+            checkpointer.wait()  # let any in-flight save commit or be ignored
+            if restarts > max_restarts:
+                raise

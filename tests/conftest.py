@@ -1,0 +1,38 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the real
+device count (the dry-run is the only 512-device context).  Tests that need
+a small multi-device mesh force 8 host devices via a subprocess-safe env
+check in pytest.ini instead; locally we use whatever is available and skip
+mesh-shape-dependent tests when devices are insufficient.
+"""
+import os
+
+# allow an 8-device CPU mesh for sharding tests without touching the
+# dry-run's 512-device setting (tests run in their own process)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.distributed.sharding import make_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    n = len(jax.devices())
+    if n < 8:
+        pytest.skip("needs 8 host devices")
+    return make_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh1d():
+    n = len(jax.devices())
+    if n < 4:
+        pytest.skip("needs 4 host devices")
+    return make_mesh((1, 4), ("data", "model"))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,63 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.interaction import dot_interaction_pallas
+from repro.kernels.sls import sls_pallas
+
+
+@pytest.mark.parametrize("B,L,V,D", [
+    (4, 2, 64, 16),
+    (8, 8, 256, 64),
+    (16, 4, 1024, 128),
+    (3, 5, 100, 32),          # non-power-of-two
+    (1, 1, 8, 16),            # degenerate
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sls_kernel_matches_ref(B, L, V, D, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(B * L + V))
+    table = jax.random.normal(k1, (V, D), dtype)
+    idx = jax.random.randint(k2, (B, L), 0, V).astype(jnp.int32)
+    out = sls_pallas(table, idx, interpret=True)
+    want = ref.sls_ref(table, idx)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,L,V,D", [(8, 8, 256, 64), (4, 3, 64, 16)])
+def test_sls_kernel_weighted(B, L, V, D):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    table = jax.random.normal(k1, (V, D))
+    idx = jax.random.randint(k2, (B, L), 0, V).astype(jnp.int32)
+    w = jax.random.uniform(k3, (B, L))
+    out = sls_pallas(table, idx, w, interpret=True)
+    want = ref.sls_ref(table, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("B,F,D", [
+    (8, 4, 16), (16, 8, 32), (128, 27, 16), (32, 9, 64),
+])
+@pytest.mark.parametrize("self_int", [False, True])
+def test_interaction_kernel_matches_ref(B, F, D, self_int):
+    feats = jax.random.normal(jax.random.PRNGKey(F), (B, F, D))
+    out = ops.dot_interaction(feats, self_interaction=self_int,
+                              impl="pallas", interpret=True)
+    want = ref.dot_interaction_ref(feats, self_interaction=self_int)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_interaction_output_size():
+    B, F, D = 4, 6, 8
+    feats = jnp.ones((B, F, D))
+    out = ref.dot_interaction_ref(feats)
+    assert out.shape == (B, F * (F - 1) // 2)
+    out2 = ref.dot_interaction_ref(feats, self_interaction=True)
+    assert out2.shape == (B, F * (F + 1) // 2)

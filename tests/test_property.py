@@ -1,0 +1,193 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.hot_cache import FIFOCache, HTRCache, LRUCache
+from repro.core.paging import (PagingConfig, initial_page_table, locate,
+                               placement_gather_indices)
+from repro.core.planner import PlannerConfig, plan
+from repro.data.traces import TraceConfig, TraceGenerator
+from repro.kernels import ref
+from repro.launch.hlo_stats import summarize
+from repro.optim.optimizers import adafactor, adam, rowwise_adagrad
+
+SETTINGS = dict(deadline=None, max_examples=25,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(total_rows=st.integers(64, 4096), dim=st.sampled_from([8, 16, 64]),
+       n_shards=st.sampled_from([2, 4, 8]),
+       hot_fraction=st.floats(0.0, 0.3))
+@settings(**SETTINGS)
+def test_paging_locate_is_total_and_unique(total_rows, dim, n_shards,
+                                           hot_fraction):
+    """Every row maps to exactly one (shard, slot) and no two rows collide."""
+    cfg = PagingConfig(total_rows=total_rows, dim=dim, n_shards=n_shards,
+                       hot_fraction=hot_fraction)
+    table = initial_page_table(cfg)
+    rows = jnp.arange(cfg.padded_rows)
+    shard, local, is_hot = locate(cfg, table, rows)
+    shard, local, is_hot = (np.asarray(shard), np.asarray(local),
+                            np.asarray(is_hot))
+    # addresses are unique within each tier
+    cold = ~is_hot
+    addr = shard[cold] * cfg.rows_per_shard + local[cold]
+    assert len(np.unique(addr)) == cold.sum()
+    assert (local[cold] < cfg.rows_per_shard).all()
+
+
+@given(n_pages=st.integers(8, 256), n_shards=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_planner_output_is_valid_placement(n_pages, n_shards, seed):
+    cfg = PagingConfig(total_rows=n_pages * 16, dim=64, n_shards=n_shards,
+                       page_bytes=64 * 16 * 4, hot_fraction=0.05)
+    assert cfg.num_pages == n_pages
+    table = initial_page_table(cfg)
+    rng = np.random.default_rng(seed)
+    counts = rng.random(n_pages) * 100
+    new, stats = plan(cfg, table, counts, PlannerConfig())
+    shard = np.asarray(new.page_to_shard)
+    slot = np.asarray(new.page_to_slot)
+    assert ((shard >= -1) & (shard < n_shards)).all()
+    # no two pages share a (shard, slot)
+    cold = shard >= 0
+    key = shard[cold].astype(np.int64) * (slot.max() + 1) + slot[cold]
+    assert len(np.unique(key)) == cold.sum()
+    assert (slot[cold] < cfg.pages_per_shard).all()
+    hot = shard == -1
+    assert hot.sum() <= cfg.hot_pages
+
+
+@given(seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_migration_gather_preserves_content(seed):
+    """placement_gather_indices must move every live page's rows intact."""
+    cfg = PagingConfig(total_rows=256, dim=8, n_shards=4, page_bytes=8 * 4 * 4,
+                       hot_fraction=0.1)
+    rng = np.random.default_rng(seed)
+    old = initial_page_table(cfg)
+    counts = rng.random(cfg.num_pages)
+    new, _ = plan(cfg, old, counts, PlannerConfig())
+    cold_src, hot_src = placement_gather_indices(cfg, old, new)
+    # simulate: storage cells hold their global flat address
+    old_cold = np.arange(cfg.cold_rows_total, dtype=np.int64)
+    old_hot = np.arange(cfg.hot_rows, dtype=np.int64) + cfg.cold_rows_total
+    combined = np.concatenate([old_cold, old_hot])
+    new_cold = combined[cold_src]
+    new_hot = combined[hot_src]
+
+    ps = cfg.page_size
+    o_shard = np.asarray(old.page_to_shard)
+    o_slot = np.asarray(old.page_to_slot)
+    n_shard = np.asarray(new.page_to_shard)
+    n_slot = np.asarray(new.page_to_slot)
+    for p in range(cfg.num_pages):
+        src0 = (cfg.cold_rows_total + o_slot[p] * ps if o_shard[p] == -1
+                else o_shard[p] * cfg.rows_per_shard + o_slot[p] * ps)
+        if n_shard[p] == -1:
+            got = new_hot[n_slot[p] * ps:(n_slot[p] + 1) * ps]
+        else:
+            base = n_shard[p] * cfg.rows_per_shard + n_slot[p] * ps
+            got = new_cold[base: base + ps]
+        assert (got == np.arange(src0, src0 + ps)).all(), f"page {p}"
+
+
+@given(B=st.integers(1, 8), L=st.integers(1, 8), V=st.integers(4, 128),
+       D=st.sampled_from([4, 16]))
+@settings(**SETTINGS)
+def test_sls_permutation_invariance(B, L, V, D):
+    """SLS is order-invariant within a bag (commutative accumulation) —
+    the out-of-order engine's correctness condition (paper §IV-A5)."""
+    rng = np.random.default_rng(B + L + V)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    idx = rng.integers(0, V, (B, L))
+    perm = np.stack([rng.permutation(L) for _ in range(B)])
+    idx_p = np.take_along_axis(idx, perm, axis=1)
+    a = ref.sls_ref(table, jnp.asarray(idx, jnp.int32))
+    b = ref.sls_ref(table, jnp.asarray(idx_p, jnp.int32))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(cap=st.integers(1, 64), n=st.integers(1, 500), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_cache_policies_bounded_and_sane(cap, n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.zipf(1.2, n) % 100
+    for cls in (LRUCache, FIFOCache, HTRCache):
+        c = cls(cap)
+        hr = c.run(keys.tolist())
+        assert 0.0 <= hr <= 1.0
+        if cap >= 100:  # cache bigger than key space: everything after
+            assert c.hits >= n - 100  # first touch must hit
+
+
+@given(dist=st.sampled_from(["zipfian", "normal", "uniform", "random"]),
+       seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_trace_generator_in_range(dist, seed):
+    cfg = TraceConfig(n_rows=1000, n_tables=2, pooling=4, batch=32,
+                      distribution=dist, seed=seed)
+    g = TraceGenerator(cfg)
+    b = g.next_batch()
+    assert b.shape == (32, 2, 4)
+    assert b.min() >= 0 and b.max() < 1000
+
+
+@given(shape=st.sampled_from([(4,), (8, 16), (16, 8, 4), (256, 256)]),
+       opt_name=st.sampled_from(["adam", "adafactor", "rowwise"]))
+@settings(**SETTINGS)
+def test_optimizers_decrease_quadratic(shape, opt_name):
+    """Any optimizer must make progress on a convex quadratic."""
+    opt = {"adam": lambda: adam(1e-1),
+           "adafactor": lambda: adafactor(1e-1),
+           "rowwise": lambda: rowwise_adagrad(5e-1)}[opt_name]()
+    target = jnp.asarray(np.random.default_rng(0).normal(size=shape),
+                         jnp.float32)
+    params = {"w": jnp.zeros(shape, jnp.float32)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(30):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_hlo_stats_loop_multiplier():
+    hlo = """
+%body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %a = f32[4,8] get-tuple-element(%p), index=1
+  %w = f32[8,8] constant(0)
+  %d = f32[4,8] dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4,8]) tuple(%i, %d)
+}
+%cond (p: (s32[], f32[4,8])) -> pred[] {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %x = f32[4,8] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[4,8]) tuple(%z, %x)
+  %w = (s32[], f32[4,8]) while(%init), condition=%cond, body=%body
+  ROOT %o = f32[4,8] get-tuple-element(%w), index=1
+}
+"""
+    s = summarize(hlo)
+    # dot = 2*4*8*8 = 512 flops x 7 iterations
+    assert s.flops == 512 * 7

@@ -1,0 +1,203 @@
+"""Fault tolerance, checkpointing, elasticity, data pipeline."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.pifs import engine_for_tables
+from repro.data.pipeline import Prefetcher
+from repro.data.synth import lm_batches
+from repro.distributed.sharding import make_mesh
+from repro.optim.compression import compressed_psum, init_error_feedback
+from repro.runtime.elastic import remesh_engine, scale_plan, validate_mesh_for
+from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
+                                           StragglerWatchdog, run_resilient)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer
+# ---------------------------------------------------------------------------
+
+
+def _state():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,)), "step": jnp.asarray(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    s = _state()
+    ck.save(3, s, blocking=True)
+    r = ck.restore(s)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save(step, _state(), blocking=True)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    # simulate a crash mid-write: orphan tmp dir without manifest
+    os.makedirs(tmp_path / "step_000000000002.tmp")
+    with open(tmp_path / "step_000000000002.tmp" / "leaf_000000.npy", "w"):
+        pass
+    assert ck.latest_step() == 1
+    ck.restore(_state())  # must not raise
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    with pytest.raises(ValueError):
+        ck.restore({"different": jnp.zeros(3)})
+
+
+def test_checkpoint_elastic_restore_across_meshes(tmp_path):
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m1 = make_mesh((2, 4), ("data", "model"))
+    m2 = make_mesh((4, 2), ("data", "model"))
+    ck = Checkpointer(str(tmp_path))
+    x = jax.device_put(jnp.arange(32.0).reshape(8, 4),
+                       NamedSharding(m1, P("model", None)))
+    ck.save(1, {"x": x}, blocking=True)
+    r = ck.restore({"x": x},
+                   shardings={"x": NamedSharding(m2, P("model", None))})
+    np.testing.assert_array_equal(np.asarray(r["x"]), np.asarray(x))
+    assert r["x"].sharding.mesh.shape["model"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_run_resilient_survives_failures(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    calls = []
+
+    def step(s, batch):
+        calls.append(int(s["i"]))
+        return {"i": s["i"] + 1}, {"loss": 1.0}
+
+    inj = FailureInjector(fail_at_steps=(4, 11))
+    rep = run_resilient(step, {"i": jnp.asarray(0)}, lambda i: None, 15, ck,
+                        ckpt_every=5, injector=inj)
+    assert rep.steps_done == 15
+    assert rep.restarts == 2
+    final = ck.restore({"i": jnp.asarray(0)})
+    assert int(final["i"]) == 15
+
+
+def test_run_resilient_gives_up_after_max_restarts(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+
+    def step(s, batch):
+        return s, {}
+
+    # fails at step 0 forever (checkpoint never advances past it)
+    class AlwaysFail(FailureInjector):
+        def maybe_fail(self, step):
+            raise SimulatedFailure("always")
+
+    with pytest.raises(SimulatedFailure):
+        run_resilient(step, {"i": jnp.asarray(0)}, lambda i: None, 5, ck,
+                      injector=AlwaysFail(), max_restarts=3)
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = StragglerWatchdog(alpha=0.5, threshold=2.0, warmup=2)
+    for i in range(6):
+        wd.observe(i, 0.10)
+    assert wd.observe(6, 0.50)       # 5x the EWMA -> straggler
+    assert len(wd.events) == 1
+    # the straggler must not poison the baseline
+    assert wd.ewma < 0.2
+
+
+# ---------------------------------------------------------------------------
+# Elasticity
+# ---------------------------------------------------------------------------
+
+
+def test_scale_plan_prefers_tp():
+    assert scale_plan(256) == ((16, 16), ("data", "model"))
+    assert scale_plan(192) == ((12, 16), ("data", "model"))
+    assert scale_plan(24, prefer_tp=16) == ((3, 8), ("data", "model"))
+
+
+def test_validate_mesh_divisibility():
+    validate_mesh_for((16, 16), ("data", "model"),
+                      {"data": 256, "model": 4096})
+    with pytest.raises(ValueError):
+        validate_mesh_for((16, 16), ("data", "model"), {"model": 100})
+
+
+def test_remesh_engine_preserves_table(mesh):
+    """Scale tp 4 -> 2: every row must survive the re-shard byte-for-byte."""
+    m2 = make_mesh((4, 2), ("data", "model"))
+    eng, _ = engine_for_tables([200], dim=8, mesh=mesh, hot_fraction=0.05)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    dense_before = np.asarray(eng.to_dense(state))
+    eng2, state2 = remesh_engine(eng, m2, state)
+    dense_after = np.asarray(eng2.to_dense(state2))
+    np.testing.assert_allclose(dense_before, dense_after, rtol=0, atol=0)
+    assert eng2.cfg.n_shards == 2
+
+
+# ---------------------------------------------------------------------------
+# Pipeline + compression
+# ---------------------------------------------------------------------------
+
+
+def test_prefetcher_preserves_order():
+    it = iter(range(20))
+    pf = Prefetcher(({"x": np.asarray([i])} for i in range(20)), depth=4)
+    got = [int(b["x"][0]) for b in pf]
+    assert got == list(range(20))
+
+
+def test_compressed_psum_bf16_and_int8(mesh):
+    from jax.sharding import PartitionSpec as P
+    g = {"w": jnp.linspace(-1, 1, 64).reshape(8, 8)}
+
+    def block(gl):
+        red_none, _ = compressed_psum(gl, ("data",), "none")
+        red_bf16, _ = compressed_psum(gl, ("data",), "bf16")
+        red_int8, _ = compressed_psum(gl, ("data",), "int8",
+                                      error_fb=jax.tree.map(jnp.zeros_like, gl))
+        return red_none, red_bf16, red_int8
+
+    with mesh:
+        f = jax.shard_map(block, mesh=mesh,
+                          in_specs=({"w": P()},),
+                          out_specs=({"w": P()},) * 3, check_vma=False)
+        none, bf16, int8 = f(g)
+    want = np.asarray(g["w"]) * 2  # data axis size 2
+    np.testing.assert_allclose(np.asarray(none["w"]), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(bf16["w"]), want, rtol=2e-2,
+                               atol=2e-2)
+    np.testing.assert_allclose(np.asarray(int8["w"]), want, rtol=0.1,
+                               atol=0.1)
+
+
+def test_lm_data_learnable_structure():
+    from repro.configs import get_config, reduced
+    cfg = reduced(get_config("llama3.2-3b"))
+    b = next(lm_batches(cfg, 8, 32, 1))
+    # ~25% of positions copy t-2: verify the injected structure exists
+    toks = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    rep = (toks[:, 2:] == toks[:, :-2]).mean()
+    assert rep > 0.15

@@ -1,0 +1,119 @@
+"""simlab behaviour: the paper's mechanisms must hold directionally for any
+reasonable trace (these are the claims the reproduction rests on)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.traces import TraceConfig, TraceGenerator, flatten_trace
+from repro.simlab.devices import CostParams, HardwareParams
+from repro.simlab.simulator import (ALL_SYSTEMS, make_system, pifs,
+                                    e2e_speedup, simulate)
+from repro.simlab.tco import gpu_tco, pifs_tco, power_area_table
+
+
+@pytest.fixture(scope="module")
+def trace():
+    model = get_config("rmc4")
+    cfg = TraceConfig(n_rows=model.emb_num, n_tables=8, pooling=8,
+                      batch=256, seed=0)
+    g = TraceGenerator(cfg)
+    arr = np.stack([g.next_batch() for _ in range(6)])
+    return flatten_trace(arr.reshape(-1, 8, 8), model.emb_num), model
+
+
+def _run(trace, model, sys, hw=None, **kw):
+    hw = hw or HardwareParams()
+    return simulate(trace, model.emb_dim, model.pooling, sys, hw,
+                    n_rows_total=model.emb_num * model.n_tables, **kw)
+
+
+def test_system_ordering_matches_paper(trace):
+    """pond slowest, pifs fastest, beacon between pond_pm and pifs."""
+    flat, model = trace
+    hw = HardwareParams()
+    t = {n: _run(flat, model, make_system(n, hw)).total_us
+         for n in ALL_SYSTEMS}
+    assert t["pifs"] < t["recnmp"] < t["beacon"] < t["pond"]
+    assert t["pifs"] < t["pond_pm"] <= t["pond"] * 1.05
+
+
+def test_more_devices_help_pifs_not_pond(trace):
+    flat, model = trace
+    hw = HardwareParams()
+    p4 = _run(flat, model, make_system("pifs", hw), n_devices=4).total_us
+    p16 = _run(flat, model, make_system("pifs", hw), n_devices=16).total_us
+    assert p16 <= p4 * 1.03  # pc-bound: more devices never hurt
+    q4 = _run(flat, model, make_system("pond", hw), n_devices=4).total_us
+    q16 = _run(flat, model, make_system("pond", hw), n_devices=16).total_us
+    assert q16 > q4  # congestion makes host-centric WORSE with fan-out
+
+
+def test_buffer_and_pm_both_help(trace):
+    flat, model = trace
+    hw = HardwareParams()
+    full = _run(flat, model, pifs(hw)).total_us
+    no_buf = _run(flat, model, pifs(hw, buffer_kb=0)).total_us
+    no_pm = _run(flat, model, pifs(hw, pm=False)).total_us
+    assert full <= no_buf
+    assert full <= no_pm
+
+
+def test_ooo_gain_bounded(trace):
+    flat, model = trace
+    hw = HardwareParams()
+    with_ooo = _run(flat, model, pifs(hw, ooo=True)).total_us
+    without = _run(flat, model, pifs(hw, ooo=False)).total_us
+    assert 1.0 <= without / with_ooo <= 1.08   # paper: <= 7.3%
+
+
+def test_line_migration_cheaper_5x(trace):
+    flat, model = trace
+    hw = HardwareParams()
+    line = _run(flat, model, pifs(hw, migration_granularity="line"))
+    page = _run(flat, model, pifs(hw, migration_granularity="page"))
+    assert page.migration_cost_us / line.migration_cost_us == pytest.approx(
+        5.1, rel=1e-6)
+
+
+def test_uniform_trace_balances_devices():
+    model = get_config("rmc4")
+    cfg = TraceConfig(n_rows=model.emb_num, n_tables=8, pooling=8,
+                      batch=256, distribution="uniform", seed=0)
+    g = TraceGenerator(cfg)
+    arr = np.stack([g.next_batch() for _ in range(4)])
+    flat = flatten_trace(arr.reshape(-1, 8, 8), model.emb_num)
+    r = _run(flat, model, make_system("pifs", HardwareParams()))
+    assert r.device_imbalance < 1.25
+
+
+def test_e2e_speedup_amdahl():
+    assert e2e_speedup(4.0, 1.0) == pytest.approx(4.0)
+    assert e2e_speedup(4.0, 0.0) == pytest.approx(1.0)
+    assert 1.0 < e2e_speedup(4.0, 0.5) < 4.0
+
+
+def test_tco_pifs_cheaper_than_gpu():
+    for mem in (256.0, 2048.0):
+        p = pifs_tco(mem)
+        g = gpu_tco(mem, n_gpus=1)
+        assert g.total > p.total
+    pa = power_area_table()
+    assert pa["power_ratio"] == pytest.approx(2.72, abs=0.05)
+    assert pa["area_ratio"] == pytest.approx(2.02, abs=0.05)
+
+
+def test_drift_reduces_pm_capture():
+    """Hot-set drift must make profiled placement less effective — the
+    mechanism behind the paper's PM gains being modest."""
+    model = get_config("rmc4")
+
+    def capture(drift):
+        cfg = TraceConfig(n_rows=model.emb_num, n_tables=8, pooling=8,
+                          batch=256, drift_per_batch=drift, seed=0)
+        g = TraceGenerator(cfg)
+        arr = np.stack([g.next_batch() for _ in range(6)])
+        flat = flatten_trace(arr.reshape(-1, 8, 8), model.emb_num)
+        return _run(flat, model,
+                    make_system("pifs", HardwareParams())).frac_local_access
+
+    assert capture(0.0) > capture(0.4) + 0.05
