@@ -1,0 +1,157 @@
+"""SLS hot-path benchmark: the repo's first serving-perf baseline.
+
+Sweeps ``{impl} x {mode} x {B, L, D}`` on a real ``PIFSEmbeddingEngine``
+(8 fake CPU devices, dp=2 x tp=4 mesh), measuring per-lookup wall latency
+(p50/p90 over timed reps after warmup) and retrace behaviour of the
+compiled-lookup plan cache.  Two independent retrace probes:
+
+  * ``engine.plan_stats()`` — the engine's own jit-trace counter (fires once
+    per shape-signature trace; steady state must stay flat), and
+  * ``jax.monitoring`` compile events (``/jax/.../backend_compile``-style) —
+    an XLA-level cross-check counted per measurement phase.
+
+Also asserts the pallas datapath matches the jnp path **bit-for-bit in fp32**
+before timing anything (both accumulate in the same fixed l-order).
+
+Writes ``BENCH_sls.json``; schema documented in EXPERIMENTS.md §Perf.
+
+Caveat: on CPU containers the Pallas kernel runs in *interpret mode* — its
+absolute latency here reflects the interpreter, not TPU hardware; the numbers
+that transfer are the jnp baseline, the retrace counts (zero steady-state
+retraces is the point of the plan cache), and the sweep structure itself.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.sls_bench [--out BENCH_sls.json]
+[--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.pifs import engine_for_tables  # noqa: E402
+from repro.distributed.sharding import make_mesh  # noqa: E402
+
+MODES = ("pifs", "pond", "beacon")
+IMPLS = ("jnp", "pallas")
+# (B, L, D): batch, pooling factor, embedding dim — small enough for the
+# CPU interpreter, shaped like the paper's DLRM configs (G=2 tables).
+SWEEP = [(8, 4, 16), (8, 16, 16), (16, 8, 32), (8, 8, 64)]
+SWEEP_QUICK = [(8, 4, 16)]
+
+
+class CompileEventCounter:
+    """Counts XLA compile events via jax.monitoring between mark() calls."""
+
+    COMPILE_MARKERS = ("compile", "jit")
+
+    def __init__(self):
+        self.count = 0
+        jax.monitoring.register_event_listener(self._on_event)
+
+    def _on_event(self, event: str, **kwargs) -> None:
+        if any(m in event.lower() for m in self.COMPILE_MARKERS):
+            self.count += 1
+
+    def take(self) -> int:
+        c = self.count
+        self.count = 0
+        return c
+
+
+def bench_one(engine, state, idx, *, impl: str, mode: str, events,
+              reps: int, warmup: int = 2) -> dict:
+    engine.reset_plan_stats(clear_plans=True)  # cold start: warmup must trace
+    events.take()
+    for _ in range(warmup):
+        jax.block_until_ready(engine.lookup(state, idx, mode=mode, impl=impl))
+    warm_traces = engine.plan_stats()["traces"]
+    warm_compiles = events.take()
+
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.lookup(state, idx, mode=mode, impl=impl))
+        lat.append(time.perf_counter() - t0)
+    stats = engine.plan_stats()
+    return {
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p90_ms": float(np.percentile(lat, 90) * 1e3),
+        "warmup_traces": warm_traces,
+        "warmup_compile_events": warm_compiles,
+        "steady_traces": stats["traces"] - warm_traces,
+        "steady_compile_events": events.take(),
+        "lookups_timed": reps,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_sls.json")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--quick", action="store_true",
+                    help="single config smoke (CI)")
+    args = ap.parse_args()
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    events = CompileEventCounter()
+    sweep = SWEEP_QUICK if args.quick else SWEEP
+    results = []
+    for (B, L, D) in sweep:
+        eng, _ = engine_for_tables([4096, 2048], dim=D, mesh=mesh,
+                                   hot_fraction=0.05)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        idx = jax.random.randint(jax.random.PRNGKey(1), (B, 2, L), 0, 4096
+                                 ).astype(jnp.int32)
+
+        # correctness gate: pallas must match jnp bit-for-bit in fp32
+        for mode in MODES:
+            a = np.asarray(eng.lookup(state, idx, mode=mode, impl="jnp"))
+            b = np.asarray(eng.lookup(state, idx, mode=mode, impl="pallas"))
+            if not np.array_equal(a, b):
+                raise AssertionError(
+                    f"pallas != jnp (fp32 exact) for mode={mode} "
+                    f"B={B} L={L} D={D}: max|d|={np.abs(a - b).max()}")
+
+        for impl in IMPLS:
+            for mode in MODES:
+                r = bench_one(eng, state, idx, impl=impl, mode=mode,
+                              events=events, reps=args.reps)
+                r.update(impl=impl, mode=mode, B=B, L=L, D=D,
+                         bags_per_lookup=B * 2)
+                results.append(r)
+                print(f"impl={impl:6s} mode={mode:6s} B={B:3d} L={L:3d} "
+                      f"D={D:3d}  p50={r['p50_ms']:8.2f}ms "
+                      f"p90={r['p90_ms']:8.2f}ms  "
+                      f"steady_traces={r['steady_traces']}")
+                if r["steady_traces"]:
+                    raise AssertionError(
+                        "plan cache failed: steady-state retrace for "
+                        f"impl={impl} mode={mode} B={B} L={L} D={D}")
+
+    out = {
+        "bench": "sls_lookup",
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        "mesh": {"data": 2, "model": 4},
+        "fp32_exact_pallas_vs_jnp": True,
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {args.out} ({len(results)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ from repro.core.paging import (HOT_SHARD, PageTable, PagingConfig,
                                initial_page_table, locate,
                                placement_gather_indices)
 from repro.core.planner import PlannerConfig, plan
-from repro.distributed.sharding import MeshAxes, axes_for
+from repro.distributed.sharding import MeshAxes, axes_for, shard_map
 
 
 @jax.tree_util.register_pytree_node_class
@@ -74,6 +74,13 @@ class PIFSEmbeddingEngine:
         self.axes = axes or axes_for(mesh)
         self.planner = planner or PlannerConfig()
         self.dtype = dtype
+        # compiled-lookup plan registry: signature -> shard_map+jit closure,
+        # built once per (mode, combine, dp_shard, impl, shapes) and reused so
+        # steady-state serving never retraces (lru_cache-style, but explicit
+        # so plan_stats() can report hits/traces).
+        self._plans: dict = {}
+        self._trace_count = 0
+        self._plan_calls = 0
         if self.axes.tp_size(mesh) != paging.n_shards:
             raise ValueError(
                 f"paging.n_shards={paging.n_shards} != tp axis size "
@@ -159,7 +166,8 @@ class PIFSEmbeddingEngine:
     # ----------------------------------------------------------------- lookup
     def lookup(self, state: EngineState, indices: jax.Array,
                weights: Optional[jax.Array] = None, mode: str = "pifs",
-               combine: str = "psum", dp_shard: bool = True) -> jax.Array:
+               combine: str = "psum", dp_shard: bool = True,
+               impl: str = "jnp", block_l: int = 8) -> jax.Array:
         """Pooled lookup.
 
         indices: (B, G, L) int32 — B batch (sharded over dp), G bags per
@@ -168,21 +176,48 @@ class PIFSEmbeddingEngine:
         dim for combine='psum_scatter' (caller's consumer must accept that
         layout; it halves collective bytes).
         weights: optional (B, G, L).
+        impl: 'jnp' (gather + segment-sum; differentiable) or 'pallas'
+        (the bag-tiled masked-partial SLS kernel; serving fast path).
+
+        The shard_map+jit closure for each distinct
+        (mode, combine, dp_shard, impl, idx/weights shape+dtype) signature is
+        built once and cached — steady-state serving does zero retraces
+        (see ``plan_stats``).
         """
         if mode not in ("pifs", "pond", "beacon"):
             raise ValueError(f"unknown mode {mode!r}")
         if combine not in ("psum", "psum_scatter"):
             raise ValueError(f"unknown combine {combine!r}")
-        c, axes, mesh = self.cfg, self.axes, self.mesh
+        if impl not in ("jnp", "pallas"):
+            raise ValueError(f"unknown impl {impl!r}")
+        key = ("lookup", mode, combine, dp_shard, impl,
+               int(block_l) if impl == "pallas" else None,  # jnp ignores it
+               tuple(indices.shape), jnp.dtype(indices.dtype).name,
+               None if weights is None
+               else (tuple(weights.shape), jnp.dtype(weights.dtype).name))
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._build_lookup_plan(
+                mode=mode, combine=combine, dp_shard=dp_shard, impl=impl,
+                block_l=block_l, has_weights=weights is not None)
+            self._plans[key] = plan
+        self._plan_calls += 1
+        args = (state.cold, state.hot, state.page_to_shard,
+                state.page_to_slot, indices)
+        if weights is not None:
+            args = args + (weights,)
+        return plan(*args)
+
+    # ------------------------------------------------- compiled-lookup plans
+    def _build_lookup_plan(self, *, mode: str, combine: str, dp_shard: bool,
+                           impl: str, block_l: int, has_weights: bool):
+        """Build the shard_map + jit closure for one lookup signature."""
+        axes, mesh = self.axes, self.mesh
         dp, tp = axes.dp, axes.tp
         if not dp_shard:
             dp = ()
-        B, G, L = indices.shape
-
         idx_spec = P(dp and dp or None, None, None) if dp else P(None, None, None)
-        w_args = (weights,) if weights is not None else ()
-        w_specs = (idx_spec,) if weights is not None else ()
-
+        w_specs = (idx_spec,) if has_weights else ()
         if combine == "psum":
             out_spec = idx_spec
         else:
@@ -191,63 +226,93 @@ class PIFSEmbeddingEngine:
         def block(cold, hot, p2s, p2slot, idx, *w):
             wloc = w[0] if w else None
             return self._lookup_block(cold, hot, p2s, p2slot, idx, wloc,
-                                      mode=mode, combine=combine)
+                                      mode=mode, combine=combine, impl=impl,
+                                      block_l=block_l)
 
-        f = jax.shard_map(
+        f = shard_map(
             block, mesh=mesh,
             in_specs=(P(tp), P(), P(), P(), idx_spec) + w_specs,
             out_specs=out_spec, check_vma=False)
-        return f(state.cold, state.hot, state.page_to_shard,
-                 state.page_to_slot, indices, *w_args)
+
+        def traced(*args):
+            # python side effect fires once per jit trace — the probe behind
+            # plan_stats()['traces'] and the retrace tests/bench counters
+            self._trace_count += 1
+            return f(*args)
+
+        return jax.jit(traced)
+
+    def plan_stats(self) -> dict:
+        """Compiled-plan cache stats: plans built, jit traces, lookup calls."""
+        return {"plans": len(self._plans), "traces": self._trace_count,
+                "calls": self._plan_calls}
+
+    def reset_plan_stats(self, clear_plans: bool = False) -> None:
+        """Zero the trace/call counters; keeps compiled plans warm unless
+        ``clear_plans`` (clearing forces a retrace of every signature)."""
+        if clear_plans:
+            self._plans.clear()
+        self._trace_count = 0
+        self._plan_calls = 0
 
     def _lookup_block(self, cold, hot, p2s, p2slot, idx, weights, *,
-                      mode: str, combine: str):
+                      mode: str, combine: str, impl: str = "jnp",
+                      block_l: int = 8):
         """Per-device block: the fabric-switch Process Core."""
         c, axes = self.cfg, self.axes
         tp = axes.tp
         b, G, L = idx.shape
         nbags = b * G
-        flat = idx.reshape(-1)
-        seg = jnp.repeat(jnp.arange(nbags, dtype=jnp.int32), L)
-        wflat = None if weights is None else weights.reshape(-1)
+        bags = idx.reshape(nbags, L)
+        wbags = None if weights is None else weights.reshape(nbags, L)
 
         ps = c.page_size
-        page = flat // ps
-        offset = flat % ps
+        page = bags // ps
+        offset = bags % ps
         shard = p2s[page]
-        local_row = p2slot[page] * ps + offset
+        local_row = p2slot[page] * ps + offset                  # (nbags, L)
         my = jax.lax.axis_index(tp)
         owned = shard == my
         is_hot = shard == HOT_SHARD
 
         # ---- hot tier: replicated, zero-communication ----
-        hot_out = sls_ops.masked_partial_sls(
-            hot, local_row, is_hot, seg, nbags, wflat)          # (nbags, D)
+        hot_out = sls_ops.masked_partial_sls_dense(
+            hot, local_row, is_hot, wbags, impl=impl,
+            block_l=block_l)                                    # (nbags, D)
 
         # ---- cold tier ----
         if mode == "pond":
-            # raw rows cross the interconnect (communicate-then-reduce)
-            rows = sls_ops.masked_gather_rows(cold, local_row, owned)
-            if wflat is not None:
-                rows = rows * wflat[:, None].astype(rows.dtype)
+            # raw rows cross the interconnect (communicate-then-reduce):
+            # there is no pooling near the data in this baseline, so the
+            # kernel only serves the hot tier here.
+            seg = jnp.repeat(jnp.arange(nbags, dtype=jnp.int32), L)
+            rows = sls_ops.masked_gather_rows(
+                cold, local_row.reshape(-1), owned.reshape(-1))
+            if wbags is not None:
+                rows = rows * wbags.reshape(-1)[:, None].astype(rows.dtype)
             rows = jax.lax.psum(rows, tp)                        # (b*G*L, D)!
             cold_out = jax.ops.segment_sum(rows, seg, num_segments=nbags)
             out = cold_out + hot_out
             if combine == "psum_scatter":
-                tp_size = jax.lax.axis_size(tp)
+                tp_size = axes.tp_size(self.mesh)
+                if b % tp_size:
+                    raise ValueError(
+                        f"per-device batch ({b}) must divide tp ({tp_size}) "
+                        "for psum_scatter combine in pond mode")
                 out = jax.lax.dynamic_slice_in_dim(
                     out.reshape(b, G, -1), my * (b // tp_size), b // tp_size, 0)
                 return out
             return out.reshape(b, G, -1)
 
         # pifs / beacon: partial SLS near the data, pooled partials only
-        cold_part = sls_ops.masked_partial_sls(
-            cold, local_row, owned, seg, nbags, wflat)           # (nbags, D)
+        cold_part = sls_ops.masked_partial_sls_dense(
+            cold, local_row, owned, wbags, impl=impl,
+            block_l=block_l)                                     # (nbags, D)
         if combine == "psum":
             cold_sum = jax.lax.psum(cold_part, tp)
             return (cold_sum + hot_out).reshape(b, G, -1)
         # psum_scatter over the bag axis: each tp shard keeps its bag slice
-        tp_size = jax.lax.axis_size(tp)
+        tp_size = axes.tp_size(self.mesh)
         if nbags % tp_size:
             raise ValueError(f"bags ({nbags}) must divide tp ({tp_size}) "
                              "for psum_scatter combine")
@@ -263,18 +328,22 @@ class PIFSEmbeddingEngine:
         """Update the replicated page-access histogram (paper's profiler)."""
         c, axes = self.cfg, self.axes
         dp = axes.dp
-        idx_spec = P(dp, None, None) if dp else P(None, None, None)
+        key = ("observe", tuple(indices.shape), jnp.dtype(indices.dtype).name)
+        f = self._plans.get(key)
+        if f is None:
+            idx_spec = P(dp, None, None) if dp else P(None, None, None)
 
-        def block(counts, idx):
-            page = idx.reshape(-1) // c.page_size
-            local = jnp.zeros_like(counts).at[page].add(1.0)
-            if dp:
-                local = jax.lax.psum(local, dp)
-            return counts + local
+            def block(counts, idx):
+                page = idx.reshape(-1) // c.page_size
+                local = jnp.zeros_like(counts).at[page].add(1.0)
+                if dp:
+                    local = jax.lax.psum(local, dp)
+                return counts + local
 
-        f = jax.shard_map(block, mesh=self.mesh,
-                          in_specs=(P(), idx_spec), out_specs=P(),
-                          check_vma=False)
+            f = jax.jit(shard_map(block, mesh=self.mesh,
+                                  in_specs=(P(), idx_spec), out_specs=P(),
+                                  check_vma=False))
+            self._plans[key] = f
         return dataclasses.replace(state, counts=f(state.counts, indices))
 
     # ------------------------------------------------------- plan + migration

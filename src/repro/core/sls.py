@@ -54,6 +54,54 @@ def masked_partial_sls(local_storage: jax.Array, local_rows: jax.Array,
     return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
 
 
+def masked_partial_sls_dense(local_storage: jax.Array, local_rows: jax.Array,
+                             owned: jax.Array,
+                             weights: Optional[jax.Array] = None,
+                             impl: str = "jnp", block_l: int = 8,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """Dense-bag form of :func:`masked_partial_sls`.
+
+    local_rows/owned (B, L), optional weights (B, L) -> (B, D):
+    ``out[b] = sum_l owned[b,l] * w[b,l] * local_storage[local_rows[b,l]]``.
+
+    impl='jnp' is the differentiable gather+sum reference; impl='pallas'
+    dispatches to the bag-tiled masked-partial SLS kernel (serving fast path —
+    the engine's `shard_map` blocks run this near the data).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.masked_sls(
+            local_storage, local_rows, owned, weights,
+            out_dtype=local_storage.dtype, block_l=block_l,
+            interpret=interpret)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r}")
+    B, L = local_rows.shape
+    D = local_storage.shape[-1]
+    dtype = local_storage.dtype
+    if L == 0:
+        return jnp.zeros((B, D), dtype)
+    # One fused gather, then a sequential accumulate in the kernel's fixed
+    # l=0..L-1 order with the same add(mul(f, row)) structure — lookup
+    # numerics are *impl-invariant* (the pallas path matches this bit-for-bit
+    # in fp32), at the cost of ordered adds instead of one fused reduce.
+    # Differentiable (gather + scan -> scatter-add under AD), so training
+    # uses this path too.
+    safe_rows = jnp.where(owned, local_rows, 0)
+    rows = jnp.take(local_storage, safe_rows, axis=0)          # (B, L, D)
+    f = owned.astype(dtype)
+    if weights is not None:
+        f = f * weights.astype(dtype)
+
+    def step(carry, xs):
+        rows_l, f_l = xs
+        return carry + f_l[:, None] * rows_l, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((B, D), dtype),
+                          (rows.transpose(1, 0, 2), f.T))
+    return out
+
+
 def masked_gather_rows(local_storage: jax.Array, local_rows: jax.Array,
                        owned: jax.Array) -> jax.Array:
     """Pond-mode per-shard step: ship the *raw rows* (zeros where not owned).

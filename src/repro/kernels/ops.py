@@ -4,6 +4,13 @@ On this CPU container the kernels execute in interpret mode (the kernel body
 runs as Python/jnp on CPU); on TPU set ``interpret=False`` (the default picks
 by backend).  ``impl='jnp'`` falls back to the oracle — models use that path
 for fast CPU smoke tests, while tests sweep the pallas path against ref.
+
+Lane alignment: TPU tiles are (sublane, 128); embedding dims that are not a
+multiple of 128 are zero-padded here (table columns + output slice) before the
+kernel sees them, so the kernel itself always works on lane-aligned rows.
+Padding defaults to on for compiled TPU execution and off in interpret mode
+(where alignment buys nothing); production deployments should store tables
+pre-padded to avoid the per-call pad (see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
@@ -14,22 +21,58 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.interaction import dot_interaction_pallas
-from repro.kernels.sls import sls_pallas
+from repro.kernels.sls import masked_sls_pallas, sls_pallas
+
+LANES = 128
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def pad_to_lanes(table: jax.Array, pad_lanes: bool) -> jax.Array:
+    """Zero-pad the minor (D) dim up to the 128-lane boundary."""
+    D = table.shape[-1]
+    if not pad_lanes or D % LANES == 0:
+        return table
+    return jnp.pad(table, ((0, 0), (0, LANES - D % LANES)))
+
+
 def sls(table: jax.Array, indices: jax.Array,
         weights: Optional[jax.Array] = None, out_dtype=jnp.float32,
-        impl: str = "pallas", interpret: Optional[bool] = None) -> jax.Array:
+        impl: str = "pallas", interpret: Optional[bool] = None,
+        block_l: int = 8, pad_lanes: Optional[bool] = None) -> jax.Array:
+    """Pooled embedding lookup: indices (B, L) -> (B, D)."""
     if impl == "jnp":
         return ref.sls_ref(table, indices, weights, out_dtype)
     if interpret is None:
         interpret = _default_interpret()
-    return sls_pallas(table, indices, weights, out_dtype=out_dtype,
-                      interpret=interpret)
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    D = table.shape[-1]
+    out = sls_pallas(pad_to_lanes(table, pad_lanes), indices, weights,
+                     out_dtype=out_dtype, interpret=interpret,
+                     block_l=block_l)
+    return out[:, :D]
+
+
+def masked_sls(table: jax.Array, indices: jax.Array, owned: jax.Array,
+               weights: Optional[jax.Array] = None, out_dtype=jnp.float32,
+               impl: str = "pallas", interpret: Optional[bool] = None,
+               block_l: int = 8, pad_lanes: Optional[bool] = None
+               ) -> jax.Array:
+    """Masked partial SLS (the PIFS per-shard operator): (B, L) -> (B, D)."""
+    if impl == "jnp":
+        return ref.masked_sls_ref(table, indices, owned, weights, out_dtype)
+    if interpret is None:
+        interpret = _default_interpret()
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    D = table.shape[-1]
+    out = masked_sls_pallas(pad_to_lanes(table, pad_lanes), indices, owned,
+                            weights, out_dtype=out_dtype, interpret=interpret,
+                            block_l=block_l)
+    return out[:, :D]
 
 
 def dot_interaction(feats: jax.Array, self_interaction: bool = False,

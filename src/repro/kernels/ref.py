@@ -21,6 +21,24 @@ def sls_ref(table: jax.Array, indices: jax.Array,
     return rows.sum(axis=1)
 
 
+def masked_sls_ref(table: jax.Array, indices: jax.Array, owned: jax.Array,
+                   weights: Optional[jax.Array] = None,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """Masked partial SLS oracle (the PIFS per-shard operator, dense bags).
+
+    table: (V, D); indices/owned: (B, L); weights: optional (B, L).
+    out[b] = sum_l owned[b,l] * w[b,l] * table[idx[b,l]].  Non-owned entries
+    are remapped to row 0 before the gather (row 0 must exist) and zeroed by
+    the mask, matching the kernel's always-resident-line trick.
+    """
+    safe = jnp.where(owned, indices, 0)
+    rows = jnp.take(table, safe, axis=0).astype(out_dtype)      # (B, L, D)
+    w = owned.astype(out_dtype)
+    if weights is not None:
+        w = w * weights.astype(out_dtype)
+    return (rows * w[..., None]).sum(axis=1)
+
+
 def dot_interaction_ref(feats: jax.Array, self_interaction: bool = False
                         ) -> jax.Array:
     """DLRM pairwise-dot feature interaction oracle.

@@ -1,32 +1,38 @@
-"""Pallas TPU kernel for SparseLengthSum — the operator PIFS-Rec accelerates.
+"""Pallas TPU kernels for SparseLengthSum — the operator PIFS-Rec accelerates.
 
 TPU-native rethink of the paper's fabric-switch datapath (not a CUDA port):
 
-  * The embedding table stays in HBM ("CXL memory pool").  Rows are streamed
-    into VMEM one grid step at a time by the Pallas pipeline, with the *next*
-    row's DMA overlapping the current accumulate — the hardware double-buffer
-    plays the role of the paper's swap-register / out-of-order engine: row
-    arrival order never stalls the accumulator.
-  * Indices (and optional weights) ride in SMEM via scalar prefetch — the
-    analogue of the instruction-ingress registry: the index stream must be
-    resident before the table DMAs it drives can be issued
-    (PrefetchScalarGridSpec.num_scalar_prefetch=1).
-  * The accumulator lives in VMEM, written back once per bag (revisiting:
+  * The embedding table stays in HBM ("CXL memory pool") and is *not* streamed
+    by the automatic Pallas pipeline: each grid step manually DMAs the rows it
+    needs into a double-buffered VMEM scratch, so the *next* row's DMA overlaps
+    the current accumulate — the hardware double-buffer plays the role of the
+    paper's swap-register / out-of-order engine: row arrival order never stalls
+    the accumulator.
+  * Indices (and optional ownership mask / weights) ride in SMEM via scalar
+    prefetch — the analogue of the instruction-ingress registry: the index
+    stream must be resident before the table DMAs it drives can be issued
+    (PrefetchScalarGridSpec).
+  * The accumulator lives in VMEM, written back once per bag (revisiting: the
     out block index depends only on the bag id, so Pallas keeps it resident
-    across the L inner steps — the Accumulation Configuration Register).
+    across the inner tile steps — the Accumulation Configuration Register).
 
-Blocking: table block = (1, D) — one embedding row.  D is padded to the
-128-lane boundary by the caller for MXU/VPU alignment (16/32/64-dim recsys
-rows pack 8/4/2 rows per 128-lane tile on real hardware; we keep the simple
-1-row block and note the packing opportunity in EXPERIMENTS.md §Perf).
-VMEM working set per step = (1, D) row + (1, D) accumulator + next row's
-DMA buffer  ≈ 3*D*4 bytes — far below the ~16 MB/core VMEM budget, so the
-pipeline depth, not capacity, is the constraint.
+Blocking (bag-tiled): grid = (B, ceil(L / block_l)).  Each grid step owns one
+*tile* of ``block_l`` pooling entries of one bag and runs a double-buffered
+DMA loop over the tile's rows.  Compared with the old one-row-per-step
+(B, L) grid this cuts grid-dispatch overhead by ``block_l`` and keeps the
+accumulator revisit count at ``ceil(L / block_l)`` instead of ``L``.  Tail
+tiles (L % block_l != 0) are masked: out-of-range entries fold into weight 0
+and their DMA is clamped to the last valid entry.  D is padded to the 128-lane
+boundary by ``kernels/ops.py`` when targeting real hardware (see
+EXPERIMENTS.md §Perf).  VMEM working set per step = 2 scratch rows + the
+(1, D) accumulator ≈ 3*D*4 bytes — far below the ~16 MB/core VMEM budget.
 
-Ownership masking for the sharded engine: a shard that does not own a row
-folds the miss into weight=0 and remaps the index to 0 — the DMA still
-happens but targets a single always-resident line, mirroring how the paper's
-switch drops non-local candidates without stalling (section IV-C1).
+Ownership masking for the sharded engine (``masked_sls_pallas``): a shard
+that does not own a row folds the miss into weight=0 and remaps the index to
+row 0 — the DMA still happens but targets a single always-resident line,
+mirroring how the paper's switch drops non-local candidates without stalling
+(section IV-C1).  Semantics match ``core/sls.masked_partial_sls`` on dense
+(B, L) bags.
 """
 from __future__ import annotations
 
@@ -39,67 +45,121 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _sls_kernel_w(idx_ref, w_ref, table_blk, out_ref):
-    """Weighted gather-accumulate; grid = (B, L)."""
-    b = pl.program_id(0)
-    l = pl.program_id(1)
+def _make_sls_kernel(L: int, block_l: int, has_mask: bool, has_weights: bool):
+    """Build a bag-tiled SLS kernel body for a static (L, block_l, flags)."""
 
-    @pl.when(l == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+    def kernel(*refs):
+        # scalar-prefetch refs first (idx[, owned][, w]), then table/out/scratch
+        it = iter(refs)
+        idx_ref = next(it)
+        owned_ref = next(it) if has_mask else None
+        w_ref = next(it) if has_weights else None
+        table_ref = next(it)      # (V, D) in ANY/HBM — manually DMA'd
+        out_ref = next(it)        # (1, D) accumulator block, revisited per bag
+        scratch = next(it)        # (2, D) VMEM double buffer
+        sem = next(it)            # (2,) DMA semaphores
 
-    w = w_ref[b, l].astype(out_ref.dtype)
-    out_ref[...] += w * table_blk[...].astype(out_ref.dtype)
+        b = pl.program_id(0)
+        t = pl.program_id(1)
+        l0 = t * block_l
+
+        @pl.when(t == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        def row_dma(slot, i):
+            # clamp tail-tile reads into range; masked-out rows remap to the
+            # always-resident line 0 (their contribution is zeroed below)
+            l = jnp.minimum(l0 + i, L - 1)
+            r = idx_ref[b, l]
+            if has_mask:
+                r = jnp.where(owned_ref[b, l] != 0, r, 0)
+            return pltpu.make_async_copy(table_ref.at[r], scratch.at[slot],
+                                         sem.at[slot])
+
+        row_dma(0, 0).start()
+
+        def body(i, carry):
+            slot = i % 2
+
+            @pl.when(i + 1 < block_l)
+            def _prefetch_next():
+                row_dma((i + 1) % 2, i + 1).start()
+
+            row_dma(slot, i).wait()
+            l = l0 + i
+            lc = jnp.minimum(l, L - 1)
+            f = (l < L).astype(out_ref.dtype)
+            if has_mask:
+                f = f * (owned_ref[b, lc] != 0).astype(out_ref.dtype)
+            if has_weights:
+                f = f * w_ref[b, lc].astype(out_ref.dtype)
+            out_ref[...] += f * scratch[slot][None, :].astype(out_ref.dtype)
+            return carry
+
+        jax.lax.fori_loop(0, block_l, body, 0)
+
+    return kernel
 
 
-def _sls_kernel(idx_ref, table_blk, out_ref):
-    """Unweighted gather-accumulate; grid = (B, L)."""
-    l = pl.program_id(1)
-
-    @pl.when(l == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    out_ref[...] += table_blk[...].astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
-def sls_pallas(table: jax.Array, indices: jax.Array,
-               weights: Optional[jax.Array] = None,
-               out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
-    """SLS via pl.pallas_call. indices: (B, L) int32 -> (B, D) pooled."""
+def _sls_call(table: jax.Array, indices: jax.Array,
+              owned: Optional[jax.Array], weights: Optional[jax.Array],
+              out_dtype, interpret: bool, block_l: int) -> jax.Array:
     B, L = indices.shape
     V, D = table.shape
-    grid = (B, L)
+    if B == 0 or L == 0:
+        return jnp.zeros((B, D), out_dtype)
+    block_l = max(1, min(block_l, L))
+    grid = (B, pl.cdiv(L, block_l))
 
-    def table_map(b, l, idx_ref):
-        return (idx_ref[b, l], 0)
+    prefetch = [indices.astype(jnp.int32)]
+    if owned is not None:
+        prefetch.append(owned.astype(jnp.int32))
+    if weights is not None:
+        prefetch.append(weights)
 
-    def out_map(b, l, idx_ref):
+    def out_map(b, t, *prefetch_refs):
         return (b, 0)
 
-    if weights is not None:
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),     # weights
-                      pl.BlockSpec((1, D), table_map)],          # one row/step
-            out_specs=pl.BlockSpec((1, D), out_map),
-        )
-        return pl.pallas_call(
-            _sls_kernel_w, grid_spec=grid_spec,
-            out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
-            interpret=interpret,
-        )(indices, weights, table)
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=len(prefetch),
         grid=grid,
-        in_specs=[pl.BlockSpec((1, D), table_map)],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],   # table stays in HBM
         out_specs=pl.BlockSpec((1, D), out_map),
+        scratch_shapes=[pltpu.VMEM((2, D), table.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
     )
+    kernel = _make_sls_kernel(L, block_l, has_mask=owned is not None,
+                              has_weights=weights is not None)
     return pl.pallas_call(
-        _sls_kernel, grid_spec=grid_spec,
+        kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
         interpret=interpret,
-    )(indices, table)
+    )(*prefetch, table)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "interpret", "block_l"))
+def sls_pallas(table: jax.Array, indices: jax.Array,
+               weights: Optional[jax.Array] = None,
+               out_dtype=jnp.float32, interpret: bool = True,
+               block_l: int = 8) -> jax.Array:
+    """SLS via pl.pallas_call. indices: (B, L) int32 -> (B, D) pooled."""
+    return _sls_call(table, indices, None, weights, out_dtype, interpret,
+                     block_l)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "interpret", "block_l"))
+def masked_sls_pallas(table: jax.Array, indices: jax.Array, owned: jax.Array,
+                      weights: Optional[jax.Array] = None,
+                      out_dtype=jnp.float32, interpret: bool = True,
+                      block_l: int = 8) -> jax.Array:
+    """Masked partial SLS: out[b] = sum_l owned[b,l]*w[b,l]*table[idx[b,l]].
+
+    The per-shard operator of the PIFS engine: ``owned`` marks the pooling
+    entries whose rows live on this shard; everything else contributes zero
+    (and its gather is remapped to row 0, which must exist).
+    """
+    return _sls_call(table, indices, owned, weights, out_dtype, interpret,
+                     block_l)

@@ -25,6 +25,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LMConfig
+from repro.distributed.sharding import shard_map
 from repro.models.params import Spec
 
 
@@ -162,7 +163,7 @@ def seq_parallel_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             q_loc, k_full, v_full, causal=causal, scale=scale,
             q_chunk=min(512, s_loc), q_offset=my * s_loc)
 
-    return jax.shard_map(block, mesh=mesh,
+    return shard_map(block, mesh=mesh,
                          in_specs=(b_spec, b_spec, b_spec),
                          out_specs=b_spec, check_vma=False)(q, k, v)
 
@@ -276,7 +277,7 @@ def gqa_decode(p: dict, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
         return out, k_c, v_c
 
     qspec = P(dp, None, None, None) if dp else P(None, None, None, None)
-    out, k_c, v_c = jax.shard_map(
+    out, k_c, v_c = shard_map(
         block, mesh=mesh,
         in_specs=(qspec, bspec, bspec, cspec, cspec, P()),
         out_specs=(qspec, cspec, cspec), check_vma=False,
@@ -407,7 +408,7 @@ def mla_decode(p: dict, x: jax.Array, cache: Tuple[jax.Array, jax.Array],
         out_lat = num / jnp.maximum(l[..., None], 1e-30)  # (b, H, r)
         return out_lat, ckv, krope
 
-    out_lat, ckv_c, kr_c = jax.shard_map(
+    out_lat, ckv_c, kr_c = shard_map(
         block, mesh=mesh,
         in_specs=(bspec3, bspec3, bspec2, bspec2, cspec, cspec, P()),
         out_specs=(bspec3, cspec, cspec), check_vma=False,

@@ -32,6 +32,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import GNNConfig
+from repro.distributed.sharding import shard_map
 from repro.models.params import Spec
 
 
@@ -115,7 +116,7 @@ def full_forward(params: dict, feats: jax.Array, edges: jax.Array,
     espec = P(dp, None) if dp else P(None, None)
     h = feats
     for i, lp in enumerate(params["layers"]):
-        neigh = jax.shard_map(
+        neigh = shard_map(
             agg_block, mesh=mesh, in_specs=(P(tp, None), espec),
             out_specs=P(tp, None), check_vma=False)(h, edges)
         h = _sage_combine(lp, h, neigh, last=i == cfg.n_layers - 1)
@@ -144,7 +145,7 @@ def sharded_feature_gather(feats: jax.Array, ids: jax.Array, mesh: Mesh
         rows = rows * owned.astype(rows.dtype)[..., None]
         return jax.lax.psum(rows, tp)
 
-    return jax.shard_map(block, mesh=mesh, in_specs=(P(tp, None), idspec),
+    return shard_map(block, mesh=mesh, in_specs=(P(tp, None), idspec),
                          out_specs=(P(dp, None) if dp else P(None, None)),
                          check_vma=False)(feats, ids.reshape(-1))
 

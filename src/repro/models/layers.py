@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
 from repro.models.params import Spec
 
 
@@ -88,7 +89,7 @@ def ffn_apply_sharded(p: dict, x: jax.Array, act: str, mesh, dp, tp
 
     in_specs = (xspec,) + tuple(
         wspec_dn if n in ("down", "out") else wspec_up for n in names)
-    return jax.shard_map(block, mesh=mesh, in_specs=in_specs,
+    return shard_map(block, mesh=mesh, in_specs=in_specs,
                          out_specs=xspec, check_vma=False)(
         x, *[p[n] for n in names])
 

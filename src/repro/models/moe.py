@@ -35,6 +35,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LMConfig, MoEConfig
+from repro.distributed.sharding import shard_map
 from repro.models.params import Spec
 
 
@@ -98,7 +99,7 @@ def moe_apply(p: dict, x: jax.Array, cfg: LMConfig, mesh: Mesh, dp, tp
     block = functools.partial(_moe_block, cfg=cfg, ep=ep, tp=tp,
                               ep_size=ep_size, tp_size=tp_size, E_loc=E_loc,
                               pod=pod)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         block, mesh=mesh,
         in_specs=(xspec, P(), ep_wspec, ep_wspec, ep_wspec),
         out_specs=(xspec, P()), check_vma=False,

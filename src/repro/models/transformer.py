@@ -32,6 +32,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LMConfig
+from repro.distributed.sharding import shard_map
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models.layers import (ffn_apply, ffn_apply_sharded, ffn_specs,
@@ -384,7 +385,7 @@ def embed_tokens(p: dict, tokens: jax.Array, cfg: LMConfig, mesh: Mesh
         rows = jnp.where(owned[..., None], rows, 0)
         return jax.lax.psum(rows, tp)
 
-    return jax.shard_map(
+    return shard_map(
         block, mesh=mesh, in_specs=(P(tp, None), tspec),
         out_specs=P(dp if dp else None, None, None), check_vma=False,
     )(p["embed"], tokens)
@@ -456,7 +457,7 @@ def _xent_vocab_parallel(logits: jax.Array, labels: jax.Array, mesh: Mesh
         gold = jax.lax.psum(jnp.where(owned, picked, 0.0), tp)
         return jnp.log(se) + m - gold
 
-    nll = jax.shard_map(block, mesh=mesh, in_specs=(lspec, yspec),
+    nll = shard_map(block, mesh=mesh, in_specs=(lspec, yspec),
                         out_specs=yspec, check_vma=False)(logits, labels)
     return nll.mean()
 

@@ -40,6 +40,87 @@ def test_sls_kernel_weighted(B, L, V, D):
                                atol=1e-5)
 
 
+@pytest.mark.parametrize("B,L,V,D,block_l", [
+    (8, 8, 256, 64, 8),       # exact tiling: L == block_l
+    (8, 8, 256, 64, 3),       # tail tile: L % block_l = 2
+    (4, 9, 128, 32, 4),       # tail tile of 1
+    (2, 5, 64, 24, 16),       # block_l > L (clamped to one tile)
+    (3, 7, 100, 130, 4),      # odd D, non-128-multiple
+    (4, 6, 64, 16, 1),        # degenerate one-row tiles
+])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_masked_sls_kernel_matches_ref(B, L, V, D, block_l, weighted):
+    """Masked-partial kernel vs oracle across blocking edge cases."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(B * L + D), 4)
+    table = jax.random.normal(k1, (V, D))
+    idx = jax.random.randint(k2, (B, L), 0, V).astype(jnp.int32)
+    owned = jax.random.bernoulli(k3, 0.5, (B, L))
+    w = jax.random.uniform(k4, (B, L)) if weighted else None
+    out = ops.masked_sls(table, idx, owned, w, interpret=True,
+                         block_l=block_l)
+    want = ref.masked_sls_ref(table, idx, owned, w)
+    assert out.shape == (B, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_l", [1, 3, 8, 16])
+def test_sls_kernel_bag_tiling_invariant(block_l):
+    """Pooling result must not depend on the tile size (fixed l order)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    table = jax.random.normal(k1, (128, 48))
+    idx = jax.random.randint(k2, (6, 11), 0, 128).astype(jnp.int32)
+    w = jax.random.uniform(k3, (6, 11))
+    base = ops.sls(table, idx, w, interpret=True, block_l=11)
+    out = ops.sls(table, idx, w, interpret=True, block_l=block_l)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+def test_masked_sls_empty_and_full_masks():
+    """Empty bags (all entries masked out) pool to exactly zero."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    table = jax.random.normal(k1, (64, 32))
+    idx = jax.random.randint(k2, (4, 6), 0, 64).astype(jnp.int32)
+    none = jnp.zeros((4, 6), bool)
+    out = ops.masked_sls(table, idx, none, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 32)))
+    # mask rows 2..: only a *sub-bag* survives
+    part = jnp.asarray([[True] * 2 + [False] * 4] * 4)
+    out2 = ops.masked_sls(table, idx, part, interpret=True)
+    want = ref.sls_ref(table, idx[:, :2])
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # all-owned mask degenerates to plain SLS
+    out3 = ops.masked_sls(table, idx, jnp.ones((4, 6), bool), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out3),
+                                  np.asarray(ops.sls(table, idx,
+                                                     interpret=True)))
+
+
+def test_sls_zero_length_bags():
+    table = jnp.ones((8, 16))
+    idx = jnp.zeros((4, 0), jnp.int32)
+    out = ops.sls(table, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 16)))
+    outm = ops.masked_sls(table, idx, jnp.zeros((4, 0), bool), interpret=True)
+    np.testing.assert_array_equal(np.asarray(outm), np.zeros((4, 16)))
+
+
+@pytest.mark.parametrize("D", [16, 100, 130])
+def test_sls_lane_padding_is_transparent(D):
+    """Forcing 128-lane padding must not change results or shapes."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(D), 3)
+    table = jax.random.normal(k1, (64, D))
+    idx = jax.random.randint(k2, (5, 4), 0, 64).astype(jnp.int32)
+    owned = jax.random.bernoulli(k3, 0.7, (5, 4))
+    padded = ops.pad_to_lanes(table, pad_lanes=True)
+    assert padded.shape[1] % ops.LANES == 0 or D % ops.LANES == 0
+    a = ops.masked_sls(table, idx, owned, interpret=True, pad_lanes=True)
+    b = ops.masked_sls(table, idx, owned, interpret=True, pad_lanes=False)
+    assert a.shape == b.shape == (5, D)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("B,F,D", [
     (8, 4, 16), (16, 8, 32), (128, 27, 16), (32, 9, 64),
 ])

@@ -119,6 +119,61 @@ def test_planner_sticky_when_balanced():
     assert stats["moved_fraction"] < 0.1
 
 
+@pytest.mark.parametrize("mode", ["pifs", "pond", "beacon"])
+@pytest.mark.parametrize("combine", ["psum", "psum_scatter"])
+def test_pallas_impl_agrees_with_jnp_exactly(engine, mesh, mode, combine):
+    """The kernel datapath must match the jnp path bit-for-bit in fp32:
+    both accumulate in the same fixed l-order (impl-invariance)."""
+    state = engine.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (8, 2, 4))
+    with mesh:
+        a = engine.lookup(state, idx, mode=mode, combine=combine, impl="jnp")
+        b = engine.lookup(state, idx, mode=mode, combine=combine,
+                          impl="pallas")
+        aw = engine.lookup(state, idx, weights=w, mode=mode, combine=combine,
+                           impl="jnp")
+        bw = engine.lookup(state, idx, weights=w, mode=mode, combine=combine,
+                           impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(aw), np.asarray(bw))
+    # and it is still the right answer
+    want = _ref_lookup(engine, state, idx)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_lookup_plan_cache_compiles_once(engine, mesh, impl):
+    """Repeated lookups of one signature must trace/compile exactly once;
+    new signatures add exactly one plan each."""
+    state = engine.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    engine.reset_plan_stats()
+    with mesh:
+        outs = [np.asarray(engine.lookup(state, idx, impl=impl))
+                for _ in range(5)]
+    stats = engine.plan_stats()
+    assert stats == {"plans": 1, "traces": 1, "calls": 5}
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+    # a different shape is a new plan — but still exactly one more trace
+    idx2 = idx[:, :, :2]
+    with mesh:
+        engine.lookup(state, idx2, impl=impl)
+        engine.lookup(state, idx2, impl=impl)
+    assert engine.plan_stats() == {"plans": 2, "traces": 2, "calls": 7}
+    # weighted lookups and mode changes key separate plans
+    w = jax.random.uniform(jax.random.PRNGKey(2), (8, 2, 4))
+    with mesh:
+        engine.lookup(state, idx, weights=w, impl=impl)
+        engine.lookup(state, idx, mode="pond", impl=impl)
+    assert engine.plan_stats()["plans"] == 4
+    assert engine.plan_stats()["traces"] == 4
+
+
 def test_psum_scatter_combine(engine, mesh):
     state = engine.init_state(jax.random.PRNGKey(0))
     # bags per device must divide tp=4: B=8 over dp=2 -> 4 local x G=2 = 8 bags

@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.hot_cache import FIFOCache, HTRCache, LRUCache
 from repro.core.paging import (PagingConfig, initial_page_table, locate,

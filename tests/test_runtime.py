@@ -11,7 +11,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.pifs import engine_for_tables
 from repro.data.pipeline import Prefetcher
 from repro.data.synth import lm_batches
-from repro.distributed.sharding import make_mesh
+from repro.distributed.sharding import make_mesh, shard_map
 from repro.optim.compression import compressed_psum, init_error_feedback
 from repro.runtime.elastic import remesh_engine, scale_plan, validate_mesh_for
 from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
@@ -181,7 +181,7 @@ def test_compressed_psum_bf16_and_int8(mesh):
         return red_none, red_bf16, red_int8
 
     with mesh:
-        f = jax.shard_map(block, mesh=mesh,
+        f = shard_map(block, mesh=mesh,
                           in_specs=({"w": P()},),
                           out_specs=({"w": P()},) * 3, check_vma=False)
         none, bf16, int8 = f(g)
