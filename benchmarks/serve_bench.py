@@ -1,0 +1,236 @@
+"""Serving benchmark: deadline-aware dynamic batcher vs the fixed-batch
+baseline at equal offered load, on a real PIFSEmbeddingEngine.
+
+The paper's headline claim is *online-inference latency under concurrent
+production-style access streams*; this bench measures the quantities that
+regime is judged by — p50/p99/p99.9 latency, sustained QPS, SLO-violation
+rate, batch occupancy — for two batching policies over the same engine,
+the same compiled serve step, and the **same arrival stream** (same seed):
+
+  * ``dynamic`` — the deadline-aware shape-bucket micro-batcher
+    (repro.serving.batcher.DynamicBatcher), and
+  * ``fixed``   — the old serve-loop policy (wait for a full fixed batch).
+
+Offered load is calibrated against the measured capacity of the largest
+bucket (``frac * B_max / service(B_max)``), so the comparison is at an
+apples-to-apples utilization on any host.  Each run sweeps load regimes;
+hard gates:
+
+  * zero steady-state retraces (``engine.plan_stats()`` delta stays 0
+    across every shape bucket after warmup, for both policies, in every
+    regime);
+  * **trough** regime (sub-saturation, where fixed-batch fill time
+    dominates the tail): dynamic p99 < fixed p99 at equal offered load —
+    the structural win of deadline-aware flushing;
+  * **sustained** regime (both policies serve full buckets; the tail
+    difference there is measurement noise): dynamic must sustain >= 80 %
+    of the offered QPS.
+
+Writes ``BENCH_serve.json``; schema documented in EXPERIMENTS.md §Serving.
+
+Service times are real measured device executions (interpret-mode caveat
+from BENCH_sls applies to pallas impl on CPU); arrivals/queueing run on
+the virtual clock, which is what makes tail-latency comparisons meaningful
+on CPU containers.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+[--impl pallas] [--out BENCH_serve.json]``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.distributed.sharding import make_mesh  # noqa: E402
+from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
+                           BindingExecutor, Bucket, DynamicBatcher,
+                           FixedBatcher, LoadConfig, OpenLoopSource,
+                           RuntimeConfig, ServingRuntime, bind_model,
+                           dummy_request_factory, make_padder,
+                           request_stream)
+
+
+def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
+    """One (policy, arrival-stream) serving run over a warmed binding."""
+    runtime = ServingRuntime(BindingExecutor(binding), batcher,
+                             make_padder(cfg), runtime_cfg)
+    runtime.warmup(dummy_request_factory(cfg))   # no-op cost once plans warm
+    binding.reset_plan_stats()
+    warm_replans = binding.replans
+    summary = runtime.run(OpenLoopSource(request_stream(cfg, load)))
+    stats = binding.plan_stats()
+    summary["steady_traces"] = stats["traces"]
+    summary["replans"] = binding.replans - warm_replans
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--arch", default="rmc1")
+    ap.add_argument("--requests", type=int, default=800)
+    ap.add_argument("--load-frac", type=float, default=0.5,
+                    help="sustained-regime offered load as a fraction of "
+                         "measured capacity")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="SLO budget; 0 = auto (5x largest-bucket service)")
+    ap.add_argument("--mode", default="pifs",
+                    choices=["pifs", "pond", "beacon"])
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--block-l", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI configuration (fewer requests/buckets)")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    mesh = make_mesh((2, 4), ("data", "model"))
+
+    # Regimes: the tail-latency gate applies where the policies differ
+    # *structurally* (sub-saturation load, where fixed-batch fill time
+    # dominates the tail); at sustained load both policies serve full
+    # buckets and the comparison is noise — there we gate throughput.
+    if args.smoke:
+        batch_sizes, poolings = (8, 16), (cfg.pooling,)
+        n_requests = 160
+        regimes = [
+            dict(label="trough", process="poisson", frac=0.12,
+                 gate_p99=True, gate_qps=False),
+            # 0.4, not 0.5: shared CI runners execute slower than the
+            # calibration pass, and the 0.8 sustain gate needs headroom
+            dict(label="sustained", process="poisson", frac=0.4,
+                 gate_p99=False, gate_qps=True),
+        ]
+    else:
+        batch_sizes = (8, 16, 32)
+        poolings = tuple(sorted({max(1, cfg.pooling // 2), cfg.pooling}))
+        n_requests = args.requests
+        regimes = [
+            dict(label="trough", process="poisson", frac=0.12,
+                 gate_p99=True, gate_qps=False),
+            dict(label="sustained", process="poisson", frac=args.load_frac,
+                 gate_p99=False, gate_qps=True),
+            dict(label="bursty", process="bursty", frac=0.4,
+                 gate_p99=False, gate_qps=False),
+        ]
+
+    binding = bind_model(cfg, mesh, mode=args.mode, impl=args.impl,
+                         block_l=args.block_l)
+    bat_cfg = BatcherConfig(batch_sizes=batch_sizes, poolings=poolings)
+    fixed_bucket = Bucket(batch_sizes[-1], poolings[-1])
+    runtime_cfg = RuntimeConfig(observe_every=4, replan_every=32)
+
+    with mesh:
+        # calibrate: warm all buckets once, read the largest bucket's
+        # steady service time off the service model
+        calib = ServingRuntime(BindingExecutor(binding),
+                               DynamicBatcher(bat_cfg), make_padder(cfg),
+                               runtime_cfg)
+        warm = calib.warmup(dummy_request_factory(cfg))
+        # calibrate the largest bucket's service time as a median over
+        # several steady executions (a single sample is too noisy on
+        # shared CPU hosts to anchor offered load on)
+        factory = dummy_request_factory(cfg)
+        cal_batch = make_padder(cfg)(
+            [factory(i, fixed_bucket.pooling)
+             for i in range(fixed_bucket.batch)], fixed_bucket)
+        ex = BindingExecutor(binding)
+        svc_max = float(np.median(
+            [ex.run_batch(fixed_bucket, cal_batch) for _ in range(5)]))
+        calib.service_model.update(fixed_bucket, svc_max)
+        capacity_qps = fixed_bucket.batch / svc_max
+        # auto SLO at 5 service times: both the dynamic deadline-bound tail
+        # (~slo) and the fixed-batch fill tail (~svc/frac) scale with the
+        # measured service time, so the trough-regime comparison is robust
+        # to calibration error
+        slo_ms = args.slo_ms or 5.0 * svc_max * 1e3
+        # coalescing-wait cap: ~1.5 service times (waiting longer than that
+        # buys occupancy the latency budget can't afford), never more than
+        # half the SLO budget
+        max_wait_ms = min(slo_ms / 2, max(2.0, 1.5 * svc_max * 1e3))
+        print(f"capacity ~{capacity_qps:.0f} qps "
+              f"(service({fixed_bucket.batch}x{fixed_bucket.pooling}) = "
+              f"{svc_max * 1e3:.2f} ms), slo {slo_ms:.1f} ms, "
+              f"coalesce cap {max_wait_ms:.1f} ms")
+
+        runs: dict = {}
+        for regime in regimes:
+            offered_qps = regime["frac"] * capacity_qps
+            arrival = ArrivalConfig(
+                rate_qps=offered_qps, process=regime["process"], seed=7,
+                burst_factor=4.0, mean_burst_s=0.05)
+            load = LoadConfig(
+                n_requests=n_requests, arrival=arrival, slo_ms=slo_ms,
+                poolings=poolings if len(poolings) > 1 else (),
+                seed=7)
+            dyn_cfg = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
+            dyn = run_policy(binding, cfg, DynamicBatcher(dyn_cfg), load,
+                             runtime_cfg)
+            fix = run_policy(binding, cfg,
+                             FixedBatcher(fixed_bucket.batch,
+                                          fixed_bucket.pooling),
+                             load, runtime_cfg)
+            label = regime["label"]
+            for name, r in (("dynamic", dyn), ("fixed", fix)):
+                print(f"[{label:9s}] {name:8s} "
+                      f"offered={offered_qps:7.1f} qps={r['qps']:8.1f} "
+                      f"p50={r['p50_ms']:7.2f} p99={r['p99_ms']:8.2f} "
+                      f"p99.9={r['p99.9_ms']:8.2f} "
+                      f"slo_viol={r['slo_violation_rate']:.3f} "
+                      f"occ={r['batch_occupancy_mean']:.2f} "
+                      f"steady_traces={r['steady_traces']}")
+                if r["steady_traces"]:
+                    raise AssertionError(
+                        f"plan cache failed: steady-state retrace in "
+                        f"{name}/{label} serving run")
+            if regime["gate_p99"] and dyn["p99_ms"] >= fix["p99_ms"]:
+                raise AssertionError(
+                    f"dynamic batcher p99 ({dyn['p99_ms']:.2f} ms) not "
+                    f"below fixed-batch p99 ({fix['p99_ms']:.2f} ms) in "
+                    f"the {label} regime at {offered_qps:.0f} qps")
+            if regime["gate_qps"] and dyn["qps"] < 0.8 * offered_qps:
+                raise AssertionError(
+                    f"dynamic batcher did not sustain offered load in "
+                    f"{label}: {dyn['qps']:.1f} qps vs {offered_qps:.1f}")
+            runs[label] = {"process": regime["process"],
+                           "offered_qps": offered_qps,
+                           "gate_p99": regime["gate_p99"],
+                           "gate_qps": regime["gate_qps"],
+                           "dynamic": dyn, "fixed": fix}
+
+    out = {
+        "bench": "serve",
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        "mesh": {"data": 2, "model": 4},
+        "arch": args.arch,
+        "mode": args.mode,
+        "impl": args.impl,
+        "block_l": args.block_l,
+        "batch_sizes": list(batch_sizes),
+        "poolings": list(poolings),
+        "warmup_service_s": warm,
+        "capacity_qps": capacity_qps,
+        "slo_ms": slo_ms,
+        "max_wait_ms": max_wait_ms,
+        "n_requests": n_requests,
+        "runs": runs,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

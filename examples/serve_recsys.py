@@ -1,8 +1,12 @@
-"""Online-serving example: batched DCN-v2 CTR inference with the PIFS engine
-doing live page management (observe -> re-plan -> migrate between batches,
-with placement-invariant lookups so no query ever blocks).
+"""Online-serving example: DCN-v2 CTR inference through the
+``repro.serving`` runtime — Poisson arrivals, deadline-aware dynamic
+micro-batching into shape buckets (one compile each, zero steady-state
+retraces), and live page management folded between micro-batches.
+
+Compares pifs vs pond tail latency at the same offered load.
 
 Run:  PYTHONPATH=src python examples/serve_recsys.py [--requests 2048]
+      [--impl pallas --block-l 8] [--qps 200]
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -11,22 +15,37 @@ import argparse
 
 from repro.configs import get_config, reduced
 from repro.distributed.sharding import make_mesh
-from repro.launch.serve import serve_loop
+from repro.launch.serve import serve_offered_load
+from repro.serving import ArrivalConfig, LoadConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dcn-v2")
     ap.add_argument("--requests", type=int, default=2048)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--qps", type=float, default=200.0)
+    ap.add_argument("--slo-ms", type=float, default=50.0)
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--block-l", type=int, default=8)
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "uniform"])
     args = ap.parse_args()
 
     mesh = make_mesh((2, 4), ("data", "model"))
     cfg = reduced(get_config(args.arch))
+    load = LoadConfig(
+        n_requests=args.requests,
+        arrival=ArrivalConfig(rate_qps=args.qps, process=args.arrival),
+        slo_ms=args.slo_ms)
     for mode in ("pifs", "pond"):
-        out = serve_loop(cfg, mesh, args.requests, args.batch, mode=mode)
+        out = serve_offered_load(cfg, mesh, load, mode=mode, impl=args.impl,
+                                 block_l=args.block_l)
         print(f"{args.arch} [{mode:5s}] served={out['served']} "
-              f"p50={out['p50_ms']:.2f}ms p99={out['p99_ms']:.2f}ms")
+              f"qps={out['qps']:.1f} p50={out['p50_ms']:.2f}ms "
+              f"p99={out['p99_ms']:.2f}ms "
+              f"slo_viol={out['slo_violation_rate']:.3f} "
+              f"occupancy={out['batch_occupancy_mean']:.2f} "
+              f"steady_traces={out['steady_traces']}")
 
 
 if __name__ == "__main__":

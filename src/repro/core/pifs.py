@@ -79,6 +79,7 @@ class PIFSEmbeddingEngine:
         # steady-state serving never retraces (lru_cache-style, but explicit
         # so plan_stats() can report hits/traces).
         self._plans: dict = {}
+        self._migrate_plan = None
         self._trace_count = 0
         self._plan_calls = 0
         if self.axes.tp_size(mesh) != paging.n_shards:
@@ -324,27 +325,40 @@ class PIFSEmbeddingEngine:
         return out.reshape(b // tp_size, G, -1)
 
     # ---------------------------------------------------------------- observe
-    def observe(self, state: EngineState, indices: jax.Array) -> EngineState:
-        """Update the replicated page-access histogram (paper's profiler)."""
+    def observe(self, state: EngineState, indices: jax.Array,
+                weights: Optional[jax.Array] = None) -> EngineState:
+        """Update the replicated page-access histogram (paper's profiler).
+
+        Optional ``weights`` (same shape as ``indices``) gate what counts:
+        an entry contributes 1 iff its weight is non-zero.  The serving
+        batcher passes its SLS pad weights here so bucket padding (weight-0
+        entries, replicated pad rows) never skews the hotness ranking."""
         c, axes = self.cfg, self.axes
         dp = axes.dp
-        key = ("observe", tuple(indices.shape), jnp.dtype(indices.dtype).name)
+        key = ("observe", tuple(indices.shape),
+               jnp.dtype(indices.dtype).name, weights is not None)
         f = self._plans.get(key)
         if f is None:
             idx_spec = P(dp, None, None) if dp else P(None, None, None)
+            w_specs = (idx_spec,) if weights is not None else ()
 
-            def block(counts, idx):
+            def block(counts, idx, *w):
                 page = idx.reshape(-1) // c.page_size
-                local = jnp.zeros_like(counts).at[page].add(1.0)
+                inc = (jnp.where(w[0].reshape(-1) != 0, 1.0, 0.0) if w
+                       else 1.0)
+                local = jnp.zeros_like(counts).at[page].add(inc)
                 if dp:
                     local = jax.lax.psum(local, dp)
                 return counts + local
 
             f = jax.jit(shard_map(block, mesh=self.mesh,
-                                  in_specs=(P(), idx_spec), out_specs=P(),
-                                  check_vma=False))
+                                  in_specs=(P(), idx_spec) + w_specs,
+                                  out_specs=P(), check_vma=False))
             self._plans[key] = f
-        return dataclasses.replace(state, counts=f(state.counts, indices))
+        args = (state.counts, indices)
+        if weights is not None:
+            args = args + (weights,)
+        return dataclasses.replace(state, counts=f(*args))
 
     # ------------------------------------------------------- plan + migration
     def plan_and_migrate(self, state: EngineState) -> Tuple[EngineState, dict]:
@@ -362,19 +376,80 @@ class PIFSEmbeddingEngine:
         cold_src = jnp.asarray(cold_src)
         hot_src = jnp.asarray(hot_src)
 
-        @functools.partial(jax.jit,
-                           out_shardings=(self.state_shardings().cold,
-                                          self.state_shardings().hot))
-        def do(cold, hot, cs, hs):
-            combined = jnp.concatenate([cold, hot], axis=0)
-            return jnp.take(combined, cs, axis=0), jnp.take(combined, hs, axis=0)
+        # the gather plan is shape-stable across migrations — build once so
+        # the periodic replans of a live serving loop never recompile
+        if self._migrate_plan is None:
+            @functools.partial(jax.jit,
+                               out_shardings=(self.state_shardings().cold,
+                                              self.state_shardings().hot))
+            def do(cold, hot, cs, hs):
+                combined = jnp.concatenate([cold, hot], axis=0)
+                return (jnp.take(combined, cs, axis=0),
+                        jnp.take(combined, hs, axis=0))
+            self._migrate_plan = do
 
-        new_cold, new_hot = do(state.cold, state.hot, cold_src, hot_src)
+        new_cold, new_hot = self._migrate_plan(
+            state.cold, state.hot, cold_src, hot_src)
         return EngineState(
             cold=new_cold, hot=new_hot,
             page_to_shard=jnp.asarray(np.asarray(new_table.page_to_shard), jnp.int32),
             page_to_slot=jnp.asarray(np.asarray(new_table.page_to_slot), jnp.int32),
             counts=state.counts * 0.5)  # decay after replan (EWMA)
+
+
+class ServeBinding:
+    """The serving subsystem's seam onto the engine.
+
+    ``repro.serving`` never touches engine internals: it drives this
+    quadruple of (engine, mutable state, model params, jitted serve step).
+    ``execute`` runs one bucket-shaped micro-batch and blocks until the
+    device is done; ``observe``/``replan`` fold the paper's live page
+    management (§IV-B4: profile -> re-plan -> pure-gather migration) into
+    the serving cadence — lookups are placement-invariant, so a replan
+    between micro-batches never perturbs in-flight numerics; and
+    ``plan_stats`` exposes the compiled-plan cache contract the batcher's
+    bucket set is built around (one signature per bucket, zero steady-state
+    retraces once warmed).
+    """
+
+    def __init__(self, engine: PIFSEmbeddingEngine, state: EngineState,
+                 params, step, idx_key: Optional[str] = "indices"):
+        self.engine = engine
+        self.state = state
+        self.params = params
+        self.step = step                   # (params, state, batch) -> scores
+        self.idx_key = idx_key             # batch entry feeding the profiler
+        self.replans = 0
+
+    def execute(self, batch: dict):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        out = self.step(self.params, self.state, jb)
+        jax.block_until_ready(out)
+        return out
+
+    def observe(self, batch: dict) -> None:
+        if self.idx_key and self.idx_key in batch:
+            w = batch.get("weights")
+            new = self.engine.observe(
+                self.state, jnp.asarray(batch[self.idx_key]),
+                weights=None if w is None else jnp.asarray(w))
+            # block here so the profiler update is charged to maintenance,
+            # not leaked into the next micro-batch's measured service time
+            jax.block_until_ready(new.counts)
+            self.state = new
+
+    def replan(self) -> dict:
+        new, stats = self.engine.plan_and_migrate(self.state)
+        jax.block_until_ready((new.cold, new.hot))   # same: no timing leak
+        self.state = new
+        self.replans += 1
+        return stats
+
+    def plan_stats(self) -> dict:
+        return self.engine.plan_stats()
+
+    def reset_plan_stats(self) -> None:
+        self.engine.reset_plan_stats()
 
 
 def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,

@@ -14,9 +14,23 @@ A trace is a sequence of SLS requests: for each (batch sample, table) bag,
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
+
+# rng stream tags: every random decision is keyed (seed, tag, counter), so
+# each stream (init / per-batch draw / per-batch drift / per-request serve)
+# is deterministic under TraceConfig.seed independent of call order: batch
+# k's drift remap is a pure function of (seed, k), and serve-request draws
+# never consume batch-stream randomness.  The one intentional coupling is
+# the hot-set permutation itself — serve_requests(drift_every > 0) churns
+# the same permutation the batch stream reads (shared popularity drift),
+# so mixing the two streams on one generator shares that state by design.
+_INIT_TAG = 0x11A0
+_BATCH_TAG = 0x11A1
+_DRIFT_TAG = 0x11A2
+_SERVE_TAG = 0x11A3
+_SERVE_DRIFT_TAG = 0x11A4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,38 +56,46 @@ class TraceGenerator:
 
     def __init__(self, cfg: TraceConfig):
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
+        init_rng = np.random.default_rng([cfg.seed, _INIT_TAG])
         if cfg.distribution == "zipfian":
             # fixed preference permutation per table: hot ids are scattered
             # across the address space (like hashed ids in production)
             self._perm = np.stack([
-                self.rng.permutation(cfg.n_rows) for _ in range(cfg.n_tables)])
+                init_rng.permutation(cfg.n_rows)
+                for _ in range(cfg.n_tables)])
             ranks = np.arange(1, cfg.n_rows + 1, dtype=np.float64)
             w = ranks ** -cfg.zipf_alpha
             self._cdf = np.cumsum(w) / w.sum()
         elif cfg.distribution == "normal":
-            self._centers = self.rng.integers(0, cfg.n_rows, cfg.n_tables)
+            self._centers = init_rng.integers(0, cfg.n_rows, cfg.n_tables)
+        self._n_batches = 0     # drift schedule position (batch stream)
+        self._n_serve = 0       # serve-request stream position
+        self._serve_pos = 0     # serve-stream uniform sweep cursor (ids)
 
-    def _draw(self, table: int, n: int) -> np.ndarray:
+    def _draw(self, table: int, n: int, rng: np.random.Generator,
+              pos: int = 0) -> np.ndarray:
         c = self.cfg
         if c.distribution == "uniform":
-            # perfectly balanced round-robin over the id space
-            start = self.rng.integers(0, c.n_rows)
-            return (start + np.arange(n, dtype=np.int64) *
-                    max(1, c.n_rows // max(n, 1))) % c.n_rows
+            # perfectly balanced round-robin over the id space: a
+            # contiguous sweep continuing from the stream cursor, so
+            # page-level access counts stay maximally even over any window
+            # (a strided scatter aliases onto page-to-shard residue
+            # classes and leaves sparse tied counts the placement LPT
+            # can't balance)
+            return (pos + np.arange(n, dtype=np.int64)) % c.n_rows
         if c.distribution == "random":
-            return self.rng.integers(0, c.n_rows, n)
+            return rng.integers(0, c.n_rows, n)
         if c.distribution == "normal":
             mu = self._centers[table]
             sd = max(1.0, c.n_rows * c.normal_sigma_frac)
-            ids = np.rint(self.rng.normal(mu, sd, n)).astype(np.int64)
+            ids = np.rint(rng.normal(mu, sd, n)).astype(np.int64)
             return np.mod(ids, c.n_rows)
         # zipfian via inverse-CDF on the rank distribution
-        u = self.rng.random(n)
+        u = rng.random(n)
         ranks = np.searchsorted(self._cdf, u)
         return self._perm[table][np.minimum(ranks, c.n_rows - 1)]
 
-    def _drift(self) -> None:
+    def _drift(self, rng: np.random.Generator) -> None:
         """Churn the hot set: swap a fraction of hot ranks with random ranks
         (keeps each table's rank->row map a permutation)."""
         c = self.cfg
@@ -82,8 +104,8 @@ class TraceGenerator:
         window = min(c.drift_window, c.n_rows)
         m = max(1, int(window * c.drift_per_batch))
         for t in range(c.n_tables):
-            hot_ranks = self.rng.choice(window, m, replace=False)
-            other_ranks = self.rng.integers(0, c.n_rows, m)
+            hot_ranks = rng.choice(window, m, replace=False)
+            other_ranks = rng.integers(0, c.n_rows, m)
             p = self._perm[t]
             p[hot_ranks], p[other_ranks] = (p[other_ranks].copy(),
                                             p[hot_ranks].copy())
@@ -91,16 +113,57 @@ class TraceGenerator:
     def next_batch(self) -> np.ndarray:
         """(batch, n_tables, pooling) table-local row ids."""
         c = self.cfg
+        rng = np.random.default_rng([c.seed, _BATCH_TAG, self._n_batches])
+        pos = self._n_batches * c.batch * c.pooling   # uniform sweep cursor
         out = np.empty((c.batch, c.n_tables, c.pooling), dtype=np.int64)
         for t in range(c.n_tables):
-            out[:, t, :] = self._draw(t, c.batch * c.pooling).reshape(
-                c.batch, c.pooling)
-        self._drift()
+            out[:, t, :] = self._draw(t, c.batch * c.pooling, rng,
+                                      pos=pos).reshape(c.batch, c.pooling)
+        self._drift(np.random.default_rng(
+            [c.seed, _DRIFT_TAG, self._n_batches]))
+        self._n_batches += 1
         return out
 
     def stream(self, n_batches: int) -> Iterator[np.ndarray]:
         for _ in range(n_batches):
             yield self.next_batch()
+
+    def serve_requests(self, n: Optional[int] = None,
+                       poolings: Optional[Sequence[int]] = None,
+                       drift_every: int = 0) -> Iterator[np.ndarray]:
+        """Per-request iterator for the serving load generator (the
+        ``kind="serve"`` counterpart of the batch stream).
+
+        Yields ``(n_tables, L)`` table-local row ids per request, with the
+        per-request pooling ``L`` sampled uniformly from ``poolings``
+        (default: the config's fixed pooling).  ``drift_every > 0`` churns
+        the hot set every that many requests, mirroring the batch stream's
+        popularity drift at request granularity.
+
+        Determinism: request ``i``'s randomness is keyed ``(seed, i)`` and
+        the hot-set permutation is a pure function of ``(seed, drifts
+        applied so far)``, so the stream replays exactly for a given call
+        sequence, and consuming serve requests never perturbs the batch
+        stream (or vice versa beyond the intentional shared drift)."""
+        c = self.cfg
+        choices = tuple(poolings) if poolings else (c.pooling,)
+        produced = 0
+        while n is None or produced < n:
+            i = self._n_serve
+            rng = np.random.default_rng([c.seed, _SERVE_TAG, i])
+            L = int(choices[rng.integers(len(choices))])
+            out = np.empty((c.n_tables, L), dtype=np.int64)
+            # uniform sweep cursor advances by the ids actually drawn, so
+            # variable poolings leave no gaps in the round-robin coverage
+            for t in range(c.n_tables):
+                out[t] = self._draw(t, L, rng, pos=self._serve_pos)
+            self._serve_pos += L
+            self._n_serve += 1
+            produced += 1
+            if drift_every and self._n_serve % drift_every == 0:
+                self._drift(np.random.default_rng(
+                    [c.seed, _SERVE_DRIFT_TAG, i]))
+            yield out
 
 
 def flatten_trace(batches: np.ndarray, n_rows: int) -> np.ndarray:

@@ -1,81 +1,118 @@
-"""Serving driver: batched recsys inference with the PIFS engine.
+"""Serving driver: online recsys inference through ``repro.serving``.
 
-``python -m repro.launch.serve --arch dcn-v2 --requests 2000 --batch 64``
+``python -m repro.launch.serve --arch rmc1 --qps 200 --requests 2000
+--slo-ms 50 --impl pallas --block-l 8 --batcher dynamic``
 
-Simulates an online-serving loop: requests arrive, are micro-batched, scored
-with the jit'd serve step, and the engine's access profiler + planner run in
-the background (periodic re-plan = the paper's page management during a
-live-on inference system, §IV-B4 — migration here is a pure gather, so no
-"page block" ever stalls a query).
+Thin composition over the serving subsystem: binds the model to a
+``ServeBinding`` (core/pifs.py), generates an open- or closed-loop request
+stream from the trace distributions, warms every shape bucket (one
+compile per bucket — afterwards the whole run does zero retraces), and
+drives the deadline-aware dynamic micro-batcher.  The engine's access
+profiler and periodic re-planning (paper §IV-B4) fold into the serving
+cadence between micro-batches; migration is a pure gather with
+placement-invariant lookups, so no query ever blocks on page management.
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import base as cfgs
 from repro.configs import get_config, reduced
-from repro.data import synth
 from repro.launch.mesh import make_test_mesh
-from repro.models import dlrm as dlrm_mod
-from repro.models import params as prm
-from repro.models import recsys as rec_mod
+from repro.serving import (BatcherConfig, BindingExecutor, ClosedLoopSource,
+                           DynamicBatcher, FixedBatcher, LoadConfig,
+                           OpenLoopSource, RuntimeConfig, ServingRuntime,
+                           bind_model, closed_loop_factory,
+                           dummy_request_factory, make_padder,
+                           request_stream)
+from repro.serving.request import ArrivalConfig
 
 
-def serve_loop(cfg, mesh, n_requests: int, batch: int, mode: str = "pifs",
-               replan_every: int = 8) -> Dict[str, float]:
-    if isinstance(cfg, cfgs.DLRMConfig):
-        engine, offs = dlrm_mod.build_engine(cfg, mesh)
-        params = prm.initialize(dlrm_mod.model_specs(cfg, mesh),
-                                jax.random.PRNGKey(0))
-        step = jax.jit(dlrm_mod.make_serve_step(cfg, engine, mesh, mode=mode))
-        gen = synth.dlrm_batches(cfg, batch, -(-n_requests // batch))
-        idx_key = "indices"
+def build_serving(cfg, mesh, *, mode: str = "pifs", impl: str = "jnp",
+                  block_l: int = 8, batcher: str = "dynamic",
+                  batch_sizes: Tuple[int, ...] = (8, 16, 32),
+                  poolings: Tuple[int, ...] = (),
+                  slo_ms: float = 50.0, hot_fraction: float = 0.05,
+                  runtime_cfg: RuntimeConfig = RuntimeConfig(),
+                  ) -> Tuple[ServingRuntime, "object"]:
+    """Compose (runtime, binding) for a config; buckets warmed by the
+    caller via ``runtime.warmup``."""
+    binding = bind_model(cfg, mesh, mode=mode, impl=impl, block_l=block_l,
+                         hot_fraction=hot_fraction)
+    levels = tuple(sorted(set(poolings))) or (
+        (cfg.pooling,) if hasattr(cfg, "pooling") else (1,))
+    if batcher == "dynamic":
+        b = DynamicBatcher(BatcherConfig(
+            batch_sizes=tuple(sorted(batch_sizes)), poolings=levels,
+            max_wait_ms=slo_ms / 2))
+    elif batcher == "fixed":
+        b = FixedBatcher(batch=max(batch_sizes), pooling=levels[-1])
     else:
-        engine, offs = rec_mod.build_engine(cfg, mesh)
-        params = prm.initialize(rec_mod.model_specs(cfg, mesh),
-                                jax.random.PRNGKey(0))
-        step = jax.jit(rec_mod.make_serve_step(cfg, engine, offs, mesh,
-                                               mode=mode))
-        gen = synth.rec_batches(cfg, batch, -(-n_requests // batch),
-                                kind="serve")
-        idx_key = None
+        raise ValueError(f"unknown batcher {batcher!r}")
+    runtime = ServingRuntime(BindingExecutor(binding), b, make_padder(cfg),
+                             runtime_cfg)
+    return runtime, binding
 
-    state = engine.init_state(jax.random.PRNGKey(1))
-    lat_ms = []
-    served = 0
+
+def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
+                       impl: str = "jnp", block_l: int = 8,
+                       batcher: str = "dynamic",
+                       batch_sizes: Tuple[int, ...] = (8, 16, 32),
+                       hot_fraction: float = 0.05,
+                       runtime_cfg: RuntimeConfig = RuntimeConfig(),
+                       closed_loop_users: int = 0,
+                       ) -> Dict[str, object]:
+    """End-to-end: bind, warm every bucket, serve the stream, and report
+    metrics + the steady-state retrace count (must be 0)."""
+    runtime, binding = build_serving(
+        cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
+        batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
+        hot_fraction=hot_fraction, runtime_cfg=runtime_cfg)
     with mesh:
-        for i, b in enumerate(gen):
-            jb = {k: jnp.asarray(v) for k, v in b.items()
-                  if k != "labels"}
-            t0 = time.perf_counter()
-            scores = step(params, state, jb)
-            scores.block_until_ready()
-            lat_ms.append((time.perf_counter() - t0) * 1e3)
-            served += batch
-            if idx_key and idx_key in jb:
-                state = engine.observe(state, jb[idx_key])
-                if (i + 1) % replan_every == 0:
-                    state, _ = engine.plan_and_migrate(state)
-    lat = np.asarray(lat_ms[1:])  # drop compile
-    return {"served": served,
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "mean_ms": float(lat.mean())}
+        runtime.warmup(dummy_request_factory(cfg))
+        binding.reset_plan_stats()        # steady state begins here
+        warm_replans = binding.replans
+        if closed_loop_users > 0:
+            source = ClosedLoopSource(
+                closed_loop_users, load.n_requests,
+                closed_loop_factory(cfg, load),
+                think_time_s=closed_loop_users / load.arrival.rate_qps)
+        else:
+            source = OpenLoopSource(request_stream(cfg, load))
+        summary = runtime.run(source)
+    stats = binding.plan_stats()
+    summary["steady_traces"] = stats["traces"]
+    summary["plans"] = stats["plans"]
+    summary["replans"] = binding.replans - warm_replans
+    return summary
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="dcn-v2")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="rmc1")
     ap.add_argument("--requests", type=int, default=1024)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="offered load (virtual-clock requests/second)")
+    ap.add_argument("--slo-ms", type=float, default=50.0)
     ap.add_argument("--mode", default="pifs",
                     choices=["pifs", "pond", "beacon"])
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"],
+                    help="engine SLS datapath (pallas = bag-tiled kernel)")
+    ap.add_argument("--block-l", type=int, default=8,
+                    help="pallas kernel pooling-tile size")
+    ap.add_argument("--batcher", default="dynamic",
+                    choices=["dynamic", "fixed"])
+    ap.add_argument("--batch-sizes", type=int, nargs="+",
+                    default=[8, 16, 32])
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "uniform"])
+    ap.add_argument("--closed-loop-users", type=int, default=0,
+                    help="> 0 switches to a closed-loop load of N users")
+    ap.add_argument("--observe-every", type=int, default=4)
+    ap.add_argument("--replan-every", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -84,8 +121,21 @@ def main() -> None:
         cfg = reduced(cfg)
     n_dev = len(jax.devices())
     mesh = make_test_mesh(n_dev, min(4, n_dev))
-    out = serve_loop(cfg, mesh, args.requests, args.batch, mode=args.mode)
-    print(out)
+    load = LoadConfig(
+        n_requests=args.requests,
+        arrival=ArrivalConfig(rate_qps=args.qps, process=args.arrival,
+                              seed=args.seed),
+        slo_ms=args.slo_ms, seed=args.seed)
+    out = serve_offered_load(
+        cfg, mesh, load, mode=args.mode, impl=args.impl,
+        block_l=args.block_l, batcher=args.batcher,
+        batch_sizes=tuple(args.batch_sizes),
+        runtime_cfg=RuntimeConfig(observe_every=args.observe_every,
+                                  replan_every=args.replan_every),
+        closed_loop_users=args.closed_loop_users)
+    out.pop("latency_hist", None)
+    for k, v in out.items():
+        print(f"  {k:24s} {v}")
 
 
 if __name__ == "__main__":

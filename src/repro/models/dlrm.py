@@ -55,15 +55,23 @@ def model_specs(cfg: DLRMConfig, mesh: Mesh, dtype=jnp.float32) -> dict:
 
 def forward(params: dict, engine: PIFSEmbeddingEngine, state,
             batch: Dict[str, jax.Array], cfg: DLRMConfig,
-            mode: str = "pifs", interaction_impl: str = "jnp") -> jax.Array:
-    """Returns CTR logits (B,)."""
+            mode: str = "pifs", interaction_impl: str = "jnp",
+            impl: str = "jnp", block_l: int = 8) -> jax.Array:
+    """Returns CTR logits (B,).
+
+    ``impl``/``block_l`` select the engine's SLS datapath (jnp vs the
+    bag-tiled Pallas kernel).  An optional ``batch["weights"]`` (B, T, L)
+    carries per-lookup SLS weights — the serving batcher uses weight-0
+    entries to pad variable-pooling bags to a shape bucket exactly.
+    """
     dense, idx = batch["dense"], batch["indices"]
     B = dense.shape[0]
     x_bot = mlp_apply(params["bottom"], dense, len(cfg.bottom_mlp),
                       final_act=True)
     if "bot_proj" in params:
         x_bot = x_bot @ params["bot_proj"]                  # (B, d)
-    pooled = engine.lookup(state, idx, mode=mode)           # (B, T, d)
+    pooled = engine.lookup(state, idx, weights=batch.get("weights"),
+                           mode=mode, impl=impl, block_l=block_l)  # (B, T, d)
     # dense towers use the full (dp x tp) mesh, not just dp (see
     # recsys._constrain_full_batch)
     from repro.models.recsys import _constrain_full_batch
@@ -113,10 +121,12 @@ def make_train_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
 
 
 def make_serve_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
-                    mode: str = "pifs", interaction_impl: str = "jnp"):
+                    mode: str = "pifs", interaction_impl: str = "jnp",
+                    impl: str = "jnp", block_l: int = 8):
     def step(params, emb_state, batch):
         logits = forward(params, engine, emb_state, batch, cfg, mode=mode,
-                         interaction_impl=interaction_impl)
+                         interaction_impl=interaction_impl, impl=impl,
+                         block_l=block_l)
         return jax.nn.sigmoid(logits)
     return step
 

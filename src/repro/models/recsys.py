@@ -62,19 +62,21 @@ def _constrain_full_batch(x: jax.Array, engine) -> jax.Array:
 
 
 def _seq_lookup(engine, state, ids: jax.Array, offset: int, mode: str,
-                dp_shard: bool = True) -> jax.Array:
+                dp_shard: bool = True, impl: str = "jnp",
+                block_l: int = 8) -> jax.Array:
     """(B, S) ids in table `offset` -> (B, S, D) per-position embeddings."""
     idx = (ids + offset)[..., None]          # (B, S, 1): one bag per position
     return engine.lookup(state, idx.astype(jnp.int32), mode=mode,
-                         dp_shard=dp_shard)
+                         dp_shard=dp_shard, impl=impl, block_l=block_l)
 
 
 def _field_lookup(engine, state, ids: jax.Array, offsets: np.ndarray,
-                  mode: str, dp_shard: bool = True) -> jax.Array:
+                  mode: str, dp_shard: bool = True, impl: str = "jnp",
+                  block_l: int = 8) -> jax.Array:
     """(B, F) per-field ids -> (B, F, D)."""
     idx = (ids + jnp.asarray(offsets, jnp.int32)[None, :])[..., None]
     return engine.lookup(state, idx.astype(jnp.int32), mode=mode,
-                         dp_shard=dp_shard)
+                         dp_shard=dp_shard, impl=impl, block_l=block_l)
 
 
 # ---------------------------------------------------------------------------
@@ -202,9 +204,11 @@ def _sasrec_block(bp: dict, x: jax.Array) -> jax.Array:
 
 
 def sasrec_encode(params, engine, state, seq_ids: jax.Array, cfg: RecConfig,
-                  mode: str = "pifs", dp_shard: bool = True) -> jax.Array:
+                  mode: str = "pifs", dp_shard: bool = True,
+                  impl: str = "jnp", block_l: int = 8) -> jax.Array:
     """(B, S) history -> (B, S, D) causal representations."""
-    x = _seq_lookup(engine, state, seq_ids, 0, mode, dp_shard)  # (B, S, D)
+    x = _seq_lookup(engine, state, seq_ids, 0, mode, dp_shard,
+                    impl=impl, block_l=block_l)               # (B, S, D)
     if dp_shard:
         x = _constrain_full_batch(x, engine)
     x = x * jnp.sqrt(cfg.embed_dim).astype(x.dtype) + params["pos_emb"]
@@ -214,12 +218,14 @@ def sasrec_encode(params, engine, state, seq_ids: jax.Array, cfg: RecConfig,
 
 
 def bst_forward(params, engine, state, batch, cfg: RecConfig,
-                mode: str = "pifs") -> jax.Array:
+                mode: str = "pifs", impl: str = "jnp",
+                block_l: int = 8) -> jax.Array:
     """batch: seq (B, S), target (B,), dense (B, n_dense) -> CTR logit (B,)."""
     seq, target = batch["seq"], batch["target"]
     B, S = seq.shape
     tokens = jnp.concatenate([seq, target[:, None]], axis=1)  # (B, S+1)
-    x = _seq_lookup(engine, state, tokens, 0, mode)
+    x = _seq_lookup(engine, state, tokens, 0, mode, impl=impl,
+                    block_l=block_l)
     x = _constrain_full_batch(x, engine)
     x = x + params["pos_emb"]
     for bp in params["blocks"]:
@@ -236,8 +242,10 @@ def bst_forward(params, engine, state, batch, cfg: RecConfig,
 
 
 def autoint_forward(params, engine, state, batch, cfg: RecConfig,
-                    offsets: np.ndarray, mode: str = "pifs") -> jax.Array:
-    x = _field_lookup(engine, state, batch["fields"], offsets, mode)  # (B,F,D)
+                    offsets: np.ndarray, mode: str = "pifs",
+                    impl: str = "jnp", block_l: int = 8) -> jax.Array:
+    x = _field_lookup(engine, state, batch["fields"], offsets, mode,
+                      impl=impl, block_l=block_l)             # (B,F,D)
     x = _constrain_full_batch(x, engine)
     for lp in params["layers"]:
         x = jax.nn.relu(_mha(lp["attn"], x, cfg.n_heads, causal=False)
@@ -247,8 +255,10 @@ def autoint_forward(params, engine, state, batch, cfg: RecConfig,
 
 
 def dcnv2_forward(params, engine, state, batch, cfg: RecConfig,
-                  offsets: np.ndarray, mode: str = "pifs") -> jax.Array:
-    emb = _field_lookup(engine, state, batch["fields"], offsets, mode)
+                  offsets: np.ndarray, mode: str = "pifs",
+                  impl: str = "jnp", block_l: int = 8) -> jax.Array:
+    emb = _field_lookup(engine, state, batch["fields"], offsets, mode,
+                        impl=impl, block_l=block_l)
     emb = _constrain_full_batch(emb, engine)
     B = emb.shape[0]
     x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
@@ -285,18 +295,24 @@ def sasrec_loss(params, engine, state, batch, cfg, mode="pifs") -> jax.Array:
 
 
 def forward(params, engine, state, batch, cfg: RecConfig,
-            offsets: np.ndarray, mode: str = "pifs") -> jax.Array:
+            offsets: np.ndarray, mode: str = "pifs", impl: str = "jnp",
+            block_l: int = 8) -> jax.Array:
     it = cfg.interaction
     if it == "self-attn":
-        return autoint_forward(params, engine, state, batch, cfg, offsets, mode)
+        return autoint_forward(params, engine, state, batch, cfg, offsets,
+                               mode, impl=impl, block_l=block_l)
     if it == "cross":
-        return dcnv2_forward(params, engine, state, batch, cfg, offsets, mode)
+        return dcnv2_forward(params, engine, state, batch, cfg, offsets,
+                             mode, impl=impl, block_l=block_l)
     if it == "transformer-seq":
-        return bst_forward(params, engine, state, batch, cfg, mode)
+        return bst_forward(params, engine, state, batch, cfg, mode,
+                           impl=impl, block_l=block_l)
     if it == "self-attn-seq":
         # CTR-style scoring of a target against the sequence representation
-        h = sasrec_encode(params, engine, state, batch["seq"], cfg, mode)
-        t = _seq_lookup(engine, state, batch["target"][:, None], 0, mode)[:, 0]
+        h = sasrec_encode(params, engine, state, batch["seq"], cfg, mode,
+                          impl=impl, block_l=block_l)
+        t = _seq_lookup(engine, state, batch["target"][:, None], 0, mode,
+                        impl=impl, block_l=block_l)[:, 0]
         return jnp.sum(h[:, -1] * t, axis=-1)
     raise ValueError(it)
 
@@ -376,10 +392,12 @@ def make_train_step(cfg: RecConfig, engine: PIFSEmbeddingEngine,
 
 
 def make_serve_step(cfg: RecConfig, engine: PIFSEmbeddingEngine,
-                    offsets: np.ndarray, mesh: Mesh, mode: str = "pifs"):
+                    offsets: np.ndarray, mesh: Mesh, mode: str = "pifs",
+                    impl: str = "jnp", block_l: int = 8):
     def step(params, emb_state, batch):
         return jax.nn.sigmoid(
-            forward(params, engine, emb_state, batch, cfg, offsets, mode=mode))
+            forward(params, engine, emb_state, batch, cfg, offsets,
+                    mode=mode, impl=impl, block_l=block_l))
     return step
 
 

@@ -1,0 +1,39 @@
+"""repro.serving — deadline-aware dynamic-batching serving runtime.
+
+The online-inference layer the paper evaluates under (concurrent
+production-style access streams, tail-latency SLOs) on top of the PIFS
+engine's compiled-lookup plan cache:
+
+  request.py  — Request, arrival processes, bounded admission queue
+  batcher.py  — shape buckets, deadline-aware coalescing, exact padding
+  metrics.py  — latency histograms, p50/p90/p99/p99.9, QPS, SLO accounting
+  runtime.py  — the discrete-event loop + engine executor + load sources
+  loadgen.py  — model bindings, padders, request streams (open/closed loop)
+
+The engine-facing seam is ``repro.core.pifs.ServeBinding``.
+"""
+from repro.serving.batcher import (BatcherConfig, Bucket, DynamicBatcher,
+                                   FixedBatcher, FixedServiceModel, Flush,
+                                   ServiceModel, Wait, pad_pooled_indices,
+                                   stack_feature)
+from repro.serving.loadgen import (LoadConfig, bind_model,
+                                   closed_loop_factory,
+                                   dummy_request_factory, make_padder,
+                                   request_stream)
+from repro.serving.metrics import LatencyHistogram, ServingMetrics
+from repro.serving.request import (AdmissionQueue, ArrivalConfig, Request,
+                                   arrival_times)
+from repro.serving.runtime import (BindingExecutor, ClosedLoopSource,
+                                   OpenLoopSource, RuntimeConfig,
+                                   ServingRuntime, SimulatedExecutor)
+
+__all__ = [
+    "AdmissionQueue", "ArrivalConfig", "BatcherConfig", "BindingExecutor",
+    "Bucket", "ClosedLoopSource", "DynamicBatcher", "FixedBatcher",
+    "FixedServiceModel", "Flush", "LatencyHistogram", "LoadConfig",
+    "OpenLoopSource", "Request", "RuntimeConfig", "ServiceModel",
+    "ServingMetrics", "ServingRuntime", "SimulatedExecutor", "Wait",
+    "arrival_times", "bind_model", "closed_loop_factory",
+    "dummy_request_factory", "make_padder", "pad_pooled_indices",
+    "request_stream", "stack_feature",
+]

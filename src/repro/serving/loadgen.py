@@ -1,0 +1,209 @@
+"""Load generation and model-binding glue for the serving runtime.
+
+This is the only serving module that knows about model families: it builds
+the ``ServeBinding`` (engine + params + jitted serve step) for a config,
+provides the request->bucket padder, fabricates warmup dummies, and turns
+trace distributions (``repro.data.traces``) into per-request open-loop or
+closed-loop streams with SLO deadlines attached.
+
+Request features are host numpy, one example each:
+
+  * DLRM:           ``dense (n_dense,)``, ``indices (T, L_r)`` (global row
+                    ids, variable per-request pooling ``L_r``)
+  * field recsys:   ``fields (F,)`` (+ ``dense`` when the config has it)
+  * sequence recsys:``seq (S,)``, ``target ()`` (+ ``dense`` for BST)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig, RecConfig
+from repro.core.pifs import ServeBinding
+from repro.data.synth import _padded_rows, _zipf_ids
+from repro.data.traces import TraceConfig, TraceGenerator
+from repro.models import dlrm as dlrm_mod
+from repro.models import params as prm
+from repro.models import recsys as rec_mod
+from repro.serving.batcher import (Bucket, pad_pooled_indices, stack_feature)
+from repro.serving.request import ArrivalConfig, Request, arrival_times
+
+_DENSE_TAG = 0xD0
+_FIELD_TAG = 0xF1
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadConfig:
+    """One offered-load experiment: how many requests, arriving how, with
+    what SLO budget and (DLRM) per-request pooling mix."""
+    n_requests: int
+    arrival: ArrivalConfig
+    slo_ms: float = 50.0
+    poolings: Tuple[int, ...] = ()       # DLRM pooling choices; () = fixed
+    distribution: str = "zipfian"
+    drift_every: int = 256               # serve-stream hot-set churn period
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Model binding
+# ---------------------------------------------------------------------------
+
+
+def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
+               block_l: int = 8, hot_fraction: float = 0.05,
+               seed: int = 0) -> ServeBinding:
+    """Build engine + params + jitted serve step for a DLRM or Rec config."""
+    k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
+    if isinstance(cfg, DLRMConfig):
+        engine, _ = dlrm_mod.build_engine(cfg, mesh,
+                                          hot_fraction=hot_fraction)
+        params = prm.initialize(dlrm_mod.model_specs(cfg, mesh), k_params)
+        step = jax.jit(dlrm_mod.make_serve_step(
+            cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l))
+        idx_key = "indices"
+    elif isinstance(cfg, RecConfig):
+        engine, offs = rec_mod.build_engine(cfg, mesh,
+                                            hot_fraction=hot_fraction)
+        params = prm.initialize(rec_mod.model_specs(cfg, mesh), k_params)
+        step = jax.jit(rec_mod.make_serve_step(
+            cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l))
+        idx_key = None     # field ids are table-local; profiler stays off
+    else:
+        raise TypeError(f"unsupported serving config {type(cfg)}")
+    state = engine.init_state(k_state)
+    return ServeBinding(engine, state, params, step, idx_key=idx_key)
+
+
+def make_padder(cfg) -> Callable[[Sequence[Request], Bucket], dict]:
+    """Request-list -> bucket-shaped host batch for the config's family."""
+    if isinstance(cfg, DLRMConfig):
+        def pad_dlrm(reqs, bucket):
+            idx, w = pad_pooled_indices(reqs, bucket)
+            return {"dense": stack_feature(reqs, bucket, "dense"),
+                    "indices": idx, "weights": w}
+        return pad_dlrm
+    it = cfg.interaction
+    if it in ("self-attn-seq", "transformer-seq"):
+        def pad_seq(reqs, bucket):
+            out = {"seq": stack_feature(reqs, bucket, "seq"),
+                   "target": stack_feature(reqs, bucket, "target")}
+            if cfg.n_dense:
+                out["dense"] = stack_feature(reqs, bucket, "dense")
+            return out
+        return pad_seq
+
+    def pad_fields(reqs, bucket):
+        out = {"fields": stack_feature(reqs, bucket, "fields")}
+        if cfg.n_dense:
+            out["dense"] = stack_feature(reqs, bucket, "dense")
+        return out
+    return pad_fields
+
+
+# ---------------------------------------------------------------------------
+# Request fabrication
+# ---------------------------------------------------------------------------
+
+
+def _dlrm_features(cfg: DLRMConfig, ids: np.ndarray, rid: int,
+                   seed: int) -> dict:
+    offs = (np.arange(cfg.n_tables, dtype=np.int64)
+            * _padded_rows(cfg))[:, None]
+    rng = np.random.default_rng([seed, _DENSE_TAG, rid])
+    return {"dense": rng.normal(size=(cfg.n_dense,)).astype(np.float32),
+            "indices": (ids + offs).astype(np.int32)}
+
+
+def _rec_features(cfg: RecConfig, rid: int, seed: int) -> dict:
+    rng = np.random.default_rng([seed, _FIELD_TAG, rid])
+    it = cfg.interaction
+    out: dict = {}
+    if it in ("self-attn-seq", "transformer-seq"):
+        V = cfg.vocab_sizes[0]
+        out["seq"] = _zipf_ids(rng, V, (cfg.seq_len,)).astype(np.int32)
+        out["target"] = _zipf_ids(rng, V, ()).astype(np.int32)
+    else:
+        out["fields"] = np.stack(
+            [_zipf_ids(rng, v, ()) for v in cfg.vocab_sizes]
+        ).astype(np.int32)
+    if cfg.n_dense:
+        out["dense"] = rng.normal(size=(cfg.n_dense,)).astype(np.float32)
+    return out
+
+
+def request_stream(cfg, load: LoadConfig) -> List[Request]:
+    """Materialise an open-loop request list (arrival times + features)."""
+    times = arrival_times(load.arrival, load.n_requests)
+    slo_s = load.slo_ms * 1e-3
+    reqs: List[Request] = []
+    if isinstance(cfg, DLRMConfig):
+        gen = TraceGenerator(TraceConfig(
+            n_rows=cfg.emb_num, n_tables=cfg.n_tables, pooling=cfg.pooling,
+            batch=1, distribution=load.distribution, seed=load.seed))
+        it = gen.serve_requests(load.n_requests,
+                                poolings=load.poolings or None,
+                                drift_every=load.drift_every)
+        for i, ids in enumerate(it):
+            reqs.append(Request(
+                rid=i, arrival_s=float(times[i]),
+                deadline_s=float(times[i]) + slo_s,
+                features=_dlrm_features(cfg, ids, i, load.seed),
+                pooling=ids.shape[1]))
+    else:
+        for i in range(load.n_requests):
+            reqs.append(Request(
+                rid=i, arrival_s=float(times[i]),
+                deadline_s=float(times[i]) + slo_s,
+                features=_rec_features(cfg, i, load.seed),
+                pooling=1))
+    return reqs
+
+
+def closed_loop_factory(cfg, load: LoadConfig
+                        ) -> Callable[[int, int, float], Request]:
+    """Request factory for ``ClosedLoopSource`` (same feature streams as
+    the open-loop generator, arrival set by the completion that frees the
+    virtual user)."""
+    slo_s = load.slo_ms * 1e-3
+    if isinstance(cfg, DLRMConfig):
+        gen = TraceGenerator(TraceConfig(
+            n_rows=cfg.emb_num, n_tables=cfg.n_tables, pooling=cfg.pooling,
+            batch=1, distribution=load.distribution, seed=load.seed))
+        it = gen.serve_requests(None, poolings=load.poolings or None,
+                                drift_every=load.drift_every)
+
+        def make_dlrm(rid: int, user: int, arrival_s: float) -> Request:
+            ids = next(it)
+            return Request(rid=rid, arrival_s=arrival_s,
+                           deadline_s=arrival_s + slo_s,
+                           features=_dlrm_features(cfg, ids, rid, load.seed),
+                           pooling=ids.shape[1], user=user)
+        return make_dlrm
+
+    def make_rec(rid: int, user: int, arrival_s: float) -> Request:
+        return Request(rid=rid, arrival_s=arrival_s,
+                       deadline_s=arrival_s + slo_s,
+                       features=_rec_features(cfg, rid, load.seed),
+                       pooling=1, user=user)
+    return make_rec
+
+
+def dummy_request_factory(cfg) -> Callable[[int, int], Request]:
+    """Fabricate bucket-warmup dummies (valid ids, zero-ish features)."""
+    if isinstance(cfg, DLRMConfig):
+        def make_dlrm(rid: int, pooling: int) -> Request:
+            ids = np.zeros((cfg.n_tables, pooling), dtype=np.int64)
+            return Request(rid=-1 - rid, arrival_s=0.0, deadline_s=1e9,
+                           features=_dlrm_features(cfg, ids, 0, 0),
+                           pooling=pooling)
+        return make_dlrm
+
+    def make_rec(rid: int, pooling: int) -> Request:
+        return Request(rid=-1 - rid, arrival_s=0.0, deadline_s=1e9,
+                       features=_rec_features(cfg, 0, 0), pooling=1)
+    return make_rec

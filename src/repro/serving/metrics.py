@@ -1,0 +1,144 @@
+"""Serving metrics core: tail-latency histograms, queue/occupancy/QPS/SLO.
+
+Latencies are kept both raw (exact percentiles — request counts in this
+repo are 1e3-1e5, trivially held) and as a log-spaced histogram (the
+export format that survives aggregation across runs/hosts; schema in
+EXPERIMENTS.md §Serving).  Percentiles reported: p50 / p90 / p99 / p99.9.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.batcher import Bucket
+from repro.serving.request import Request
+
+PERCENTILES = (50.0, 90.0, 99.0, 99.9)
+
+
+class LatencyHistogram:
+    """Log-spaced latency histogram (lo_ms..hi_ms) + raw samples."""
+
+    def __init__(self, lo_ms: float = 1e-3, hi_ms: float = 6e4,
+                 n_bins: int = 128):
+        self.edges_ms = np.logspace(np.log10(lo_ms), np.log10(hi_ms),
+                                    n_bins + 1)
+        self.counts = np.zeros(n_bins, dtype=np.int64)
+        self._raw_ms: List[float] = []
+
+    def record(self, seconds: float) -> None:
+        ms = seconds * 1e3
+        self._raw_ms.append(ms)
+        b = int(np.searchsorted(self.edges_ms, ms, side="right") - 1)
+        self.counts[max(0, min(b, len(self.counts) - 1))] += 1
+
+    def __len__(self) -> int:
+        return len(self._raw_ms)
+
+    def percentiles_ms(self) -> Dict[str, float]:
+        if not self._raw_ms:
+            return {f"p{str(q).rstrip('0').rstrip('.')}_ms": float("nan")
+                    for q in PERCENTILES}
+        raw = np.asarray(self._raw_ms)
+        out = {}
+        for q in PERCENTILES:
+            label = f"p{str(q).rstrip('0').rstrip('.')}_ms"
+            out[label] = float(np.percentile(raw, q))
+        out["mean_ms"] = float(raw.mean())
+        out["max_ms"] = float(raw.max())
+        return out
+
+    def export(self) -> Dict[str, list]:
+        """Histogram-only export (aggregatable; no raw samples): per
+        non-empty bin, its [lo, hi) edges and count — bins need not be
+        contiguous, so each carries both edges."""
+        nz = np.nonzero(self.counts)[0]
+        return {"bin_lo_ms": [float(self.edges_ms[i]) for i in nz],
+                "bin_hi_ms": [float(self.edges_ms[i + 1]) for i in nz],
+                "counts": [int(self.counts[i]) for i in nz]}
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    t: float
+    bucket: Bucket
+    n_real: int
+    service_s: float
+    queue_depth: int        # depth *after* popping this batch
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_real / self.bucket.batch
+
+
+class ServingMetrics:
+    """Aggregates everything the serving runtime observes."""
+
+    def __init__(self):
+        self.latency = LatencyHistogram()
+        self.queue_wait = LatencyHistogram()
+        self.batches: List[BatchRecord] = []
+        self.served = 0
+        self.slo_violations = 0
+        self.dropped = 0
+        self.maintenance_s: Dict[str, float] = {}
+        self.maintenance_calls: Dict[str, int] = {}
+        self.first_arrival_s: Optional[float] = None
+        self.last_finish_s: float = 0.0
+
+    # ------------------------------------------------------------ recording
+    def record_request(self, req: Request) -> None:
+        self.served += 1
+        self.latency.record(req.latency_s)
+        self.queue_wait.record(req.queued_s)
+        if not req.slo_ok:
+            self.slo_violations += 1
+        if self.first_arrival_s is None or req.arrival_s < self.first_arrival_s:
+            self.first_arrival_s = req.arrival_s
+        self.last_finish_s = max(self.last_finish_s, req.finish_s)
+
+    def record_batch(self, t: float, bucket: Bucket, n_real: int,
+                     service_s: float, queue_depth: int) -> None:
+        self.batches.append(BatchRecord(t, bucket, n_real, service_s,
+                                        queue_depth))
+
+    def record_drop(self, req: Request) -> None:
+        self.dropped += 1
+
+    def record_maintenance(self, kind: str, seconds: float) -> None:
+        self.maintenance_s[kind] = self.maintenance_s.get(kind, 0.0) + seconds
+        self.maintenance_calls[kind] = self.maintenance_calls.get(kind, 0) + 1
+
+    # ------------------------------------------------------------- summary
+    def summary(self) -> Dict[str, object]:
+        makespan = (self.last_finish_s - (self.first_arrival_s or 0.0)
+                    ) or float("nan")
+        occ = [b.occupancy for b in self.batches]
+        depth = [b.queue_depth for b in self.batches]
+        bucket_mix: Dict[str, int] = {}
+        for b in self.batches:
+            k = f"{b.bucket.batch}x{b.bucket.pooling}"
+            bucket_mix[k] = bucket_mix.get(k, 0) + 1
+        out: Dict[str, object] = {
+            "served": self.served,
+            "dropped": self.dropped,
+            "batches": len(self.batches),
+            "qps": self.served / makespan if makespan == makespan else 0.0,
+            "slo_violation_rate": (self.slo_violations / self.served
+                                   if self.served else 0.0),
+            "batch_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "queue_depth_mean": float(np.mean(depth)) if depth else 0.0,
+            "queue_depth_max": int(np.max(depth)) if depth else 0,
+            "bucket_mix": bucket_mix,
+            "maintenance_s": {k: round(v, 6)
+                              for k, v in self.maintenance_s.items()},
+            "maintenance_calls": dict(self.maintenance_calls),
+        }
+        out.update(self.latency.percentiles_ms())
+        qw = self.queue_wait.percentiles_ms()
+        out["queue_wait_p50_ms"] = qw["p50_ms"]
+        out["queue_wait_p99_ms"] = qw["p99_ms"]
+        out["latency_hist"] = self.latency.export()
+        return out

@@ -1,0 +1,263 @@
+"""The serving runtime: a discrete-event loop over arrivals, the bounded
+admission queue, the deadline-aware batcher, and the engine executor.
+
+Time model
+----------
+Arrivals live on a *virtual* clock (seconds, from the arrival process or a
+closed-loop driver); service times come from wherever the executor gets
+them — the real executor measures wall time of the jitted serve step on
+the device, the simulated executor evaluates a deterministic service
+model.  Queueing delay (the quantity that separates batching policies) is
+exact virtual time either way, so offered-load sweeps and p99 comparisons
+are meaningful even on CPU containers.
+
+Maintenance folding
+-------------------
+``observe`` (access-histogram update) and periodic ``plan_and_migrate``
+(hot-page re-planning, paper §IV-B4) run between micro-batches at a
+configurable cadence.  Because engine lookups are placement-invariant and
+migration is a pure gather, a production deployment overlaps them with
+serving on a background stream; the event loop models that by *not*
+advancing the virtual clock for maintenance (set
+``account_maintenance=True`` to charge it to the serving path instead —
+the pessimistic bound).  Wall time spent is always recorded in metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.batcher import (Bucket, Flush, ServiceModel, Wait)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.request import AdmissionQueue, Request
+
+
+# ---------------------------------------------------------------------------
+# Load sources: open-loop (pre-scheduled) and closed-loop (completion-driven)
+# ---------------------------------------------------------------------------
+
+
+class OpenLoopSource:
+    """Offered-load stream with pre-computed arrival times."""
+
+    def __init__(self, requests: Sequence[Request]):
+        self.requests = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+
+    def initial(self) -> List[Request]:
+        return list(self.requests)
+
+    def on_complete(self, req: Request, now: float) -> List[Request]:
+        return []
+
+
+class ClosedLoopSource:
+    """N virtual users, each issuing its next request ``think_time_s``
+    after the previous one completes (classic closed-loop load)."""
+
+    def __init__(self, n_users: int, n_requests: int,
+                 factory: Callable[[int, int, float], Request],
+                 think_time_s: float = 0.0):
+        self.n_users = n_users
+        self.n_requests = n_requests
+        self.factory = factory          # (rid, user, arrival_s) -> Request
+        self.think_time_s = think_time_s
+        self._next_rid = 0
+
+    def _make(self, user: int, arrival_s: float) -> Optional[Request]:
+        if self._next_rid >= self.n_requests:
+            return None
+        rid = self._next_rid
+        self._next_rid += 1
+        req = self.factory(rid, user, arrival_s)
+        req.user = user
+        return req
+
+    def initial(self) -> List[Request]:
+        out = []
+        for u in range(self.n_users):
+            r = self._make(u, 0.0)
+            if r:
+                out.append(r)
+        return out
+
+    def on_complete(self, req: Request, now: float) -> List[Request]:
+        r = self._make(req.user, now + self.think_time_s)
+        return [r] if r else []
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+
+class BindingExecutor:
+    """Runs micro-batches on a real engine through the ``ServeBinding`` seam
+    (core/pifs.py), measuring device wall time."""
+
+    def __init__(self, binding):
+        self.binding = binding
+
+    def run_batch(self, bucket: Bucket, batch: Dict[str, np.ndarray]) -> float:
+        t0 = time.perf_counter()
+        self.binding.execute(batch)
+        return time.perf_counter() - t0
+
+    def observe(self, batch: Dict[str, np.ndarray]) -> float:
+        t0 = time.perf_counter()
+        self.binding.observe(batch)
+        return time.perf_counter() - t0
+
+    def replan(self) -> float:
+        t0 = time.perf_counter()
+        self.binding.replan()
+        return time.perf_counter() - t0
+
+
+class SimulatedExecutor:
+    """Deterministic executor for replay tests: service time comes from the
+    service model, maintenance is free."""
+
+    def __init__(self, service_model: ServiceModel):
+        self.service_model = service_model
+
+    def run_batch(self, bucket: Bucket, batch) -> float:
+        return self.service_model.estimate(bucket)
+
+    def observe(self, batch) -> float:
+        return 0.0
+
+    def replan(self) -> float:
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    queue_capacity: int = 4096
+    observe_every: int = 4        # micro-batches between observe() (0 = off)
+    replan_every: int = 64        # micro-batches between replan()  (0 = off)
+    account_maintenance: bool = False
+    max_batches: int = 10_000_000  # runaway guard for ill-posed tests
+
+
+class ServingRuntime:
+    """Queue + batcher + executor, advanced by a discrete-event loop."""
+
+    def __init__(self, executor, batcher,
+                 padder: Callable[[Sequence[Request], Bucket], dict],
+                 cfg: RuntimeConfig = RuntimeConfig(),
+                 service_model: Optional[ServiceModel] = None):
+        self.executor = executor
+        self.batcher = batcher
+        self.padder = padder
+        self.cfg = cfg
+        self.service_model = service_model or ServiceModel()
+        self.metrics = ServingMetrics()
+        self.n_batches = 0
+
+    # ----------------------------------------------------------- warmup
+    def warmup(self, request_factory: Callable[[int, int], Request],
+               observe: bool = True) -> Dict[str, float]:
+        """Trace/compile every bucket signature once before taking load.
+
+        ``request_factory(rid, pooling)`` fabricates a dummy request.  Also
+        warms the observe plan per bucket (same shape set) and the replan
+        path (the migrate gather compiles on first use — pay that here,
+        not mid-serving), and seeds the service model with the *second*
+        measured execution (the first includes compile time)."""
+        times = {}
+        for bucket in self.batcher.buckets():
+            reqs = [request_factory(i, bucket.pooling)
+                    for i in range(bucket.batch)]
+            batch = self.padder(reqs, bucket)
+            self.executor.run_batch(bucket, batch)          # traces/compiles
+            svc = self.executor.run_batch(bucket, batch)    # steady measure
+            self.service_model.update(bucket, svc)
+            if observe and self.cfg.observe_every:
+                self.executor.observe(batch)
+            times[f"{bucket.batch}x{bucket.pooling}"] = svc
+        if self.cfg.replan_every:
+            self.executor.replan()
+        return times
+
+    # -------------------------------------------------------------- run
+    def run(self, source) -> Dict[str, object]:
+        cfg = self.cfg
+        queue = AdmissionQueue(cfg.queue_capacity)
+        seq = itertools.count()
+        heap: List = []
+        for r in source.initial():
+            heapq.heappush(heap, (r.arrival_s, next(seq), r))
+        now = 0.0
+
+        def admit(limit: float) -> None:
+            while heap and heap[0][0] <= limit:
+                _, _, r = heapq.heappop(heap)
+                if not queue.offer(r):
+                    self.metrics.record_drop(r)
+                    # a dropped closed-loop request still releases its user
+                    for nr in source.on_complete(r, r.arrival_s):
+                        heapq.heappush(heap, (nr.arrival_s, next(seq), nr))
+
+        while True:
+            admit(now)
+            next_arrival = heap[0][0] if heap else None
+            decision = self.batcher.decide(now, queue.view(), next_arrival,
+                                           self.service_model)
+            if decision is None:
+                if next_arrival is None:
+                    break                                  # fully drained
+                now = next_arrival
+                continue
+            if isinstance(decision, Wait):
+                wake = decision.until
+                if next_arrival is not None:
+                    wake = min(wake, next_arrival)
+                now = wake if wake > now else np.nextafter(now, np.inf)
+                continue
+            assert isinstance(decision, Flush)
+            reqs = queue.pop_n(decision.count)
+            batch = self.padder(reqs, decision.bucket)
+            svc = self.executor.run_batch(decision.bucket, batch)
+            self.service_model.update(decision.bucket, svc)
+            finish = now + svc
+            self.n_batches += 1
+            if cfg.observe_every and self.n_batches % cfg.observe_every == 0:
+                dt = self.executor.observe(batch)
+                self.metrics.record_maintenance("observe", dt)
+                if cfg.account_maintenance:
+                    finish += dt
+            if cfg.replan_every and self.n_batches % cfg.replan_every == 0:
+                dt = self.executor.replan()
+                self.metrics.record_maintenance("replan", dt)
+                if cfg.account_maintenance:
+                    finish += dt
+            for r in reqs:
+                r.start_s = now
+                r.finish_s = finish
+                self.metrics.record_request(r)
+            self.metrics.record_batch(now, decision.bucket, len(reqs), svc,
+                                      len(queue))
+            for r in reqs:
+                for nr in source.on_complete(r, finish):
+                    heapq.heappush(heap, (nr.arrival_s, next(seq), nr))
+            now = finish
+            if self.n_batches >= cfg.max_batches:
+                break
+
+        s = self.metrics.summary()
+        s["queue_offered"] = queue.offered
+        s["queue_dropped"] = queue.dropped
+        # summary()'s depth stats are post-pop snapshots at flush time; the
+        # queue itself tracks the true admission-time peak
+        s["queue_depth_max"] = queue.peak_depth
+        return s

@@ -1,0 +1,270 @@
+"""repro.serving behaviour: deterministic coalescing replay, exact bucket
+padding, bounded admission, arrival processes, metrics, and an end-to-end
+zero-steady-retrace serving run on a real engine."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pifs import engine_for_tables
+from repro.serving import (AdmissionQueue, ArrivalConfig, BatcherConfig,
+                           Bucket, DynamicBatcher, FixedBatcher,
+                           FixedServiceModel, Flush, LatencyHistogram,
+                           LoadConfig, OpenLoopSource, Request,
+                           RuntimeConfig, ServingRuntime, SimulatedExecutor,
+                           Wait, arrival_times, pad_pooled_indices)
+
+
+def _req(rid, t, slo=0.05, pooling=4):
+    return Request(rid=rid, arrival_s=t, deadline_s=t + slo, features={},
+                   pooling=pooling)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("process", ["poisson", "bursty", "uniform"])
+def test_arrival_process_deterministic_and_calibrated(process):
+    # short burst dwells so the MMPP cycles many times within the sample
+    # (the time-averaged rate only converges across many state cycles)
+    cfg = ArrivalConfig(rate_qps=500.0, process=process, seed=3,
+                        mean_burst_s=0.02)
+    a = arrival_times(cfg, 4000)
+    b = arrival_times(cfg, 4000)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) >= 0)
+    mean_rate = 4000 / a[-1]
+    assert 0.8 * 500 < mean_rate < 1.2 * 500   # time-averaged rate holds
+    if process != "uniform":
+        c = arrival_times(dataclasses.replace(cfg, seed=4), 4000)
+        assert not np.array_equal(a, c)
+
+
+def test_bursty_config_validates():
+    with pytest.raises(ValueError):
+        ArrivalConfig(rate_qps=100, process="bursty", burst_factor=8,
+                      burst_fraction=0.2)   # 8 * 0.2 >= 1: base rate <= 0
+
+
+# ---------------------------------------------------------------------------
+# Admission queue
+# ---------------------------------------------------------------------------
+
+
+def test_admission_queue_bounds_and_sheds():
+    q = AdmissionQueue(capacity=2)
+    rs = [_req(i, 0.0) for i in range(4)]
+    assert q.offer(rs[0]) and q.offer(rs[1])
+    assert not q.offer(rs[2])                 # full: shed, don't grow
+    assert (q.offered, q.dropped, len(q)) == (3, 1, 2)
+    assert [r.rid for r in q.pop_n(2)] == [0, 1]
+    with pytest.raises(ValueError):
+        q.pop_n(1)
+
+
+# ---------------------------------------------------------------------------
+# Batcher decisions
+# ---------------------------------------------------------------------------
+
+BAT = BatcherConfig(batch_sizes=(4, 8, 16), poolings=(4, 8),
+                    safety_ms=1.0, max_wait_ms=10.0)
+SVC = FixedServiceModel(base_s=4e-3, per_row_s=2.5e-4)
+
+
+def test_full_bucket_flushes_immediately():
+    b = DynamicBatcher(BAT)
+    d = b.decide(0.0, [_req(i, 0.0) for i in range(20)], 0.001, SVC)
+    assert isinstance(d, Flush) and d.count == 16
+    assert d.bucket == Bucket(16, 4)
+
+
+def test_pooling_level_picks_smallest_adequate():
+    b = DynamicBatcher(BAT)
+    d = b.decide(1.0, [_req(0, 0.0, pooling=3), _req(1, 0.0, pooling=7)],
+                 None, SVC)
+    assert isinstance(d, Flush) and d.bucket == Bucket(4, 8)
+    with pytest.raises(ValueError):
+        b.decide(1.0, [_req(0, 0.0, pooling=99)], None, SVC)
+
+
+def test_waits_then_deadline_flushes():
+    b = DynamicBatcher(BAT)
+    head = _req(0, 0.0, slo=0.05)
+    d = b.decide(0.0, [head], next_arrival=1.0, service=SVC)
+    assert isinstance(d, Wait)
+    # eager cap: head.arrival + 10ms (well before deadline-driven time)
+    assert d.until == pytest.approx(0.010)
+    d2 = b.decide(d.until, [head], next_arrival=1.0, service=SVC)
+    assert isinstance(d2, Flush) and d2.count == 1 and d2.bucket.batch == 4
+
+
+def test_high_load_suppresses_eager_flush():
+    """Arrival-rate estimate from queue stamps disables the max_wait cap
+    when small-batch flushing would saturate (the stability guard)."""
+    b = DynamicBatcher(BAT)
+    # 6 requests in 12 ms -> 500/s; est(4-bucket) = 5ms -> util 0.63 > 0.5
+    reqs = [_req(i, 0.002 * i, slo=0.10) for i in range(6)]
+    now = 0.012
+    d = b.decide(now, reqs, next_arrival=0.014, service=SVC)
+    assert isinstance(d, Wait)      # past max_wait, but deadline still far
+    # same queue at a trickle rate flushes eagerly at the cap
+    slow = [_req(i, 0.04 * i, slo=1.0) for i in range(6)]
+    d2 = b.decide(0.25, slow, next_arrival=0.3, service=SVC)
+    assert isinstance(d2, Flush)
+
+
+def test_fixed_batcher_waits_then_drains():
+    fb = FixedBatcher(batch=8, pooling=4)
+    reqs = [_req(i, 0.0) for i in range(3)]
+    d = fb.decide(0.0, reqs, next_arrival=0.5, service=SVC)
+    assert isinstance(d, Wait) and d.until == 0.5
+    d2 = fb.decide(0.5, reqs, next_arrival=None, service=SVC)   # stream end
+    assert isinstance(d2, Flush) and d2.count == 3
+    d3 = fb.decide(0.0, [_req(i, 0.0) for i in range(9)], 0.5, SVC)
+    assert isinstance(d3, Flush) and d3.count == 8
+
+
+# ---------------------------------------------------------------------------
+# Deterministic replay: the coalescing decision sequence is pinned
+# ---------------------------------------------------------------------------
+
+
+def _replay_requests():
+    times = arrival_times(ArrivalConfig(rate_qps=200.0, seed=11), 32)
+    pool_cycle = (2, 4, 4, 8)
+    return [_req(i, float(times[i]), slo=0.04,
+                 pooling=pool_cycle[i % len(pool_cycle)])
+            for i in range(32)]
+
+
+def _run_replay():
+    model = FixedServiceModel(base_s=4e-3, per_row_s=2.5e-4)
+    rt = ServingRuntime(
+        SimulatedExecutor(model), DynamicBatcher(BAT),
+        padder=lambda reqs, bucket: {"n": len(reqs)},
+        cfg=RuntimeConfig(observe_every=0, replan_every=0),
+        service_model=model)
+    summary = rt.run(OpenLoopSource(_replay_requests()))
+    trace = [(b.bucket.batch, b.bucket.pooling, b.n_real, round(b.t, 5))
+             for b in rt.metrics.batches]
+    return trace, summary
+
+# generated once from the fixed seed above; any change to the coalescing
+# policy, the arrival stream, or the service model shows up here
+PINNED_REPLAY = [
+    (4, 4, 3, 0.01038),
+    (4, 8, 3, 0.022),
+    (4, 8, 4, 0.03818),
+    (4, 8, 2, 0.05151),
+    (4, 4, 1, 0.06392),
+    (16, 8, 10, 0.08929),
+    (4, 8, 3, 0.10169),
+    (8, 8, 6, 0.11424),
+]
+
+
+def test_deterministic_replay_pins_coalescing():
+    t1, s1 = _run_replay()
+    t2, s2 = _run_replay()
+    assert t1 == t2                          # exact replay
+    assert s1["served"] == 32 and s1["dropped"] == 0
+    assert t1[:len(PINNED_REPLAY)] == PINNED_REPLAY
+    assert s1["p99_ms"] == s2["p99_ms"]
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_latency_histogram_percentiles_match_numpy():
+    h = LatencyHistogram()
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(-4.0, 1.0, 500)       # seconds
+    for x in xs:
+        h.record(float(x))
+    p = h.percentiles_ms()
+    assert p["p50_ms"] == pytest.approx(np.percentile(xs * 1e3, 50))
+    assert p["p99.9_ms"] == pytest.approx(np.percentile(xs * 1e3, 99.9))
+    exp = h.export()
+    assert sum(exp["counts"]) == 500
+    assert len(exp["bin_lo_ms"]) == len(exp["bin_hi_ms"]) == len(exp["counts"])
+    # sparse bins: a bimodal sample keeps its true (non-widened) intervals
+    h2 = LatencyHistogram()
+    h2.record(1e-3)
+    h2.record(0.1)
+    exp2 = h2.export()
+    assert exp2["counts"] == [1, 1]
+    assert exp2["bin_hi_ms"][0] < 2.0 and exp2["bin_lo_ms"][1] > 90.0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: exact padding and end-to-end serving
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_padding_is_exact(mesh):
+    """Padding a variable-pooling request into a shape bucket (repeat-first
+    -id at weight 0, replicate-row-0 on the batch axis) must be bit-exact
+    vs the unpadded per-request lookup."""
+    engine, offs = engine_for_tables([512, 512], dim=8, mesh=mesh,
+                                     hot_fraction=0.1)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i, pooling in enumerate((1, 3, 4, 5, 2)):
+        ids = rng.integers(0, 512, (2, pooling)) + offs[:, None]
+        reqs.append(Request(rid=i, arrival_s=0.0, deadline_s=1.0,
+                            features={"indices": ids.astype(np.int32)},
+                            pooling=pooling))
+    bucket = Bucket(8, 6)
+    idx, w = pad_pooled_indices(reqs, bucket)
+    with mesh:
+        padded = np.asarray(engine.lookup(
+            state, jax.numpy.asarray(idx), weights=jax.numpy.asarray(w)))
+        for i, r in enumerate(reqs):
+            ref = np.asarray(engine.lookup(
+                state, jax.numpy.asarray(r.features["indices"][None]),
+                dp_shard=False))[0]
+            np.testing.assert_array_equal(padded[i], ref)
+
+
+def test_observe_with_pad_weights_counts_only_real_lookups(mesh):
+    """The profiler must not rank pages by padding artifacts: weight-0
+    entries (pooling pad + replicated batch-pad rows) contribute nothing."""
+    engine, offs = engine_for_tables([512, 512], dim=8, mesh=mesh,
+                                     hot_fraction=0.1)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    reqs = [Request(rid=0, arrival_s=0.0, deadline_s=1.0,
+                    features={"indices": (np.full((2, 3), 9)
+                                          + offs[:, None]).astype(np.int32)},
+                    pooling=3)]
+    bucket = Bucket(4, 8)
+    idx, w = pad_pooled_indices(reqs, bucket)
+    with mesh:
+        new = engine.observe(state, jax.numpy.asarray(idx),
+                             weights=jax.numpy.asarray(w))
+    # one request, 2 bags x 3 real lookups = 6 counted accesses; the other
+    # 4*2*8 - 6 padded slots are weight-0 and invisible
+    assert float(np.asarray(new.counts).sum()) == 6.0
+
+
+def test_end_to_end_serving_zero_steady_retraces(mesh):
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import serve_offered_load
+    cfg = reduced(get_config("rmc1"))
+    load = LoadConfig(
+        n_requests=48,
+        arrival=ArrivalConfig(rate_qps=400.0, seed=2),
+        slo_ms=200.0, seed=2)
+    out = serve_offered_load(cfg, mesh, load, batch_sizes=(8, 16),
+                             runtime_cfg=RuntimeConfig(observe_every=2,
+                                                       replan_every=2))
+    assert out["served"] == 48 and out["dropped"] == 0
+    assert out["steady_traces"] == 0          # the plan-cache contract
+    assert out["replans"] >= 1                # maintenance actually folded in
+    assert 0.0 < out["batch_occupancy_mean"] <= 1.0
+    assert out["qps"] > 0 and out["p99_ms"] >= out["p50_ms"]
