@@ -63,7 +63,8 @@ def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
     """One (policy, arrival-stream) serving run over a warmed binding."""
     runtime = ServingRuntime(BindingExecutor(binding), batcher,
                              make_padder(cfg), runtime_cfg)
-    runtime.warmup(dummy_request_factory(cfg))   # no-op cost once plans warm
+    runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
+    # ^ no-op cost once plans warm
     binding.reset_plan_stats()
     warm_replans = binding.replans
     summary = runtime.run(OpenLoopSource(request_stream(cfg, load)))
@@ -87,6 +88,10 @@ def main() -> None:
                     choices=["pifs", "pond", "beacon"])
     ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--block-l", type=int, default=8)
+    ap.add_argument("--storage", default="fp32", choices=["fp32", "int8"],
+                    help="engine cold-tier storage dtype (reported in the "
+                         "run header so BENCH_serve.json entries stay "
+                         "comparable across storage modes)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration (fewer requests/buckets)")
     args = ap.parse_args()
@@ -122,8 +127,11 @@ def main() -> None:
                  gate_p99=False, gate_qps=False),
         ]
 
+    print(f"serve bench: arch={args.arch} mode={args.mode} impl={args.impl} "
+          f"storage={args.storage} (cold tier "
+          f"{'int8+page-scales' if args.storage == 'int8' else 'fp32'})")
     binding = bind_model(cfg, mesh, mode=args.mode, impl=args.impl,
-                         block_l=args.block_l)
+                         block_l=args.block_l, storage=args.storage)
     bat_cfg = BatcherConfig(batch_sizes=batch_sizes, poolings=poolings)
     fixed_bucket = Bucket(batch_sizes[-1], poolings[-1])
     runtime_cfg = RuntimeConfig(observe_every=4, replan_every=32)
@@ -134,11 +142,11 @@ def main() -> None:
         calib = ServingRuntime(BindingExecutor(binding),
                                DynamicBatcher(bat_cfg), make_padder(cfg),
                                runtime_cfg)
-        warm = calib.warmup(dummy_request_factory(cfg))
+        warm = calib.warmup(dummy_request_factory(cfg, storage=args.storage))
         # calibrate the largest bucket's service time as a median over
         # several steady executions (a single sample is too noisy on
         # shared CPU hosts to anchor offered load on)
-        factory = dummy_request_factory(cfg)
+        factory = dummy_request_factory(cfg, storage=args.storage)
         cal_batch = make_padder(cfg)(
             [factory(i, fixed_bucket.pooling)
              for i in range(fixed_bucket.batch)], fixed_bucket)
@@ -170,7 +178,7 @@ def main() -> None:
             load = LoadConfig(
                 n_requests=n_requests, arrival=arrival, slo_ms=slo_ms,
                 poolings=poolings if len(poolings) > 1 else (),
-                seed=7)
+                seed=7, storage=args.storage)
             dyn_cfg = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
             dyn = run_policy(binding, cfg, DynamicBatcher(dyn_cfg), load,
                              runtime_cfg)
@@ -218,6 +226,7 @@ def main() -> None:
         "mode": args.mode,
         "impl": args.impl,
         "block_l": args.block_l,
+        "storage": args.storage,
         "batch_sizes": list(batch_sizes),
         "poolings": list(poolings),
         "warmup_service_s": warm,

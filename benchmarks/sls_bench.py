@@ -1,27 +1,51 @@
-"""SLS hot-path benchmark: the repo's first serving-perf baseline.
+"""SLS hot-path benchmark: latency, retraces, and — since the tiered-
+precision store — *bytes moved*.
 
-Sweeps ``{impl} x {mode} x {B, L, D}`` on a real ``PIFSEmbeddingEngine``
-(8 fake CPU devices, dp=2 x tp=4 mesh), measuring per-lookup wall latency
-(p50/p90 over timed reps after warmup) and retrace behaviour of the
-compiled-lookup plan cache.  Two independent retrace probes:
+Sweeps ``{storage} x {impl} x {mode} x {B, L, D}`` on a real
+``PIFSEmbeddingEngine`` (8 fake CPU devices, dp=2 x tp=4 mesh), measuring
+per-lookup wall latency (p50/p90 over timed reps after warmup), retrace
+behaviour of the compiled-lookup plan cache, and the bandwidth ledger of
+each storage mode.  Two independent retrace probes:
 
   * ``engine.plan_stats()`` — the engine's own jit-trace counter (fires once
     per shape-signature trace; steady state must stay flat), and
   * ``jax.monitoring`` compile events (``/jax/.../backend_compile``-style) —
     an XLA-level cross-check counted per measurement phase.
 
-Also asserts the pallas datapath matches the jnp path **bit-for-bit in fp32**
-before timing anything (both accumulate in the same fixed l-order).
+Correctness gates before timing anything:
 
-Writes ``BENCH_sls.json``; schema documented in EXPERIMENTS.md §Perf.
+  * pallas matches jnp **bit-for-bit in fp32** for every storage mode (both
+    accumulate in the same fixed l-order, dequant fused identically), and
+  * every storage mode agrees with the dequantized dense oracle
+    (``engine.to_dense`` + ``sls_dense_ref``).
+
+Bandwidth ledger (the PR's point — DLRM inference is bandwidth-bound, so
+the stored bytes crossing the memory interface are the cost that matters):
+
+  * ``bytes_moved_per_lookup`` — stored bytes DMA'd from the embedding
+    store per lookup: one row of ``D * cold_itemsize`` bytes per pooling
+    entry plus (int8) one 4-byte page scale per entry.  Analytic and
+    exact for the all-cold initial placement the bench uses; index/mask
+    SMEM traffic is identical across storages and excluded.
+  * ``eff_bandwidth_mbps`` — fp32-equivalent payload served per second
+    (``B*G*L*D*4 / p50``): what a bandwidth-bound deployment gains.
+  * the ``int8_vs_fp32`` comparison rows carry
+    ``bw_improvement_x = bytes_fp32 / bytes_int8`` — the bytes-moved-basis
+    effective-bandwidth improvement (gated ``>= 2x``; the analytic ratio is
+    ``4*D / (D + 4)``), ``bytes_ratio`` (gated ``< 0.35``), and the
+    measured ``p50_ratio`` per impl (expected ~1 in interpret mode, < 1 on
+    bandwidth-bound hardware; recorded, not gated — see the caveat below).
+
+Writes ``BENCH_sls.json`` (schema 2); documented in EXPERIMENTS.md §Perf
+and §Quantized cold-tier storage.
 
 Caveat: on CPU containers the Pallas kernel runs in *interpret mode* — its
 absolute latency here reflects the interpreter, not TPU hardware; the numbers
-that transfer are the jnp baseline, the retrace counts (zero steady-state
-retraces is the point of the plan cache), and the sweep structure itself.
+that transfer are the jnp baseline, the retrace counts, the bytes ledger
+(analytic), and the sweep structure itself.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.sls_bench [--out BENCH_sls.json]
-[--quick]``
+[--quick|--smoke] [--storage fp32|int8|both]``
 """
 from __future__ import annotations
 
@@ -37,6 +61,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.core import sls as sls_ops  # noqa: E402
 from repro.core.pifs import engine_for_tables  # noqa: E402
 from repro.distributed.sharding import make_mesh  # noqa: E402
 
@@ -46,6 +71,10 @@ IMPLS = ("jnp", "pallas")
 # CPU interpreter, shaped like the paper's DLRM configs (G=2 tables).
 SWEEP = [(8, 4, 16), (8, 16, 16), (16, 8, 32), (8, 8, 64)]
 SWEEP_QUICK = [(8, 4, 16)]
+G = 2  # tables per lookup
+
+BYTES_RATIO_GATE = 0.35   # int8 stored bytes must be < 0.35x fp32
+BW_IMPROVEMENT_GATE = 2.0  # bytes-moved-basis effective-bandwidth gain
 
 
 class CompileEventCounter:
@@ -67,90 +96,181 @@ class CompileEventCounter:
         return c
 
 
-def bench_one(engine, state, idx, *, impl: str, mode: str, events,
-              reps: int, warmup: int = 2) -> dict:
-    engine.reset_plan_stats(clear_plans=True)  # cold start: warmup must trace
-    events.take()
-    for _ in range(warmup):
-        jax.block_until_ready(engine.lookup(state, idx, mode=mode, impl=impl))
-    warm_traces = engine.plan_stats()["traces"]
-    warm_compiles = events.take()
+def bytes_moved_per_lookup(B: int, L: int, D: int, storage: str) -> int:
+    """Stored bytes DMA'd from the embedding store for one (B, G, L, D)
+    lookup: every pooling entry fetches its row once across the mesh (each
+    row is owned by exactly one shard; the bench state is all-cold), plus
+    one fp32 page scale per entry for int8."""
+    row_bytes = D * (1 if storage == "int8" else 4)
+    scale_bytes = 4 if storage == "int8" else 0
+    return B * G * L * (row_bytes + scale_bytes)
 
-    lat = []
+
+def bench_group(setups, idx, *, impl: str, mode: str, events,
+                reps: int, warmup: int = 2) -> dict:
+    """Benchmark one (impl, mode) row for every storage mode at once.
+
+    Timed reps are *interleaved* across the storages (rep i of fp32 runs
+    right next to rep i of int8), so host-load drift on shared machines
+    cancels out of the p50 ratio instead of dominating it.
+    """
+    recs = {}
+    for storage, (engine, state) in setups.items():
+        engine.reset_plan_stats(clear_plans=True)  # cold start: must trace
+        events.take()
+        for _ in range(warmup):
+            jax.block_until_ready(
+                engine.lookup(state, idx, mode=mode, impl=impl))
+        recs[storage] = {"warmup_traces": engine.plan_stats()["traces"],
+                         "warmup_compile_events": events.take(),
+                         "lat": []}
     for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(engine.lookup(state, idx, mode=mode, impl=impl))
-        lat.append(time.perf_counter() - t0)
-    stats = engine.plan_stats()
-    return {
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p90_ms": float(np.percentile(lat, 90) * 1e3),
-        "warmup_traces": warm_traces,
-        "warmup_compile_events": warm_compiles,
-        "steady_traces": stats["traces"] - warm_traces,
-        "steady_compile_events": events.take(),
-        "lookups_timed": reps,
-    }
+        for storage, (engine, state) in setups.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                engine.lookup(state, idx, mode=mode, impl=impl))
+            recs[storage]["lat"].append(time.perf_counter() - t0)
+    steady_compiles = events.take()  # XLA-level check, shared by the group
+    out = {}
+    for storage, (engine, state) in setups.items():
+        stats = engine.plan_stats()
+        rec = recs[storage]
+        out[storage] = {
+            "p50_ms": float(np.percentile(rec["lat"], 50) * 1e3),
+            "p90_ms": float(np.percentile(rec["lat"], 90) * 1e3),
+            "warmup_traces": rec["warmup_traces"],
+            "warmup_compile_events": rec["warmup_compile_events"],
+            "steady_traces": stats["traces"] - rec["warmup_traces"],
+            "steady_compile_events": steady_compiles,
+            "lookups_timed": reps,
+        }
+    return out
+
+
+def check_oracles(eng, state, idx, storage: str) -> None:
+    """(a) pallas == jnp bit-for-bit; (b) both match the dequantized dense
+    oracle (engine.to_dense computes the effective table both datapaths
+    must reproduce — for int8 that *is* the ref.py quantized semantics:
+    dequant after the gather, per-page scales)."""
+    dense = eng.to_dense(state)
+    B, Gt, L = idx.shape
+    want = np.asarray(sls_ops.sls_dense_ref(
+        dense, idx.reshape(B * Gt, L)).reshape(B, Gt, -1))
+    for mode in MODES:
+        a = np.asarray(eng.lookup(state, idx, mode=mode, impl="jnp"))
+        b = np.asarray(eng.lookup(state, idx, mode=mode, impl="pallas"))
+        if not np.array_equal(a, b):
+            raise AssertionError(
+                f"pallas != jnp (fp32 exact) for storage={storage} "
+                f"mode={mode} shape={idx.shape}: max|d|={np.abs(a - b).max()}")
+        if not np.allclose(a, want, rtol=1e-5, atol=1e-5):
+            raise AssertionError(
+                f"{storage} lookup disagrees with the dense oracle for "
+                f"mode={mode}: max|d|={np.abs(a - want).max()}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_sls.json")
     ap.add_argument("--reps", type=int, default=10)
-    ap.add_argument("--quick", action="store_true",
+    ap.add_argument("--quick", "--smoke", dest="quick", action="store_true",
                     help="single config smoke (CI)")
+    ap.add_argument("--storage", default="both",
+                    choices=["fp32", "int8", "both"],
+                    help="cold-tier storage modes to sweep; 'both' also "
+                         "emits the int8-vs-fp32 bandwidth comparison")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 4), ("data", "model"))
     events = CompileEventCounter()
     sweep = SWEEP_QUICK if args.quick else SWEEP
+    storages = ("fp32", "int8") if args.storage == "both" else (args.storage,)
     results = []
+    comparisons = []
     for (B, L, D) in sweep:
-        eng, _ = engine_for_tables([4096, 2048], dim=D, mesh=mesh,
-                                   hot_fraction=0.05)
-        state = eng.init_state(jax.random.PRNGKey(0))
-        idx = jax.random.randint(jax.random.PRNGKey(1), (B, 2, L), 0, 4096
-                                 ).astype(jnp.int32)
-
-        # correctness gate: pallas must match jnp bit-for-bit in fp32
-        for mode in MODES:
-            a = np.asarray(eng.lookup(state, idx, mode=mode, impl="jnp"))
-            b = np.asarray(eng.lookup(state, idx, mode=mode, impl="pallas"))
-            if not np.array_equal(a, b):
-                raise AssertionError(
-                    f"pallas != jnp (fp32 exact) for mode={mode} "
-                    f"B={B} L={L} D={D}: max|d|={np.abs(a - b).max()}")
-
+        p50 = {}  # (storage, impl) -> p50 of mode=pifs
+        idx = jax.random.randint(jax.random.PRNGKey(1), (B, G, L), 0,
+                                 4096).astype(jnp.int32)
+        setups = {}
+        for storage in storages:
+            eng, _ = engine_for_tables([4096, 2048], dim=D, mesh=mesh,
+                                       hot_fraction=0.05, storage=storage)
+            state = eng.init_state(jax.random.PRNGKey(0))
+            with mesh:
+                check_oracles(eng, state, idx, storage)
+            setups[storage] = (eng, state)
         for impl in IMPLS:
             for mode in MODES:
-                r = bench_one(eng, state, idx, impl=impl, mode=mode,
-                              events=events, reps=args.reps)
-                r.update(impl=impl, mode=mode, B=B, L=L, D=D,
-                         bags_per_lookup=B * 2)
-                results.append(r)
-                print(f"impl={impl:6s} mode={mode:6s} B={B:3d} L={L:3d} "
-                      f"D={D:3d}  p50={r['p50_ms']:8.2f}ms "
-                      f"p90={r['p90_ms']:8.2f}ms  "
-                      f"steady_traces={r['steady_traces']}")
-                if r["steady_traces"]:
-                    raise AssertionError(
-                        "plan cache failed: steady-state retrace for "
-                        f"impl={impl} mode={mode} B={B} L={L} D={D}")
+                with mesh:
+                    group = bench_group(setups, idx, impl=impl, mode=mode,
+                                        events=events, reps=args.reps)
+                for storage, r in group.items():
+                    nbytes = bytes_moved_per_lookup(B, L, D, storage)
+                    r.update(impl=impl, mode=mode, B=B, L=L, D=D,
+                             storage=storage, bags_per_lookup=B * G,
+                             bytes_moved_per_lookup=nbytes,
+                             eff_bandwidth_mbps=(
+                                 B * G * L * D * 4 / (r["p50_ms"] * 1e-3)
+                                 / 1e6))
+                    results.append(r)
+                    if mode == "pifs":
+                        p50[(storage, impl)] = r["p50_ms"]
+                    print(f"storage={storage:5s} impl={impl:6s} "
+                          f"mode={mode:6s} B={B:3d} L={L:3d} D={D:3d}  "
+                          f"p50={r['p50_ms']:8.2f}ms "
+                          f"bytes/lookup={nbytes:6d}  "
+                          f"steady_traces={r['steady_traces']}")
+                    if r["steady_traces"]:
+                        raise AssertionError(
+                            "plan cache failed: steady-state retrace for "
+                            f"storage={storage} impl={impl} mode={mode} "
+                            f"B={B} L={L} D={D}")
+        if len(storages) == 2:
+            b_fp32 = bytes_moved_per_lookup(B, L, D, "fp32")
+            b_int8 = bytes_moved_per_lookup(B, L, D, "int8")
+            comp = {
+                "B": B, "L": L, "D": D,
+                "bytes_fp32": b_fp32, "bytes_int8": b_int8,
+                "bytes_ratio": b_int8 / b_fp32,
+                "bw_improvement_x": b_fp32 / b_int8,
+                "p50_ratio_jnp": p50[("int8", "jnp")] / p50[("fp32", "jnp")],
+                "p50_ratio_pallas": (p50[("int8", "pallas")]
+                                     / p50[("fp32", "pallas")]),
+            }
+            comparisons.append(comp)
+            print(f"int8 vs fp32 @ B={B} L={L} D={D}: "
+                  f"bytes {comp['bytes_ratio']:.3f}x "
+                  f"(bw {comp['bw_improvement_x']:.2f}x), "
+                  f"p50 jnp {comp['p50_ratio_jnp']:.2f}x / "
+                  f"pallas {comp['p50_ratio_pallas']:.2f}x")
+            if comp["bytes_ratio"] >= BYTES_RATIO_GATE:
+                raise AssertionError(
+                    f"int8 bytes-moved gate failed at B={B} L={L} D={D}: "
+                    f"{comp['bytes_ratio']:.3f} >= {BYTES_RATIO_GATE}")
+            if comp["bw_improvement_x"] < BW_IMPROVEMENT_GATE:
+                raise AssertionError(
+                    f"int8 effective-bandwidth gate failed at B={B} L={L} "
+                    f"D={D}: {comp['bw_improvement_x']:.2f}x < "
+                    f"{BW_IMPROVEMENT_GATE}x")
 
     out = {
         "bench": "sls_lookup",
-        "schema": 1,
+        "schema": 2,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,
         "platform": platform.platform(),
         "mesh": {"data": 2, "model": 4},
+        "storage_modes": list(storages),
         "fp32_exact_pallas_vs_jnp": True,
+        "oracle_agreement": True,
         "results": results,
+        "int8_vs_fp32": comparisons,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
-    print(f"\nwrote {args.out} ({len(results)} rows)")
+    print(f"\nwrote {args.out} ({len(results)} rows, "
+          f"{len(comparisons)} comparisons)")
 
 
 if __name__ == "__main__":

@@ -145,6 +145,22 @@ class Checkpointer:
         if set(flat_struct) != set(leaves_meta):
             missing = set(flat_struct) ^ set(leaves_meta)
             raise ValueError(f"checkpoint/tree structure mismatch: {missing}")
+        # dtype/shape guard: the leaves of a tiered-precision EngineState
+        # carry storage semantics (int8 codes + per-page scales) — silently
+        # restoring them into a differently-built tree (e.g. an fp32-storage
+        # engine) would produce garbage lookups, so fail loudly instead.
+        # Shapes compare logically; sharding may differ (elastic restore).
+        for key, meta in leaves_meta.items():
+            want = flat_struct[key]
+            if str(want.dtype) != meta["dtype"]:
+                raise ValueError(
+                    f"checkpoint leaf {key!r} dtype mismatch: saved "
+                    f"{meta['dtype']}, restoring into {want.dtype} — was "
+                    "the engine built with the same storage= mode?")
+            if list(want.shape) != list(meta["shape"]):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} shape mismatch: saved "
+                    f"{meta['shape']}, restoring into {list(want.shape)}")
 
         flat_shard = (_flatten_nonarray(shardings, flat_struct)
                       if shardings is not None else {})

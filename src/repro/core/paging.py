@@ -26,6 +26,8 @@ import numpy as np
 
 HOT_SHARD = -1  # sentinel in page_to_shard
 
+STORAGE_FORMATS = ("fp32", "int8")  # cold-tier storage format knob
+
 
 @dataclasses.dataclass(frozen=True)
 class PagingConfig:
@@ -33,14 +35,29 @@ class PagingConfig:
     dim: int
     n_shards: int              # size of the `model` axis
     page_bytes: int = 4096
-    itemsize: int = 4          # fp32 tables by default
+    itemsize: int = 4          # logical (hot-tier / fp32) bytes per element
     hot_fraction: float = 0.05  # fraction of pages the hot tier can hold
     headroom: float = 1.3      # cold-shard slot over-provisioning for imbalance
+    storage: str = "fp32"      # cold-tier storage: fp32 passthrough or int8
+
+    def __post_init__(self):
+        if self.storage not in STORAGE_FORMATS:
+            raise ValueError(f"unknown storage {self.storage!r}; "
+                             f"expected one of {STORAGE_FORMATS}")
+
+    @property
+    def cold_itemsize(self) -> int:
+        """*Stored* bytes per element in the cold tier — the bytes that
+        actually cross the memory interface (the paper's CXL traffic)."""
+        return 1 if self.storage == "int8" else self.itemsize
 
     @property
     def page_size(self) -> int:
-        """Rows per page (>=1)."""
-        return max(1, self.page_bytes // (self.dim * self.itemsize))
+        """Rows per page (>=1).  ``page_bytes`` means *stored* bytes, so an
+        int8 cold tier packs ``itemsize/cold_itemsize``x the rows per page;
+        hot pages hold the same rows at fp32 width (they are larger in
+        DRAM — the hot tier is small by construction)."""
+        return max(1, self.page_bytes // (self.dim * self.cold_itemsize))
 
     @property
     def num_pages(self) -> int:

@@ -23,7 +23,6 @@ time without perturbing numerics.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -32,6 +31,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import quant
 from repro.core import sls as sls_ops
 from repro.core.paging import (HOT_SHARD, PageTable, PagingConfig,
                                initial_page_table, locate,
@@ -40,18 +40,31 @@ from repro.core.planner import PlannerConfig, plan
 from repro.distributed.sharding import MeshAxes, axes_for, shard_map
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class EngineState:
-    cold: jax.Array           # (n_shards * rows_per_shard, D) sharded over tp
-    hot: jax.Array            # (hot_rows, D) replicated
+    cold: jax.Array           # (n_shards * rows_per_shard, D) sharded over tp;
+    #                           fp32, or int8 codes for storage='int8'
+    hot: jax.Array            # (hot_rows, D) fp32 replicated (never quantized)
+    page_scales: jax.Array    # (num_pages,) float32 replicated per-page dequant
+    #                           scales (all-ones for fp32 storage).  Indexed by
+    #                           *global* page id, so a scale travels with its
+    #                           page across any migration untouched — that is
+    #                           what makes cold->hot->cold round trips exact
+    #                           (demotion re-quantizes with the carried scale
+    #                           and recovers the codes bit-for-bit).
     page_to_shard: jax.Array  # (num_pages,) int32 replicated
     page_to_slot: jax.Array   # (num_pages,) int32 replicated
     counts: jax.Array         # (num_pages,) float32 replicated access histogram
 
-    def tree_flatten(self):
-        return ((self.cold, self.hot, self.page_to_shard, self.page_to_slot,
-                 self.counts), None)
+    _FIELDS = ("cold", "hot", "page_scales", "page_to_shard", "page_to_slot",
+               "counts")
+
+    def tree_flatten_with_keys(self):
+        # named keys (not positional indices) so checkpoint manifests keep
+        # stable leaf names across state-layout changes
+        return (tuple((jax.tree_util.GetAttrKey(f), getattr(self, f))
+                      for f in self._FIELDS), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -87,18 +100,29 @@ class PIFSEmbeddingEngine:
                 f"paging.n_shards={paging.n_shards} != tp axis size "
                 f"{self.axes.tp_size(mesh)}")
 
+    @property
+    def quantized(self) -> bool:
+        return self.cfg.storage == "int8"
+
+    @property
+    def cold_dtype(self):
+        """Cold-tier storage dtype (int8 codes for storage='int8')."""
+        return jnp.int8 if self.quantized else self.dtype
+
     # ------------------------------------------------------------------ specs
     def state_pspecs(self) -> EngineState:
         tp = self.axes.tp
         return EngineState(
-            cold=P(tp), hot=P(), page_to_shard=P(), page_to_slot=P(),
-            counts=P())
+            cold=P(tp), hot=P(), page_scales=P(), page_to_shard=P(),
+            page_to_slot=P(), counts=P())
 
     def state_shapes(self) -> EngineState:
         c = self.cfg
         return EngineState(
-            cold=jax.ShapeDtypeStruct((c.cold_rows_total, c.dim), self.dtype),
+            cold=jax.ShapeDtypeStruct((c.cold_rows_total, c.dim),
+                                      self.cold_dtype),
             hot=jax.ShapeDtypeStruct((c.hot_rows, c.dim), self.dtype),
+            page_scales=jax.ShapeDtypeStruct((c.num_pages,), jnp.float32),
             page_to_shard=jax.ShapeDtypeStruct((c.num_pages,), jnp.int32),
             page_to_slot=jax.ShapeDtypeStruct((c.num_pages,), jnp.int32),
             counts=jax.ShapeDtypeStruct((c.num_pages,), jnp.float32),
@@ -119,7 +143,16 @@ class PIFSEmbeddingEngine:
 
     def from_dense(self, dense: jax.Array, table: Optional[PageTable] = None
                    ) -> EngineState:
-        """Pack a dense (rows, D) table into paged/sharded storage."""
+        """Pack a dense (rows, D) table into paged/sharded storage.
+
+        With ``storage='int8'`` every page gets a symmetric per-page scale
+        and cold pages are stored as int8 codes; hot pages keep their raw
+        fp32 values (hot-hit numerics are untouched), but still carry a
+        scale so a later demotion quantizes deterministically.  Note the
+        default placement starts with an *empty* hot tier, so in the
+        canonical lifecycle every hot page was once cold — its values sit
+        on the quantized grid and all later migrations are bit-exact.
+        """
         c = self.cfg
         if table is None:
             table = initial_page_table(c)
@@ -137,30 +170,44 @@ class PIFSEmbeddingEngine:
         cold_pages = np.nonzero(shard != HOT_SHARD)[0]
         hot_pages = np.nonzero(shard == HOT_SHARD)[0]
 
-        cold = jnp.zeros((c.cold_rows_total, c.dim), dense.dtype)
+        if self.quantized:
+            q_pages, scales = quant.quantize_pages(
+                dense.reshape(c.num_pages, ps, c.dim))
+            cold_vals = q_pages.reshape(c.num_pages * ps, c.dim)
+        else:
+            scales = jnp.ones((c.num_pages,), jnp.float32)
+            cold_vals = dense
+        cold = jnp.zeros((c.cold_rows_total, c.dim), self.cold_dtype)
         hot = jnp.zeros((c.hot_rows, c.dim), dense.dtype)
         if cold_pages.size:
             dst = (cold_dst[cold_pages, None] + row_off).ravel()
             src = (cold_pages[:, None] * ps + row_off).ravel()
-            cold = cold.at[dst].set(dense[src])
+            cold = cold.at[dst].set(cold_vals[src])
         if hot_pages.size:
             dst = (hot_dst[hot_pages, None] + row_off).ravel()
             src = (hot_pages[:, None] * ps + row_off).ravel()
             hot = hot.at[dst].set(dense[src])
         return EngineState(
-            cold=cold, hot=hot,
+            cold=cold, hot=hot, page_scales=scales,
             page_to_shard=jnp.asarray(shard, jnp.int32),
             page_to_slot=jnp.asarray(slot, jnp.int32),
             counts=jnp.zeros((c.num_pages,), jnp.float32))
 
     def to_dense(self, state: EngineState) -> jax.Array:
-        """Inverse of from_dense (tests / checkpoints / planner-free export)."""
+        """Inverse of from_dense (tests / checkpoints / planner-free export).
+
+        For ``storage='int8'`` the cold tier is dequantized, so the result
+        is the *effective* table every lookup path computes against.
+        """
         c = self.cfg
         ps = c.page_size
         row = jnp.arange(c.padded_rows)
         shard, local_row, is_hot = locate(c, state.page_table, row)
         cold_pos = shard * c.rows_per_shard + local_row
         cold_rows = jnp.take(state.cold, jnp.where(is_hot, 0, cold_pos), axis=0)
+        if self.quantized:
+            cold_rows = quant.dequantize_rows(
+                cold_rows, state.page_scales[row // ps][:, None])
         hot_rows = jnp.take(state.hot, jnp.where(is_hot, local_row, 0), axis=0)
         return jnp.where(is_hot[:, None], hot_rows, cold_rows)
 
@@ -193,6 +240,7 @@ class PIFSEmbeddingEngine:
             raise ValueError(f"unknown impl {impl!r}")
         key = ("lookup", mode, combine, dp_shard, impl,
                int(block_l) if impl == "pallas" else None,  # jnp ignores it
+               self.cfg.storage,
                tuple(indices.shape), jnp.dtype(indices.dtype).name,
                None if weights is None
                else (tuple(weights.shape), jnp.dtype(weights.dtype).name))
@@ -203,8 +251,8 @@ class PIFSEmbeddingEngine:
                 block_l=block_l, has_weights=weights is not None)
             self._plans[key] = plan
         self._plan_calls += 1
-        args = (state.cold, state.hot, state.page_to_shard,
-                state.page_to_slot, indices)
+        args = (state.cold, state.hot, state.page_scales,
+                state.page_to_shard, state.page_to_slot, indices)
         if weights is not None:
             args = args + (weights,)
         return plan(*args)
@@ -224,15 +272,15 @@ class PIFSEmbeddingEngine:
         else:
             out_spec = P((dp + (tp,)) if dp else tp, None, None)
 
-        def block(cold, hot, p2s, p2slot, idx, *w):
+        def block(cold, hot, scales, p2s, p2slot, idx, *w):
             wloc = w[0] if w else None
-            return self._lookup_block(cold, hot, p2s, p2slot, idx, wloc,
-                                      mode=mode, combine=combine, impl=impl,
-                                      block_l=block_l)
+            return self._lookup_block(cold, hot, scales, p2s, p2slot, idx,
+                                      wloc, mode=mode, combine=combine,
+                                      impl=impl, block_l=block_l)
 
         f = shard_map(
             block, mesh=mesh,
-            in_specs=(P(tp), P(), P(), P(), idx_spec) + w_specs,
+            in_specs=(P(tp), P(), P(), P(), P(), idx_spec) + w_specs,
             out_specs=out_spec, check_vma=False)
 
         def traced(*args):
@@ -256,7 +304,7 @@ class PIFSEmbeddingEngine:
         self._trace_count = 0
         self._plan_calls = 0
 
-    def _lookup_block(self, cold, hot, p2s, p2slot, idx, weights, *,
+    def _lookup_block(self, cold, hot, scales, p2s, p2slot, idx, weights, *,
                       mode: str, combine: str, impl: str = "jnp",
                       block_l: int = 8):
         """Per-device block: the fabric-switch Process Core."""
@@ -275,6 +323,10 @@ class PIFSEmbeddingEngine:
         my = jax.lax.axis_index(tp)
         owned = shard == my
         is_hot = shard == HOT_SHARD
+        # per-entry dequant scales (page-aligned addressing: the scale of an
+        # entry is its *global page's* scale) — an O(bags*L) scalar gather;
+        # the (rows, D)-sized fp32 cold table is never materialized
+        scale_be = scales[page] if self.quantized else None     # (nbags, L)
 
         # ---- hot tier: replicated, zero-communication ----
         hot_out = sls_ops.masked_partial_sls_dense(
@@ -289,6 +341,12 @@ class PIFSEmbeddingEngine:
             seg = jnp.repeat(jnp.arange(nbags, dtype=jnp.int32), L)
             rows = sls_ops.masked_gather_rows(
                 cold, local_row.reshape(-1), owned.reshape(-1))
+            if self.quantized:
+                # dequant after the (int8) gather, before rows hit the wire:
+                # pond still ships fp32 rows (the baseline's semantics), the
+                # *memory* interface moved 1-byte elements
+                rows = quant.dequantize_rows(
+                    rows, scale_be.reshape(-1)[:, None])
             if wbags is not None:
                 rows = rows * wbags.reshape(-1)[:, None].astype(rows.dtype)
             rows = jax.lax.psum(rows, tp)                        # (b*G*L, D)!
@@ -308,7 +366,8 @@ class PIFSEmbeddingEngine:
         # pifs / beacon: partial SLS near the data, pooled partials only
         cold_part = sls_ops.masked_partial_sls_dense(
             cold, local_row, owned, wbags, impl=impl,
-            block_l=block_l)                                     # (nbags, D)
+            block_l=block_l, scales=scale_be,
+            out_dtype=jnp.float32 if self.quantized else None)   # (nbags, D)
         if combine == "psum":
             cold_sum = jax.lax.psum(cold_part, tp)
             return (cold_sum + hot_out).reshape(b, G, -1)
@@ -369,32 +428,115 @@ class PIFSEmbeddingEngine:
         return new_state, stats
 
     def migrate(self, state: EngineState, new_table: PageTable) -> EngineState:
-        """Execute a placement change: cache-line-granular gather (IV-B4)."""
+        """Execute a placement change: cache-line-granular gather (IV-B4).
+
+        ``storage='int8'`` uses a typed gather: cold->cold moves int8 codes
+        verbatim (scales are global per-page metadata and never move),
+        cold->hot promotion dequantizes the page into the fp32 hot tier,
+        and hot->cold demotion re-quantizes with the page's *carried* scale
+        — which recovers the original codes bit-for-bit when the hot values
+        came from an earlier promotion, so lookups are placement-invariant
+        exactly in the quantized domain (property-tested).
+        """
         c = self.cfg
         cold_src, hot_src = placement_gather_indices(
             c, state.page_table, new_table)
-        cold_src = jnp.asarray(cold_src)
-        hot_src = jnp.asarray(hot_src)
 
-        # the gather plan is shape-stable across migrations — build once so
-        # the periodic replans of a live serving loop never recompile
-        if self._migrate_plan is None:
-            @functools.partial(jax.jit,
-                               out_shardings=(self.state_shardings().cold,
-                                              self.state_shardings().hot))
-            def do(cold, hot, cs, hs):
-                combined = jnp.concatenate([cold, hot], axis=0)
-                return (jnp.take(combined, cs, axis=0),
-                        jnp.take(combined, hs, axis=0))
-            self._migrate_plan = do
+        if self.quantized:
+            new_cold, new_hot = self._migrate_quantized(
+                state, new_table, cold_src, hot_src)
+        else:
+            # the gather plan is shape-stable across migrations — build once
+            # so the periodic replans of a live serving loop never recompile.
+            # The gather runs inside shard_map with an *explicit* all-gather
+            # of the cold shards: arbitrary cross-shard page moves need the
+            # full source table, and letting GSPMD infer the collective is
+            # unsound here — it compiles per input sharding, and the
+            # second migration (whose inputs arrive tp-sharded from the
+            # first) silently corrupted the store.
+            if self._migrate_plan is None:
+                tp = self.axes.tp
 
-        new_cold, new_hot = self._migrate_plan(
-            state.cold, state.hot, cold_src, hot_src)
+                def block(cold, hot, cs, hs):
+                    full = jax.lax.all_gather(cold, tp, axis=0, tiled=True)
+                    comb = jnp.concatenate([full, hot], axis=0)
+                    return (jnp.take(comb, cs, axis=0),
+                            jnp.take(comb, hs, axis=0))
+
+                self._migrate_plan = jax.jit(shard_map(
+                    block, mesh=self.mesh,
+                    in_specs=(P(tp), P(), P(tp), P()),
+                    out_specs=(P(tp), P()), check_vma=False))
+
+            new_cold, new_hot = self._migrate_plan(
+                state.cold, state.hot,
+                jnp.asarray(cold_src.astype(np.int32)),
+                jnp.asarray(hot_src.astype(np.int32)))
         return EngineState(
-            cold=new_cold, hot=new_hot,
+            cold=new_cold, hot=new_hot, page_scales=state.page_scales,
             page_to_shard=jnp.asarray(np.asarray(new_table.page_to_shard), jnp.int32),
             page_to_slot=jnp.asarray(np.asarray(new_table.page_to_slot), jnp.int32),
             counts=state.counts * 0.5)  # decay after replan (EWMA)
+
+    def _migrate_quantized(self, state: EngineState, new_table: PageTable,
+                           cold_src: np.ndarray, hot_src: np.ndarray):
+        """Typed migration for the int8 cold tier (same gather structure as
+        the fp32 path, but the hot tier is bridged through quantize/dequant
+        at the tier boundary instead of a mixed-dtype concat)."""
+        c = self.cfg
+        ps, C = c.page_size, c.cold_rows_total
+        old = state.page_table
+        pages = np.arange(c.num_pages, dtype=np.int64)
+
+        def hot_slot_pages(table: PageTable) -> np.ndarray:
+            """Per hot *row*: the global page occupying that hot slot (0 for
+            empty slots — their content is unused)."""
+            shard = np.asarray(table.page_to_shard)
+            slot = np.asarray(table.page_to_slot)
+            per_slot = np.zeros(c.hot_pages, dtype=np.int64)
+            m = shard == HOT_SHARD
+            per_slot[slot[m]] = pages[m]
+            return np.repeat(per_slot, ps)                      # (hot_rows,)
+
+        from_hot = hot_src >= C
+        args = (jnp.asarray(cold_src.astype(np.int32)),
+                jnp.asarray(np.where(from_hot, 0, hot_src).astype(np.int32)),
+                jnp.asarray(np.where(from_hot, hot_src - C, 0).astype(np.int32)),
+                jnp.asarray(from_hot),
+                jnp.asarray(hot_slot_pages(old).astype(np.int32)),
+                jnp.asarray(hot_slot_pages(new_table).astype(np.int32)))
+
+        if self._migrate_plan is None:
+            tp = self.axes.tp
+
+            def block(cold, hot, scales, cs, hs_cold, hs_hot, hs_from_hot,
+                      old_hot_page, new_hot_page):
+                # explicit all-gather (see the fp32 path for why GSPMD must
+                # not infer this); int8 codes make it 1/4 the fp32 bytes
+                full = jax.lax.all_gather(cold, tp, axis=0, tiled=True)
+                # demotions: re-quantize the (small) hot tier with each
+                # row's carried page scale; rows whose page stays hot are
+                # computed-but-unused (static shapes beat a data-dependent
+                # gather).  A previously promoted page holds exactly
+                # q * scale, so round(q * scale / scale) == q: lossless.
+                hot_q = quant.quantize_rows(hot, scales[old_hot_page][:, None])
+                new_cold = jnp.take(jnp.concatenate([full, hot_q], axis=0),
+                                    cs, axis=0)
+                # promotions: dequantize cold codes into the fp32 hot tier
+                promoted = quant.dequantize_rows(
+                    jnp.take(full, hs_cold, axis=0),
+                    scales[new_hot_page][:, None])
+                stayed = jnp.take(hot, hs_hot, axis=0)
+                new_hot = jnp.where(hs_from_hot[:, None], stayed, promoted)
+                return new_cold, new_hot
+
+            self._migrate_plan = jax.jit(shard_map(
+                block, mesh=self.mesh,
+                in_specs=(P(tp), P(), P(), P(tp), P(), P(), P(), P(), P()),
+                out_specs=(P(tp), P()), check_vma=False))
+
+        return self._migrate_plan(state.cold, state.hot, state.page_scales,
+                                  *args)
 
 
 class ServeBinding:
@@ -454,6 +596,7 @@ class ServeBinding:
 
 def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,
                       page_bytes=4096, dtype=jnp.float32,
+                      storage: str = "fp32",
                       axes: Optional[MeshAxes] = None,
                       planner: Optional[PlannerConfig] = None,
                       ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
@@ -461,20 +604,37 @@ def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,
 
     Returns (engine, offsets) where offsets[t] is added to table-t indices.
     Page alignment: each table starts on a page boundary, so pages never
-    straddle tables.
+    straddle tables.  ``storage='int8'`` selects the quantized cold tier
+    (per-page scales, fused dequant in the SLS datapath); note an int8 page
+    of the same ``page_bytes`` holds 4x the rows.
     """
     axes = axes or axes_for(mesh)
     n_shards = axes.tp_size(mesh)
     itemsize = jnp.dtype(dtype).itemsize
-    ps = max(1, page_bytes // (dim * itemsize))
+    cfg0 = PagingConfig(total_rows=1, dim=dim, n_shards=n_shards,
+                        page_bytes=page_bytes, itemsize=itemsize,
+                        hot_fraction=hot_fraction, storage=storage)
+    ps = cfg0.page_size
     offsets = []
     total = 0
     for v in vocab_sizes:
         offsets.append(total)
         total += -(-v // ps) * ps  # round table size up to page boundary
-    cfg = PagingConfig(total_rows=total, dim=dim, n_shards=n_shards,
-                       page_bytes=page_bytes, itemsize=itemsize,
-                       hot_fraction=hot_fraction)
+    cfg = dataclasses.replace(cfg0, total_rows=total)
+    # model index math downcasts global row ids to int32 (device-side
+    # gathers), and the cold tier's flat address space is even larger than
+    # the padded rows (headroom over-provisioning: cold_pos = shard *
+    # rows_per_shard + local_row in to_dense/migration) — past this bound
+    # either cast silently truncates and lookups read the wrong rows, so
+    # fail at construction instead.
+    largest = max(cfg.padded_rows, cfg.cold_rows_total)
+    if largest > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"table address space ({total} padded rows, "
+            f"{cfg.cold_rows_total} cold-tier rows incl. headroom) exceeds "
+            f"int32 range ({np.iinfo(np.int32).max}); row indices are "
+            "int32 on device — shard the tables across engines or reduce "
+            "the padded vocab sizes")
     return (PIFSEmbeddingEngine(cfg, mesh, axes=axes, planner=planner,
                                 dtype=dtype),
             np.asarray(offsets, dtype=np.int64))

@@ -1,0 +1,62 @@
+"""Per-page symmetric int8 quantization for the cold embedding tier.
+
+The cold tier is — by the planner's construction — the cold, accuracy-
+insensitive majority of rows, so it can afford 8-bit storage; what it
+cannot afford is extra bytes on the memory interface (the paper's whole
+thesis is that DLRM inference is bandwidth-bound).  Rows are quantized
+symmetrically per *page* (the placement/migration unit), so the scale
+metadata moves with the page and dequantization needs exactly one fp32
+scalar per page:
+
+    scale[p] = max |x| over page p / 127        (1.0 for all-zero pages)
+    q        = clip(round(x / scale[p]), -127, 127)   int8
+    x_hat    = float32(q) * scale[p]
+
+Properties the engine's placement invariance leans on (property-tested in
+``tests/test_property.py``):
+
+  * **Error bound** — ``|x - x_hat| <= scale[p] / 2`` elementwise (up to
+    fp rounding of the divide; all-zero pages round-trip exactly).
+  * **Idempotency** — re-quantizing dequantized values with the *same*
+    scale recovers the codes bit-for-bit: ``quantize(x_hat, s) == q``.
+    This is what makes hot->cold demotion of a previously promoted page
+    lossless: the page's scale is carried in ``EngineState.page_scales``
+    (global, per-page) and never recomputed on migration.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127  # symmetric int8 range [-127, 127]; -128 unused
+
+
+def page_scales(pages: jnp.ndarray) -> jnp.ndarray:
+    """Per-page dequant scales.  pages: (..., page_size, D) -> (...,) f32.
+
+    All-zero pages get scale 1.0 so both quantize and dequantize are
+    well-defined (and exact) for them.
+    """
+    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=(-2, -1))
+    return jnp.where(amax > 0, amax / QMAX, 1.0).astype(jnp.float32)
+
+
+def quantize_rows(rows: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """rows (..., D) float, scales broadcastable against rows -> int8."""
+    q = jnp.round(rows.astype(jnp.float32) / scales)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize_rows(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """int8 codes (..., D), scales broadcastable -> float32 values."""
+    return q.astype(jnp.float32) * scales
+
+
+def quantize_pages(pages: jnp.ndarray):
+    """(P, page_size, D) float -> ((P, page_size, D) int8, (P,) f32)."""
+    scales = page_scales(pages)
+    return quantize_rows(pages, scales[:, None, None]), scales
+
+
+def dequantize_pages(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_pages` (up to the half-scale error)."""
+    return dequantize_rows(q, scales[:, None, None])

@@ -58,7 +58,9 @@ def masked_partial_sls_dense(local_storage: jax.Array, local_rows: jax.Array,
                              owned: jax.Array,
                              weights: Optional[jax.Array] = None,
                              impl: str = "jnp", block_l: int = 8,
-                             interpret: Optional[bool] = None) -> jax.Array:
+                             interpret: Optional[bool] = None,
+                             scales: Optional[jax.Array] = None,
+                             out_dtype=None) -> jax.Array:
     """Dense-bag form of :func:`masked_partial_sls`.
 
     local_rows/owned (B, L), optional weights (B, L) -> (B, D):
@@ -67,37 +69,47 @@ def masked_partial_sls_dense(local_storage: jax.Array, local_rows: jax.Array,
     impl='jnp' is the differentiable gather+sum reference; impl='pallas'
     dispatches to the bag-tiled masked-partial SLS kernel (serving fast path —
     the engine's `shard_map` blocks run this near the data).
+
+    ``scales`` (B, L): per-entry dequant scales for a quantized (int8)
+    ``local_storage`` — each gathered row is dequantized
+    (``float(row) * scale``) before the ``f * row`` accumulate, in both
+    impls with the identical op order, so the two stay bit-for-bit equal in
+    fp32.  ``out_dtype`` defaults to the storage dtype (pass float32 for a
+    quantized store).
     """
+    if out_dtype is None:
+        out_dtype = local_storage.dtype
     if impl == "pallas":
         from repro.kernels import ops as kernel_ops
         return kernel_ops.masked_sls(
             local_storage, local_rows, owned, weights,
-            out_dtype=local_storage.dtype, block_l=block_l,
-            interpret=interpret)
+            out_dtype=out_dtype, block_l=block_l,
+            interpret=interpret, scales=scales)
     if impl != "jnp":
         raise ValueError(f"unknown impl {impl!r}")
     B, L = local_rows.shape
     D = local_storage.shape[-1]
-    dtype = local_storage.dtype
     if L == 0:
-        return jnp.zeros((B, D), dtype)
+        return jnp.zeros((B, D), out_dtype)
     # One fused gather, then a sequential accumulate in the kernel's fixed
-    # l=0..L-1 order with the same add(mul(f, row)) structure — lookup
-    # numerics are *impl-invariant* (the pallas path matches this bit-for-bit
-    # in fp32), at the cost of ordered adds instead of one fused reduce.
-    # Differentiable (gather + scan -> scatter-add under AD), so training
-    # uses this path too.
+    # l=0..L-1 order with the same add(mul(f, mul(scale, row))) structure —
+    # lookup numerics are *impl-invariant* (the pallas path matches this
+    # bit-for-bit in fp32), at the cost of ordered adds instead of one fused
+    # reduce.  Differentiable (gather + scan -> scatter-add under AD), so
+    # training uses this path too (fp32 storage; int8 stores are serving-only).
     safe_rows = jnp.where(owned, local_rows, 0)
-    rows = jnp.take(local_storage, safe_rows, axis=0)          # (B, L, D)
-    f = owned.astype(dtype)
+    rows = jnp.take(local_storage, safe_rows, axis=0).astype(out_dtype)
+    if scales is not None:
+        rows = rows * scales[..., None].astype(out_dtype)      # (B, L, D)
+    f = owned.astype(out_dtype)
     if weights is not None:
-        f = f * weights.astype(dtype)
+        f = f * weights.astype(out_dtype)
 
     def step(carry, xs):
         rows_l, f_l = xs
         return carry + f_l[:, None] * rows_l, None
 
-    out, _ = jax.lax.scan(step, jnp.zeros((B, D), dtype),
+    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
                           (rows.transpose(1, 0, 2), f.T))
     return out
 

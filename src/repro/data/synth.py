@@ -40,8 +40,12 @@ def dlrm_batches(cfg: DLRMConfig, batch: int, n_batches: int,
                "labels": labels.astype(np.int32)}
 
 
-def _padded_rows(cfg: DLRMConfig, page_bytes: int = 4096) -> int:
-    itemsize = 4
+def _padded_rows(cfg: DLRMConfig, page_bytes: int = 4096,
+                 storage: str = "fp32") -> int:
+    """Per-table padded rows — must mirror ``engine_for_tables``' page
+    rounding, including the cold-tier storage format (int8 pages of the
+    same ``page_bytes`` hold 4x the rows, so the padding boundary moves)."""
+    itemsize = 1 if storage == "int8" else 4
     ps = max(1, page_bytes // (cfg.emb_dim * itemsize))
     return -(-cfg.emb_num // ps) * ps
 

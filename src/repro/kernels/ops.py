@@ -59,19 +59,25 @@ def sls(table: jax.Array, indices: jax.Array,
 def masked_sls(table: jax.Array, indices: jax.Array, owned: jax.Array,
                weights: Optional[jax.Array] = None, out_dtype=jnp.float32,
                impl: str = "pallas", interpret: Optional[bool] = None,
-               block_l: int = 8, pad_lanes: Optional[bool] = None
-               ) -> jax.Array:
-    """Masked partial SLS (the PIFS per-shard operator): (B, L) -> (B, D)."""
+               block_l: int = 8, pad_lanes: Optional[bool] = None,
+               scales: Optional[jax.Array] = None) -> jax.Array:
+    """Masked partial SLS (the PIFS per-shard operator): (B, L) -> (B, D).
+
+    ``scales`` (B, L, optional) dequantizes a quantized (int8) ``table``
+    per gathered row inside the kernel (fused dequant; see kernels/sls.py).
+    Lane padding only touches the table's D axis, so scales are unaffected.
+    """
     if impl == "jnp":
-        return ref.masked_sls_ref(table, indices, owned, weights, out_dtype)
+        return ref.masked_sls_ref(table, indices, owned, weights, out_dtype,
+                                  scales=scales)
     if interpret is None:
         interpret = _default_interpret()
     if pad_lanes is None:
         pad_lanes = not interpret
     D = table.shape[-1]
     out = masked_sls_pallas(pad_to_lanes(table, pad_lanes), indices, owned,
-                            weights, out_dtype=out_dtype, interpret=interpret,
-                            block_l=block_l)
+                            weights, scales, out_dtype=out_dtype,
+                            interpret=interpret, block_l=block_l)
     return out[:, :D]
 
 

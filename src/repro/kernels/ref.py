@@ -23,20 +23,67 @@ def sls_ref(table: jax.Array, indices: jax.Array,
 
 def masked_sls_ref(table: jax.Array, indices: jax.Array, owned: jax.Array,
                    weights: Optional[jax.Array] = None,
-                   out_dtype=jnp.float32) -> jax.Array:
+                   out_dtype=jnp.float32,
+                   scales: Optional[jax.Array] = None) -> jax.Array:
     """Masked partial SLS oracle (the PIFS per-shard operator, dense bags).
 
     table: (V, D); indices/owned: (B, L); weights: optional (B, L).
     out[b] = sum_l owned[b,l] * w[b,l] * table[idx[b,l]].  Non-owned entries
     are remapped to row 0 before the gather (row 0 must exist) and zeroed by
     the mask, matching the kernel's always-resident-line trick.
+
+    Optional ``scales`` (B, L): per-entry dequant scales for a quantized
+    (e.g. int8) ``table`` — each gathered row is dequantized
+    (``float(row) * scale``) before the weighted accumulate, matching the
+    kernel's fused dequant (the fp32 row is never materialized table-wide).
     """
     safe = jnp.where(owned, indices, 0)
     rows = jnp.take(table, safe, axis=0).astype(out_dtype)      # (B, L, D)
+    if scales is not None:
+        rows = rows * scales[..., None].astype(out_dtype)
     w = owned.astype(out_dtype)
     if weights is not None:
         w = w * weights.astype(out_dtype)
     return (rows * w[..., None]).sum(axis=1)
+
+
+def masked_sls_quant_ref(table_q: jax.Array, indices: jax.Array,
+                         owned: jax.Array, scales: jax.Array,
+                         weights: Optional[jax.Array] = None,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """Quantized masked partial SLS oracle, **fixed l-order accumulation**.
+
+    table_q: (V, D) int8 codes; scales: (B, L) per-entry dequant scales
+    (the page scale gathered per pooling entry); indices/owned/weights as
+    in :func:`masked_sls_ref`.
+
+    out[b] = sum_{l=0..L-1} f[b,l] * (scales[b,l] * float(table_q[idx]))
+    with f = owned * weights, accumulated in ascending l with the same
+    ``add(mul(f, mul(scale, row)))`` structure as the Pallas kernel — the
+    kernel must match this **bit-for-bit in fp32** (the dequant multiply
+    happens per gathered row, *after* the bytes move, before the weighted
+    add; accumulation order is the kernel's fixed l order).  The running
+    accumulate is a ``lax.scan`` over l: XLA contracts its mul+add to the
+    same FMA it emits for the kernel's accumulate loop — a python-unrolled
+    add chain compiles differently and drifts by an ulp on weighted
+    entries.
+    """
+    B, L = indices.shape
+    D = table_q.shape[-1]
+    safe = jnp.where(owned, indices, 0)
+    rows = jnp.take(table_q, safe, axis=0).astype(out_dtype)    # (B, L, D)
+    rows = rows * scales[..., None].astype(out_dtype)
+    f = owned.astype(out_dtype)
+    if weights is not None:
+        f = f * weights.astype(out_dtype)
+
+    def step(carry, xs):
+        rows_l, f_l = xs
+        return carry + f_l[:, None] * rows_l, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
+                          (rows.transpose(1, 0, 2), f.T))
+    return out
 
 
 def dot_interaction_ref(feats: jax.Array, self_interaction: bool = False

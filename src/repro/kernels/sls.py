@@ -45,15 +45,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _make_sls_kernel(L: int, block_l: int, has_mask: bool, has_weights: bool):
+def _make_sls_kernel(L: int, block_l: int, has_mask: bool, has_weights: bool,
+                     has_scales: bool = False):
     """Build a bag-tiled SLS kernel body for a static (L, block_l, flags)."""
 
     def kernel(*refs):
-        # scalar-prefetch refs first (idx[, owned][, w]), then table/out/scratch
+        # scalar-prefetch refs first (idx[, owned][, w][, scales]), then
+        # table/out/scratch
         it = iter(refs)
         idx_ref = next(it)
         owned_ref = next(it) if has_mask else None
         w_ref = next(it) if has_weights else None
+        s_ref = next(it) if has_scales else None
         table_ref = next(it)      # (V, D) in ANY/HBM — manually DMA'd
         out_ref = next(it)        # (1, D) accumulator block, revisited per bag
         scratch = next(it)        # (2, D) VMEM double buffer
@@ -94,7 +97,13 @@ def _make_sls_kernel(L: int, block_l: int, has_mask: bool, has_weights: bool):
                 f = f * (owned_ref[b, lc] != 0).astype(out_ref.dtype)
             if has_weights:
                 f = f * w_ref[b, lc].astype(out_ref.dtype)
-            out_ref[...] += f * scratch[slot][None, :].astype(out_ref.dtype)
+            row = scratch[slot][None, :].astype(out_ref.dtype)
+            if has_scales:
+                # fused dequant: the int8 row is scaled to fp32 *after* its
+                # (1-byte-per-element) DMA landed — an fp32 copy of the cold
+                # shard never exists, only this (1, D) working row
+                row = row * s_ref[b, lc].astype(out_ref.dtype)
+            out_ref[...] += f * row
             return carry
 
         jax.lax.fori_loop(0, block_l, body, 0)
@@ -104,6 +113,7 @@ def _make_sls_kernel(L: int, block_l: int, has_mask: bool, has_weights: bool):
 
 def _sls_call(table: jax.Array, indices: jax.Array,
               owned: Optional[jax.Array], weights: Optional[jax.Array],
+              scales: Optional[jax.Array],
               out_dtype, interpret: bool, block_l: int) -> jax.Array:
     B, L = indices.shape
     V, D = table.shape
@@ -117,6 +127,8 @@ def _sls_call(table: jax.Array, indices: jax.Array,
         prefetch.append(owned.astype(jnp.int32))
     if weights is not None:
         prefetch.append(weights)
+    if scales is not None:
+        prefetch.append(scales.astype(jnp.float32))
 
     def out_map(b, t, *prefetch_refs):
         return (b, 0)
@@ -130,7 +142,8 @@ def _sls_call(table: jax.Array, indices: jax.Array,
                         pltpu.SemaphoreType.DMA((2,))],
     )
     kernel = _make_sls_kernel(L, block_l, has_mask=owned is not None,
-                              has_weights=weights is not None)
+                              has_weights=weights is not None,
+                              has_scales=scales is not None)
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
@@ -145,14 +158,15 @@ def sls_pallas(table: jax.Array, indices: jax.Array,
                out_dtype=jnp.float32, interpret: bool = True,
                block_l: int = 8) -> jax.Array:
     """SLS via pl.pallas_call. indices: (B, L) int32 -> (B, D) pooled."""
-    return _sls_call(table, indices, None, weights, out_dtype, interpret,
-                     block_l)
+    return _sls_call(table, indices, None, weights, None, out_dtype,
+                     interpret, block_l)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("out_dtype", "interpret", "block_l"))
 def masked_sls_pallas(table: jax.Array, indices: jax.Array, owned: jax.Array,
                       weights: Optional[jax.Array] = None,
+                      scales: Optional[jax.Array] = None,
                       out_dtype=jnp.float32, interpret: bool = True,
                       block_l: int = 8) -> jax.Array:
     """Masked partial SLS: out[b] = sum_l owned[b,l]*w[b,l]*table[idx[b,l]].
@@ -160,6 +174,12 @@ def masked_sls_pallas(table: jax.Array, indices: jax.Array, owned: jax.Array,
     The per-shard operator of the PIFS engine: ``owned`` marks the pooling
     entries whose rows live on this shard; everything else contributes zero
     (and its gather is remapped to row 0, which must exist).
+
+    Optional ``scales`` (B, L): per-entry dequant scales for a quantized
+    (int8) ``table``.  Each DMA'd row is dequantized in VMEM
+    (``float(row) * scale``) right before the weighted accumulate — the
+    tiered-precision store's fused-dequant datapath (oracle:
+    ``kernels/ref.py:masked_sls_quant_ref``).
     """
-    return _sls_call(table, indices, owned, weights, out_dtype, interpret,
-                     block_l)
+    return _sls_call(table, indices, owned, weights, scales, out_dtype,
+                     interpret, block_l)

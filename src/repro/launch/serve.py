@@ -35,12 +35,13 @@ def build_serving(cfg, mesh, *, mode: str = "pifs", impl: str = "jnp",
                   batch_sizes: Tuple[int, ...] = (8, 16, 32),
                   poolings: Tuple[int, ...] = (),
                   slo_ms: float = 50.0, hot_fraction: float = 0.05,
+                  storage: str = "fp32",
                   runtime_cfg: RuntimeConfig = RuntimeConfig(),
                   ) -> Tuple[ServingRuntime, "object"]:
     """Compose (runtime, binding) for a config; buckets warmed by the
     caller via ``runtime.warmup``."""
     binding = bind_model(cfg, mesh, mode=mode, impl=impl, block_l=block_l,
-                         hot_fraction=hot_fraction)
+                         hot_fraction=hot_fraction, storage=storage)
     levels = tuple(sorted(set(poolings))) or (
         (cfg.pooling,) if hasattr(cfg, "pooling") else (1,))
     if batcher == "dynamic":
@@ -65,13 +66,16 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                        closed_loop_users: int = 0,
                        ) -> Dict[str, object]:
     """End-to-end: bind, warm every bucket, serve the stream, and report
-    metrics + the steady-state retrace count (must be 0)."""
+    metrics + the steady-state retrace count (must be 0).  The engine's
+    cold-tier storage format rides in ``load.storage`` (the DLRM request
+    streams need it for table-offset page rounding)."""
     runtime, binding = build_serving(
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
-        hot_fraction=hot_fraction, runtime_cfg=runtime_cfg)
+        hot_fraction=hot_fraction, storage=load.storage,
+        runtime_cfg=runtime_cfg)
     with mesh:
-        runtime.warmup(dummy_request_factory(cfg))
+        runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
         binding.reset_plan_stats()        # steady state begins here
         warm_replans = binding.replans
         if closed_loop_users > 0:
@@ -102,6 +106,10 @@ def main() -> None:
                     help="engine SLS datapath (pallas = bag-tiled kernel)")
     ap.add_argument("--block-l", type=int, default=8,
                     help="pallas kernel pooling-tile size")
+    ap.add_argument("--storage", default="fp32", choices=["fp32", "int8"],
+                    help="cold-tier storage: fp32 passthrough or int8 with "
+                         "per-page scales (dequant fused into the SLS "
+                         "accumulate)")
     ap.add_argument("--batcher", default="dynamic",
                     choices=["dynamic", "fixed"])
     ap.add_argument("--batch-sizes", type=int, nargs="+",
@@ -125,7 +133,7 @@ def main() -> None:
         n_requests=args.requests,
         arrival=ArrivalConfig(rate_qps=args.qps, process=args.arrival,
                               seed=args.seed),
-        slo_ms=args.slo_ms, seed=args.seed)
+        slo_ms=args.slo_ms, seed=args.seed, storage=args.storage)
     out = serve_offered_load(
         cfg, mesh, load, mode=args.mode, impl=args.impl,
         block_l=args.block_l, batcher=args.batcher,

@@ -29,10 +29,14 @@ from repro.models.params import Spec
 
 
 def build_engine(cfg: DLRMConfig, mesh: Mesh, hot_fraction: float = 0.05,
-                 dtype=jnp.float32) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
+                 dtype=jnp.float32, storage: str = "fp32",
+                 ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
+    """``storage='int8'`` selects the quantized cold tier (serving-only:
+    the int8 store is not differentiable — train with fp32)."""
     vocabs = [cfg.emb_num] * cfg.n_tables
     return engine_for_tables(vocabs, cfg.emb_dim, mesh,
-                             hot_fraction=hot_fraction, dtype=dtype)
+                             hot_fraction=hot_fraction, dtype=dtype,
+                             storage=storage)
 
 
 def model_specs(cfg: DLRMConfig, mesh: Mesh, dtype=jnp.float32) -> dict:

@@ -40,9 +40,18 @@ from repro.models.params import Spec
 
 
 def build_engine(cfg: RecConfig, mesh: Mesh, hot_fraction: float = 0.05,
-                 dtype=jnp.float32) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
+                 dtype=jnp.float32, storage: str = "fp32",
+                 ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
+    """``storage='int8'`` selects the quantized cold tier (serving-only).
+
+    The returned offsets are int64; lookups add them and downcast to int32
+    on device, which is safe because engine_for_tables validates the whole
+    padded address space fits int32 at construction (a silent-truncation
+    regression is pinned in tests/test_pifs_engine.py).
+    """
     return engine_for_tables(list(cfg.vocab_sizes), cfg.embed_dim, mesh,
-                             hot_fraction=hot_fraction, dtype=dtype)
+                             hot_fraction=hot_fraction, dtype=dtype,
+                             storage=storage)
 
 
 def _constrain_full_batch(x: jax.Array, engine) -> jax.Array:

@@ -47,6 +47,8 @@ class LoadConfig:
     distribution: str = "zipfian"
     drift_every: int = 256               # serve-stream hot-set churn period
     seed: int = 0
+    storage: str = "fp32"                # engine cold-tier storage; DLRM
+    #                                      table offsets depend on its page size
 
 
 # ---------------------------------------------------------------------------
@@ -56,19 +58,25 @@ class LoadConfig:
 
 def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                block_l: int = 8, hot_fraction: float = 0.05,
-               seed: int = 0) -> ServeBinding:
-    """Build engine + params + jitted serve step for a DLRM or Rec config."""
+               seed: int = 0, storage: str = "fp32") -> ServeBinding:
+    """Build engine + params + jitted serve step for a DLRM or Rec config.
+
+    ``storage`` selects the engine's cold-tier format (fp32 passthrough or
+    int8 with per-page scales and fused dequant in the SLS datapath).
+    """
     k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
     if isinstance(cfg, DLRMConfig):
         engine, _ = dlrm_mod.build_engine(cfg, mesh,
-                                          hot_fraction=hot_fraction)
+                                          hot_fraction=hot_fraction,
+                                          storage=storage)
         params = prm.initialize(dlrm_mod.model_specs(cfg, mesh), k_params)
         step = jax.jit(dlrm_mod.make_serve_step(
             cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l))
         idx_key = "indices"
     elif isinstance(cfg, RecConfig):
         engine, offs = rec_mod.build_engine(cfg, mesh,
-                                            hot_fraction=hot_fraction)
+                                            hot_fraction=hot_fraction,
+                                            storage=storage)
         params = prm.initialize(rec_mod.model_specs(cfg, mesh), k_params)
         step = jax.jit(rec_mod.make_serve_step(
             cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l))
@@ -111,9 +119,11 @@ def make_padder(cfg) -> Callable[[Sequence[Request], Bucket], dict]:
 
 
 def _dlrm_features(cfg: DLRMConfig, ids: np.ndarray, rid: int,
-                   seed: int) -> dict:
+                   seed: int, storage: str = "fp32") -> dict:
+    # global-row offsets follow the engine's page rounding, which depends
+    # on the cold-tier storage format (int8 pages hold 4x the rows)
     offs = (np.arange(cfg.n_tables, dtype=np.int64)
-            * _padded_rows(cfg))[:, None]
+            * _padded_rows(cfg, storage=storage))[:, None]
     rng = np.random.default_rng([seed, _DENSE_TAG, rid])
     return {"dense": rng.normal(size=(cfg.n_dense,)).astype(np.float32),
             "indices": (ids + offs).astype(np.int32)}
@@ -152,7 +162,8 @@ def request_stream(cfg, load: LoadConfig) -> List[Request]:
             reqs.append(Request(
                 rid=i, arrival_s=float(times[i]),
                 deadline_s=float(times[i]) + slo_s,
-                features=_dlrm_features(cfg, ids, i, load.seed),
+                features=_dlrm_features(cfg, ids, i, load.seed,
+                                        storage=load.storage),
                 pooling=ids.shape[1]))
     else:
         for i in range(load.n_requests):
@@ -181,7 +192,8 @@ def closed_loop_factory(cfg, load: LoadConfig
             ids = next(it)
             return Request(rid=rid, arrival_s=arrival_s,
                            deadline_s=arrival_s + slo_s,
-                           features=_dlrm_features(cfg, ids, rid, load.seed),
+                           features=_dlrm_features(cfg, ids, rid, load.seed,
+                                                   storage=load.storage),
                            pooling=ids.shape[1], user=user)
         return make_dlrm
 
@@ -193,13 +205,15 @@ def closed_loop_factory(cfg, load: LoadConfig
     return make_rec
 
 
-def dummy_request_factory(cfg) -> Callable[[int, int], Request]:
+def dummy_request_factory(cfg, storage: str = "fp32"
+                          ) -> Callable[[int, int], Request]:
     """Fabricate bucket-warmup dummies (valid ids, zero-ish features)."""
     if isinstance(cfg, DLRMConfig):
         def make_dlrm(rid: int, pooling: int) -> Request:
             ids = np.zeros((cfg.n_tables, pooling), dtype=np.int64)
             return Request(rid=-1 - rid, arrival_s=0.0, deadline_s=1e9,
-                           features=_dlrm_features(cfg, ids, 0, 0),
+                           features=_dlrm_features(cfg, ids, 0, 0,
+                                                   storage=storage),
                            pooling=pooling)
         return make_dlrm
 

@@ -97,6 +97,48 @@ def test_masked_sls_empty_and_full_masks():
                                                      interpret=True)))
 
 
+@pytest.mark.parametrize("B,L,V,D,block_l", [
+    (8, 8, 256, 64, 8),       # exact tiling
+    (8, 8, 256, 64, 3),       # tail tile
+    (4, 9, 128, 32, 4),       # tail tile of 1
+    (3, 7, 100, 130, 4),      # odd D, non-128-multiple
+])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_masked_sls_quant_kernel_matches_oracle_bitwise(B, L, V, D, block_l,
+                                                        weighted):
+    """int8 table + per-entry dequant scales: the kernel's fused dequant
+    must match the fixed-l-order quantized oracle bit-for-bit in fp32."""
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(B + L + D), 5)
+    table_q = jax.random.randint(k1, (V, D), -127, 128).astype(jnp.int8)
+    idx = jax.random.randint(k2, (B, L), 0, V).astype(jnp.int32)
+    owned = jax.random.bernoulli(k3, 0.5, (B, L))
+    scales = jax.random.uniform(k4, (B, L), minval=1e-4, maxval=2e-2)
+    w = jax.random.uniform(k5, (B, L)) if weighted else None
+    out = ops.masked_sls(table_q, idx, owned, w, scales=scales,
+                         interpret=True, block_l=block_l)
+    want = ref.masked_sls_quant_ref(table_q, idx, owned, scales, w)
+    assert out.dtype == jnp.float32 and out.shape == (B, D)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_masked_sls_quant_jnp_dispatch_matches_oracle():
+    """The jnp fallback (ops.masked_sls impl='jnp') dequantizes with the
+    same semantics as the quantized oracle (sum order may differ)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(11), 4)
+    table_q = jax.random.randint(k1, (64, 16), -127, 128).astype(jnp.int8)
+    idx = jax.random.randint(k2, (4, 6), 0, 64).astype(jnp.int32)
+    owned = jax.random.bernoulli(k3, 0.5, (4, 6))
+    scales = jax.random.uniform(k4, (4, 6), minval=1e-4, maxval=1e-2)
+    a = ops.masked_sls(table_q, idx, owned, scales=scales, impl="jnp")
+    want = ref.masked_sls_quant_ref(table_q, idx, owned, scales)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(want), rtol=1e-6,
+                               atol=1e-7)
+    # empty mask still pools to exactly zero through the dequant path
+    none = jnp.zeros((4, 6), bool)
+    z = ops.masked_sls(table_q, idx, none, scales=scales, interpret=True)
+    np.testing.assert_array_equal(np.asarray(z), np.zeros((4, 16)))
+
+
 def test_sls_zero_length_bags():
     table = jnp.ones((8, 16))
     idx = jnp.zeros((4, 0), jnp.int32)

@@ -20,6 +20,14 @@ def engine(mesh):
     return eng
 
 
+@pytest.fixture()
+def engine_q(mesh):
+    """int8 cold tier with per-page scales (the tiered-precision store)."""
+    eng, offs = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                  hot_fraction=0.06, storage="int8")
+    return eng
+
+
 def _ref_lookup(eng, state, idx):
     dense = eng.to_dense(state)
     B, G, L = idx.shape
@@ -54,7 +62,10 @@ def test_weighted_lookup(engine, mesh):
 
 
 def test_placement_invariance_under_migration(engine, mesh):
-    """The planner may move pages at any time; lookups must not change."""
+    """The planner may move pages at any time; lookups must not change —
+    including across *repeated* migrations on already-sharded state (a
+    regression for the GSPMD-inferred migrate gather, which corrupted the
+    store on the second call)."""
     state = engine.init_state(jax.random.PRNGKey(0))
     idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
                              ).astype(jnp.int32)
@@ -63,8 +74,14 @@ def test_placement_invariance_under_migration(engine, mesh):
         st = engine.observe(state, idx)
         st2, stats = engine.plan_and_migrate(st)
         after = np.asarray(engine.lookup(st2, idx))
+        # second cycle with a different hot set: demotions + promotions on
+        # state whose storage is now tp-sharded by the first migration
+        st3 = engine.observe(st2, (idx * 7 + 3) % 500)
+        st4, _ = engine.plan_and_migrate(st3)
+        after2 = np.asarray(engine.lookup(st4, idx))
     assert stats["hot_pages"] > 0
     np.testing.assert_allclose(before, after, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(before, after2, rtol=1e-5, atol=1e-5)
 
 
 def test_hot_pages_become_local(engine, mesh):
@@ -172,6 +189,140 @@ def test_lookup_plan_cache_compiles_once(engine, mesh, impl):
         engine.lookup(state, idx, mode="pond", impl=impl)
     assert engine.plan_stats()["plans"] == 4
     assert engine.plan_stats()["traces"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Tiered-precision store (storage='int8')
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_lookup_matches_dequantized_oracle(engine_q, mesh):
+    """Every mode/impl must agree with the dequantized dense reference
+    (to_dense is the effective table: int8 codes * per-page scales)."""
+    state = engine_q.init_state(jax.random.PRNGKey(0))
+    assert state.cold.dtype == jnp.int8
+    assert state.page_scales.shape == (engine_q.cfg.num_pages,)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    want = _ref_lookup(engine_q, state, idx)
+    with mesh:
+        for mode in ("pifs", "pond", "beacon"):
+            got = engine_q.lookup(state, idx, mode=mode)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_lookup_tracks_fp32_within_error_bound(mesh):
+    """int8 vs fp32 lookups on the same dense table differ by at most the
+    summed per-entry half-scale quantization error."""
+    eng32, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                 hot_fraction=0.06)
+    eng8, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                hot_fraction=0.06, storage="int8")
+    dense = jax.random.normal(jax.random.PRNGKey(0), (800, 16)) * 0.05
+    s32 = eng32.from_dense(dense)
+    s8 = eng8.from_dense(dense)
+    L = 4
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, L), 0, 500
+                             ).astype(jnp.int32)
+    with mesh:
+        a = np.asarray(eng32.lookup(s32, idx))
+        b = np.asarray(eng8.lookup(s8, idx))
+    bound = L * float(np.asarray(s8.page_scales).max()) * 0.5 * 1.01
+    assert np.abs(a - b).max() <= bound
+
+
+@pytest.mark.parametrize("mode", ["pifs", "pond"])
+def test_quantized_pallas_impl_agrees_with_jnp_exactly(engine_q, mesh, mode):
+    """Fused dequant must not break impl-invariance: both datapaths scale
+    each gathered row then accumulate in the same fixed l-order."""
+    state = engine_q.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (8, 2, 4))
+    with mesh:
+        a = engine_q.lookup(state, idx, mode=mode, impl="jnp")
+        b = engine_q.lookup(state, idx, mode=mode, impl="pallas")
+        aw = engine_q.lookup(state, idx, weights=w, mode=mode, impl="jnp")
+        bw = engine_q.lookup(state, idx, weights=w, mode=mode, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(aw), np.asarray(bw))
+
+
+def test_quantized_placement_invariance_is_exact(engine_q, mesh):
+    """Migration is *bit-exact* in the quantized domain: cold->cold moves
+    codes and their (global, per-page) scales verbatim, promotion stores
+    exactly q*scale in fp32, and demotion re-quantizes with the carried
+    scale, recovering the codes — through multiple observe/replan cycles
+    with hot-set churn (promotions AND demotions)."""
+    state = engine_q.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (8, 2, 4))
+    with mesh:
+        st = state
+        before = np.asarray(engine_q.lookup(st, idx))
+        before_w = np.asarray(engine_q.lookup(st, idx, weights=w))
+        promoted = 0
+        for cycle in range(3):
+            hammer = idx if cycle % 2 == 0 else (idx * 7 + 3) % 500
+            st = engine_q.observe(st, hammer)
+            st, stats = engine_q.plan_and_migrate(st)
+            promoted = max(promoted, stats["hot_pages"])
+            after = np.asarray(engine_q.lookup(st, idx))
+            after_w = np.asarray(engine_q.lookup(st, idx, weights=w))
+            np.testing.assert_array_equal(before, after)
+            np.testing.assert_array_equal(before_w, after_w)
+        # scales never move: they are global per-page metadata
+        np.testing.assert_array_equal(np.asarray(state.page_scales),
+                                      np.asarray(st.page_scales))
+    assert promoted > 0
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_quantized_plan_cache_compiles_once(engine_q, mesh, impl):
+    """storage='int8' signatures share the plan-cache contract: one trace
+    per signature, zero steady-state retraces."""
+    state = engine_q.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    engine_q.reset_plan_stats()
+    with mesh:
+        outs = [np.asarray(engine_q.lookup(state, idx, impl=impl))
+                for _ in range(5)]
+    assert engine_q.plan_stats() == {"plans": 1, "traces": 1, "calls": 5}
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+def test_quantized_roundtrip_through_from_to_dense(engine_q, mesh):
+    """to_dense(from_dense(x)) is exactly the quantize->dequantize of x for
+    the all-cold initial placement."""
+    from repro.core import quant
+    c = engine_q.cfg
+    dense = jax.random.normal(jax.random.PRNGKey(3), (c.padded_rows, c.dim))
+    state = engine_q.from_dense(dense)
+    got = np.asarray(engine_q.to_dense(state))
+    q, scales = quant.quantize_pages(
+        dense.reshape(c.num_pages, c.page_size, c.dim))
+    want = np.asarray(quant.dequantize_pages(q, scales)).reshape(
+        c.padded_rows, c.dim)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_address_space_must_fit_int32(mesh):
+    """Regression: engine_for_tables returns int64 offsets and model code
+    downcasts the summed global index to int32 — construction must refuse
+    address spaces where that cast would silently truncate."""
+    with pytest.raises(ValueError, match="int32"):
+        engine_for_tables([2 ** 31], dim=16, mesh=mesh)
+    # int8 packs 4x the rows per page but the row *count* is what must fit
+    with pytest.raises(ValueError, match="int32"):
+        engine_for_tables([2 ** 30, 2 ** 30, 2 ** 30], dim=16, mesh=mesh,
+                          storage="int8")
+    # just under the bound constructs fine (no arrays are allocated)
+    eng, offs = engine_for_tables([2 ** 30], dim=16, mesh=mesh)
+    assert offs.dtype == np.int64
 
 
 def test_psum_scatter_combine(engine, mesh):

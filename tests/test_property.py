@@ -11,6 +11,7 @@ pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
 from hypothesis import HealthCheck, given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
+from repro.core import quant
 from repro.core.hot_cache import FIFOCache, HTRCache, LRUCache
 from repro.core.paging import (PagingConfig, initial_page_table, locate,
                                placement_gather_indices)
@@ -100,6 +101,38 @@ def test_migration_gather_preserves_content(seed):
             base = n_shard[p] * cfg.rows_per_shard + n_slot[p] * ps
             got = new_cold[base: base + ps]
         assert (got == np.arange(src0, src0 + ps)).all(), f"page {p}"
+
+
+@given(n_pages=st.integers(1, 16), ps=st.sampled_from([1, 4, 16]),
+       D=st.sampled_from([4, 16]), mag=st.floats(1e-4, 1e3),
+       seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_quantize_roundtrip_error_bound(n_pages, ps, D, mag, seed):
+    """Per-page int8 round trip: |x - dequant(quant(x))| <= scale/2 per
+    element, all-zero pages round-trip exactly, and re-quantizing the
+    dequantized values with the same scales recovers the codes bit-for-bit
+    (the idempotency the engine's exact migration invariance rests on).
+    ps=1 covers single-row pages."""
+    rng = np.random.default_rng(seed)
+    pages = (rng.normal(size=(n_pages, ps, D)) * mag).astype(np.float32)
+    pages[0] = 0.0                              # all-zero page edge case
+    pages = jnp.asarray(pages)
+    q, scales = quant.quantize_pages(pages)
+    deq = quant.dequantize_pages(q, scales)
+    s = np.asarray(scales)
+    # per-page scale correctness: amax/127, or 1.0 for all-zero pages
+    amax = np.abs(np.asarray(pages)).max(axis=(1, 2))
+    np.testing.assert_allclose(
+        s, np.where(amax > 0, amax / quant.QMAX, 1.0), rtol=1e-7)
+    assert s[0] == 1.0
+    # error bound (tiny slack for the fp32 divide's rounding)
+    err = np.abs(np.asarray(deq) - np.asarray(pages))
+    bound = (s * 0.5 * (1 + 1e-5) + 1e-30)[:, None, None]
+    assert (err <= bound).all()
+    np.testing.assert_array_equal(np.asarray(deq)[0], 0.0)
+    # idempotency
+    q2 = quant.quantize_rows(deq, scales[:, None, None])
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
 
 
 @given(B=st.integers(1, 8), L=st.integers(1, 8), V=st.integers(4, 128),

@@ -63,6 +63,46 @@ def test_checkpoint_structure_mismatch_raises(tmp_path):
         ck.restore({"different": jnp.zeros(3)})
 
 
+def test_checkpoint_roundtrips_quantized_engine_state(tmp_path, mesh):
+    """Elastic restore must not drop quantization state: the int8 codes and
+    the page_scales leaf round-trip bit-for-bit, and a restored state
+    serves bit-identical lookups."""
+    eng, _ = engine_for_tables([300, 200], dim=16, mesh=mesh,
+                               hot_fraction=0.1, storage="int8")
+    state = eng.init_state(jax.random.PRNGKey(0))
+    idx = jnp.asarray(np.arange(64).reshape(8, 2, 4) % 300, jnp.int32)
+    with mesh:
+        st = eng.observe(state, idx)
+        st, _ = eng.plan_and_migrate(st)       # a non-trivial placement
+        before = np.asarray(eng.lookup(st, idx))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, st, blocking=True)
+    restored = ck.restore(st, shardings=eng.state_shardings())
+    assert restored.cold.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(restored.page_scales),
+                                  np.asarray(st.page_scales))
+    np.testing.assert_array_equal(np.asarray(restored.cold),
+                                  np.asarray(st.cold))
+    with mesh:
+        after = np.asarray(eng.lookup(restored, idx))
+    np.testing.assert_array_equal(before, after)
+
+
+def test_checkpoint_storage_mode_mismatch_raises(tmp_path, mesh):
+    """Restoring a quantized state into an fp32-storage engine's structure
+    must fail loudly (dtype guard), not silently misinterpret codes."""
+    eng8, _ = engine_for_tables([300, 200], dim=16, mesh=mesh,
+                                hot_fraction=0.1, storage="int8")
+    st8 = eng8.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, st8, blocking=True)
+    eng32, _ = engine_for_tables([300, 200], dim=16, mesh=mesh,
+                                 hot_fraction=0.1)
+    st32 = eng32.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="dtype|shape"):
+        ck.restore(st32)
+
+
 def test_checkpoint_elastic_restore_across_meshes(tmp_path):
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 devices")

@@ -232,6 +232,24 @@ def test_bucket_padding_is_exact(mesh):
             np.testing.assert_array_equal(padded[i], ref)
 
 
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_loadgen_offsets_match_engine_offsets(mesh, storage):
+    """Regression for the offset mirror: the DLRM request factories derive
+    global-row offsets from synth._padded_rows, which must track the
+    engine's storage-dependent page rounding exactly — int8 pages hold 4x
+    the rows, so the padding boundary (and every table>=1 offset) moves.
+    A divergence here serves garbage embeddings with no error."""
+    from repro.configs import get_config, reduced
+    from repro.data.synth import _padded_rows
+    from repro.models import dlrm as dlrm_mod
+
+    cfg = reduced(get_config("rmc1"))
+    engine, offs = dlrm_mod.build_engine(cfg, mesh, storage=storage)
+    mirrored = np.arange(cfg.n_tables, dtype=np.int64) * _padded_rows(
+        cfg, storage=storage)
+    np.testing.assert_array_equal(offs, mirrored)
+
+
 def test_observe_with_pad_weights_counts_only_real_lookups(mesh):
     """The profiler must not rank pages by padding artifacts: weight-0
     entries (pooling pad + replicated batch-pad rows) contribute nothing."""
