@@ -56,7 +56,7 @@ from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
                            FixedBatcher, LoadConfig, OpenLoopSource,
                            RuntimeConfig, ServingRuntime, bind_model,
                            dummy_request_factory, make_padder,
-                           request_stream)
+                           prime_dedup_auto, request_stream)
 
 
 def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
@@ -65,12 +65,21 @@ def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
                              make_padder(cfg), runtime_cfg)
     runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
     # ^ no-op cost once plans warm
+    reqs = request_stream(cfg, load)
+    if load.dedup == "auto" and prime_dedup_auto(binding, reqs):
+        # 'auto' freezes per bucket at plan build — rebuild the buckets
+        # against a histogram primed with the live stream's prefix
+        runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
     binding.reset_plan_stats()
     warm_replans = binding.replans
-    summary = runtime.run(OpenLoopSource(request_stream(cfg, load)))
+    binding.dedup_stats.clear()
+    summary = runtime.run(OpenLoopSource(reqs))
     stats = binding.plan_stats()
     summary["steady_traces"] = stats["traces"]
     summary["replans"] = binding.replans - warm_replans
+    # measured per-bucket duplicate factor (observe-cadence probe): makes
+    # serving wins attributable in bytes, not just p50
+    summary["dedup_factors"] = binding.dedup_report()
     return summary
 
 
@@ -92,6 +101,10 @@ def main() -> None:
                     help="engine cold-tier storage dtype (reported in the "
                          "run header so BENCH_serve.json entries stay "
                          "comparable across storage modes)")
+    ap.add_argument("--dedup", default="off", choices=["off", "auto", "on"],
+                    help="gather-once duplicate coalescing in the SLS "
+                         "datapath (bit-exact; reported per bucket so "
+                         "serving wins are attributable in bytes)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration (fewer requests/buckets)")
     args = ap.parse_args()
@@ -129,9 +142,11 @@ def main() -> None:
 
     print(f"serve bench: arch={args.arch} mode={args.mode} impl={args.impl} "
           f"storage={args.storage} (cold tier "
-          f"{'int8+page-scales' if args.storage == 'int8' else 'fp32'})")
+          f"{'int8+page-scales' if args.storage == 'int8' else 'fp32'}) "
+          f"dedup={args.dedup}")
     binding = bind_model(cfg, mesh, mode=args.mode, impl=args.impl,
-                         block_l=args.block_l, storage=args.storage)
+                         block_l=args.block_l, storage=args.storage,
+                         dedup=args.dedup)
     bat_cfg = BatcherConfig(batch_sizes=batch_sizes, poolings=poolings)
     fixed_bucket = Bucket(batch_sizes[-1], poolings[-1])
     runtime_cfg = RuntimeConfig(observe_every=4, replan_every=32)
@@ -178,7 +193,7 @@ def main() -> None:
             load = LoadConfig(
                 n_requests=n_requests, arrival=arrival, slo_ms=slo_ms,
                 poolings=poolings if len(poolings) > 1 else (),
-                seed=7, storage=args.storage)
+                seed=7, storage=args.storage, dedup=args.dedup)
             dyn_cfg = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
             dyn = run_policy(binding, cfg, DynamicBatcher(dyn_cfg), load,
                              runtime_cfg)
@@ -195,6 +210,11 @@ def main() -> None:
                       f"slo_viol={r['slo_violation_rate']:.3f} "
                       f"occ={r['batch_occupancy_mean']:.2f} "
                       f"steady_traces={r['steady_traces']}")
+                for bucket, rec in r.get("dedup_factors", {}).items():
+                    print(f"            dedup[{bucket}] "
+                          f"factor={rec['factor']:.2f} "
+                          f"({rec['entries']} entries -> "
+                          f"{rec['unique_rows']} unique)")
                 if r["steady_traces"]:
                     raise AssertionError(
                         f"plan cache failed: steady-state retrace in "
@@ -216,7 +236,7 @@ def main() -> None:
 
     out = {
         "bench": "serve",
-        "schema": 1,
+        "schema": 2,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,
@@ -227,6 +247,7 @@ def main() -> None:
         "impl": args.impl,
         "block_l": args.block_l,
         "storage": args.storage,
+        "dedup": args.dedup,
         "batch_sizes": list(batch_sizes),
         "poolings": list(poolings),
         "warmup_service_s": warm,

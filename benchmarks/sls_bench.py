@@ -1,51 +1,77 @@
-"""SLS hot-path benchmark: latency, retraces, and — since the tiered-
-precision store — *bytes moved*.
+"""SLS hot-path benchmark: latency, retraces, *bytes moved*, and — since
+the gather-once coalescing PR — duplicate-access dedup under realistic
+(zipfian) index traffic.
 
-Sweeps ``{storage} x {impl} x {mode} x {B, L, D}`` on a real
-``PIFSEmbeddingEngine`` (8 fake CPU devices, dp=2 x tp=4 mesh), measuring
-per-lookup wall latency (p50/p90 over timed reps after warmup), retrace
-behaviour of the compiled-lookup plan cache, and the bandwidth ledger of
-each storage mode.  Two independent retrace probes:
+Sweeps ``{distribution} x {storage} x {dedup} x {impl} x {mode} x
+{B, L, D}`` on a real ``PIFSEmbeddingEngine`` (8 fake CPU devices,
+dp=2 x tp=4 mesh), measuring per-lookup wall latency (p50/p90 over timed
+reps after warmup), retrace behaviour of the compiled-lookup plan cache,
+and the bandwidth ledger of each datapath.  Two independent retrace
+probes:
 
   * ``engine.plan_stats()`` — the engine's own jit-trace counter (fires once
     per shape-signature trace; steady state must stay flat), and
   * ``jax.monitoring`` compile events (``/jax/.../backend_compile``-style) —
     an XLA-level cross-check counted per measurement phase.
 
+Index streams (the seed bench only timed **uniform** ``jax.random.randint``
+ids, which understates every locality optimization in this repo):
+
+  * ``uniform`` — i.i.d. uniform row ids (the seed behaviour; the traces
+    module calls this family "random" — its "uniform" is a duplicate-free
+    round-robin sweep, which is not what a bandwidth bench should time), and
+  * ``zipfian`` — ``data/traces.py``'s calibrated zipfian generator
+    (``--alpha``, default the Meta-trace-like 1.1), per-table preference
+    permutations included.  Ids stay within the first table's page-aligned
+    prefix so one index tensor is valid for both storage layouts (int8
+    pages hold 4x the rows, so table offsets differ between storages).
+
 Correctness gates before timing anything:
 
-  * pallas matches jnp **bit-for-bit in fp32** for every storage mode (both
-    accumulate in the same fixed l-order, dequant fused identically), and
-  * every storage mode agrees with the dequantized dense oracle
+  * pallas matches jnp **bit-for-bit in fp32** for every storage mode, and
+    ``dedup=on`` matches ``dedup=off`` bit-for-bit for both impls (the
+    coalesced path changes the gather, never the accumulate order), and
+  * every datapath agrees with the dequantized dense oracle
     (``engine.to_dense`` + ``sls_dense_ref``).
 
-Bandwidth ledger (the PR's point — DLRM inference is bandwidth-bound, so
-the stored bytes crossing the memory interface are the cost that matters):
+Bandwidth ledger (the point — DLRM inference is bandwidth-bound, so the
+stored bytes crossing the memory interface are the cost that matters):
 
   * ``bytes_moved_per_lookup`` — stored bytes DMA'd from the embedding
-    store per lookup: one row of ``D * cold_itemsize`` bytes per pooling
-    entry plus (int8) one 4-byte page scale per entry.  Analytic and
-    exact for the all-cold initial placement the bench uses; index/mask
-    SMEM traffic is identical across storages and excluded.
+    store per lookup.  ``dedup=off``: one row of ``D * cold_itemsize``
+    bytes per pooling entry plus (int8) one 4-byte page scale per entry.
+    ``dedup=on``: one row (+ scale) per *measured unique* owned row per
+    (dp-group, shard) — the realized gather-once traffic, replayed
+    host-side by ``engine.dedup_factor`` against the actual placement.
+    Analytic and exact for the all-cold initial placement the bench uses;
+    index/mask/slot SMEM traffic is identical across datapaths and
+    excluded (as is the one clamped sentinel line per shard).
+  * ``unique_rows_per_lookup`` / ``dup_factor`` — the realized duplicate
+    statistics per config (recorded for every row, including dedup=off,
+    where they quantify the traffic left on the table).
   * ``eff_bandwidth_mbps`` — fp32-equivalent payload served per second
     (``B*G*L*D*4 / p50``): what a bandwidth-bound deployment gains.
-  * the ``int8_vs_fp32`` comparison rows carry
-    ``bw_improvement_x = bytes_fp32 / bytes_int8`` — the bytes-moved-basis
-    effective-bandwidth improvement (gated ``>= 2x``; the analytic ratio is
-    ``4*D / (D + 4)``), ``bytes_ratio`` (gated ``< 0.35``), and the
-    measured ``p50_ratio`` per impl (expected ~1 in interpret mode, < 1 on
-    bandwidth-bound hardware; recorded, not gated — see the caveat below).
+  * ``int8_vs_fp32`` comparison rows (dedup=off basis, as before):
+    ``bw_improvement_x`` gated ``>= 2x``, ``bytes_ratio`` gated ``< 0.35``.
+  * ``dedup_vs_off`` comparison rows: ``bytes_ratio = bytes_on /
+    bytes_off`` per (config, distribution, storage), gated ``<= 0.5`` on
+    zipfian configs with ``B*G*L >= 2048`` pooled entries (where the
+    analytic duplicate model predicts a >= 2x factor at alpha=1.1 —
+    smaller configs are recorded, not gated); ``p50_ratio`` per impl is
+    recorded, not gated (interpret-mode caveat below: the sort-unique adds
+    interpreter work that TPU hardware amortizes against the DMA savings).
 
-Writes ``BENCH_sls.json`` (schema 2); documented in EXPERIMENTS.md §Perf
-and §Quantized cold-tier storage.
+Writes ``BENCH_sls.json`` (schema 3); documented in EXPERIMENTS.md §Perf,
+§Quantized cold-tier storage and §Duplicate-access coalescing.
 
 Caveat: on CPU containers the Pallas kernel runs in *interpret mode* — its
 absolute latency here reflects the interpreter, not TPU hardware; the numbers
 that transfer are the jnp baseline, the retrace counts, the bytes ledger
-(analytic), and the sweep structure itself.
+(measured against the real placement), and the sweep structure itself.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.sls_bench [--out BENCH_sls.json]
-[--quick|--smoke] [--storage fp32|int8|both]``
+[--quick|--smoke] [--storage fp32|int8|both] [--dedup off|on|both]
+[--distribution uniform|zipfian|both] [--alpha 1.1 ...]``
 """
 from __future__ import annotations
 
@@ -63,18 +89,24 @@ import numpy as np  # noqa: E402
 
 from repro.core import sls as sls_ops  # noqa: E402
 from repro.core.pifs import engine_for_tables  # noqa: E402
+from repro.data.traces import TraceConfig, TraceGenerator  # noqa: E402
 from repro.distributed.sharding import make_mesh  # noqa: E402
 
 MODES = ("pifs", "pond", "beacon")
 IMPLS = ("jnp", "pallas")
 # (B, L, D): batch, pooling factor, embedding dim — small enough for the
 # CPU interpreter, shaped like the paper's DLRM configs (G=2 tables).
-SWEEP = [(8, 4, 16), (8, 16, 16), (16, 8, 32), (8, 8, 64)]
-SWEEP_QUICK = [(8, 4, 16)]
+# (16, 64, 16) is the dedup gate config: 2048 pooled entries, where the
+# calibrated zipfian stream realizes a ~2.4x duplicate factor at alpha=1.1.
+SWEEP = [(8, 4, 16), (8, 16, 16), (8, 8, 64), (16, 64, 16)]
+SWEEP_QUICK = [(16, 64, 16)]
 G = 2  # tables per lookup
+VOCAB = 4096  # first-table rows — the shared id space for every storage
 
 BYTES_RATIO_GATE = 0.35   # int8 stored bytes must be < 0.35x fp32
 BW_IMPROVEMENT_GATE = 2.0  # bytes-moved-basis effective-bandwidth gain
+DEDUP_BYTES_GATE = 0.5     # dedup=on gathered bytes vs off (zipfian gate)
+DEDUP_GATE_MIN_ENTRIES = 2048  # pooled entries below which the gate is off
 
 
 class CompileEventCounter:
@@ -96,19 +128,38 @@ class CompileEventCounter:
         return c
 
 
-def bytes_moved_per_lookup(B: int, L: int, D: int, storage: str) -> int:
+def make_indices(B: int, L: int, distribution: str, alpha: float
+                 ) -> jax.Array:
+    """One (B, G, L) index tensor in the shared [0, VOCAB) id space."""
+    if distribution == "uniform":
+        return jax.random.randint(jax.random.PRNGKey(1), (B, G, L), 0,
+                                  VOCAB).astype(jnp.int32)
+    gen = TraceGenerator(TraceConfig(
+        n_rows=VOCAB, n_tables=G, pooling=L, batch=B,
+        distribution="zipfian", zipf_alpha=alpha, seed=1))
+    return jnp.asarray(gen.next_batch().astype(np.int32))
+
+
+def bytes_moved_per_lookup(B: int, L: int, D: int, storage: str,
+                           dedup_info=None) -> int:
     """Stored bytes DMA'd from the embedding store for one (B, G, L, D)
-    lookup: every pooling entry fetches its row once across the mesh (each
-    row is owned by exactly one shard; the bench state is all-cold), plus
-    one fp32 page scale per entry for int8."""
+    lookup.  dedup=off (``dedup_info=None``): every pooling entry fetches
+    its row once across the mesh (each row is owned by exactly one shard;
+    the bench state is all-cold), plus one fp32 page scale per entry for
+    int8.  dedup=on: one fetch per measured unique (dp-group, shard) row
+    — ``dedup_info`` is ``engine.dedup_factor``'s replay against the
+    engine's actual placement."""
     row_bytes = D * (1 if storage == "int8" else 4)
     scale_bytes = 4 if storage == "int8" else 0
-    return B * G * L * (row_bytes + scale_bytes)
+    if dedup_info is None:
+        return B * G * L * (row_bytes + scale_bytes)
+    return (dedup_info["unique_cold"] * (row_bytes + scale_bytes)
+            + dedup_info["unique_hot"] * D * 4)   # hot tier is always fp32
 
 
-def bench_group(setups, idx, *, impl: str, mode: str, events,
+def bench_group(setups, idx, *, impl: str, mode: str, dedup: str, events,
                 reps: int, warmup: int = 2) -> dict:
-    """Benchmark one (impl, mode) row for every storage mode at once.
+    """Benchmark one (impl, mode, dedup) row for every storage at once.
 
     Timed reps are *interleaved* across the storages (rep i of fp32 runs
     right next to rep i of int8), so host-load drift on shared machines
@@ -120,7 +171,7 @@ def bench_group(setups, idx, *, impl: str, mode: str, events,
         events.take()
         for _ in range(warmup):
             jax.block_until_ready(
-                engine.lookup(state, idx, mode=mode, impl=impl))
+                engine.lookup(state, idx, mode=mode, impl=impl, dedup=dedup))
         recs[storage] = {"warmup_traces": engine.plan_stats()["traces"],
                          "warmup_compile_events": events.take(),
                          "lat": []}
@@ -128,7 +179,7 @@ def bench_group(setups, idx, *, impl: str, mode: str, events,
         for storage, (engine, state) in setups.items():
             t0 = time.perf_counter()
             jax.block_until_ready(
-                engine.lookup(state, idx, mode=mode, impl=impl))
+                engine.lookup(state, idx, mode=mode, impl=impl, dedup=dedup))
             recs[storage]["lat"].append(time.perf_counter() - t0)
     steady_compiles = events.take()  # XLA-level check, shared by the group
     out = {}
@@ -148,7 +199,9 @@ def bench_group(setups, idx, *, impl: str, mode: str, events,
 
 
 def check_oracles(eng, state, idx, storage: str) -> None:
-    """(a) pallas == jnp bit-for-bit; (b) both match the dequantized dense
+    """(a) pallas == jnp bit-for-bit; (b) dedup=on == dedup=off bit-for-bit
+    per impl (the coalesced gather changes *where* rows come from, never
+    the accumulate order); (c) everything matches the dequantized dense
     oracle (engine.to_dense computes the effective table both datapaths
     must reproduce — for int8 that *is* the ref.py quantized semantics:
     dequant after the gather, per-page scales)."""
@@ -157,12 +210,22 @@ def check_oracles(eng, state, idx, storage: str) -> None:
     want = np.asarray(sls_ops.sls_dense_ref(
         dense, idx.reshape(B * Gt, L)).reshape(B, Gt, -1))
     for mode in MODES:
-        a = np.asarray(eng.lookup(state, idx, mode=mode, impl="jnp"))
-        b = np.asarray(eng.lookup(state, idx, mode=mode, impl="pallas"))
-        if not np.array_equal(a, b):
+        outs = {}
+        for impl in IMPLS:
+            for dedup in ("off", "on"):
+                outs[(impl, dedup)] = np.asarray(eng.lookup(
+                    state, idx, mode=mode, impl=impl, dedup=dedup))
+        a = outs[("jnp", "off")]
+        if not np.array_equal(a, outs[("pallas", "off")]):
             raise AssertionError(
                 f"pallas != jnp (fp32 exact) for storage={storage} "
-                f"mode={mode} shape={idx.shape}: max|d|={np.abs(a - b).max()}")
+                f"mode={mode} shape={idx.shape}")
+        for impl in IMPLS:
+            if not np.array_equal(outs[(impl, "off")], outs[(impl, "on")]):
+                raise AssertionError(
+                    f"dedup=on != dedup=off (fp32 exact) for "
+                    f"storage={storage} impl={impl} mode={mode} "
+                    f"shape={idx.shape}")
         if not np.allclose(a, want, rtol=1e-5, atol=1e-5):
             raise AssertionError(
                 f"{storage} lookup disagrees with the dense oracle for "
@@ -179,98 +242,199 @@ def main() -> None:
                     choices=["fp32", "int8", "both"],
                     help="cold-tier storage modes to sweep; 'both' also "
                          "emits the int8-vs-fp32 bandwidth comparison")
+    ap.add_argument("--dedup", default="both", choices=["off", "on", "both"],
+                    help="gather-once duplicate coalescing; 'both' also "
+                         "emits the dedup-vs-off bytes comparison (gated "
+                         "on large zipfian configs)")
+    ap.add_argument("--distribution", default="both",
+                    choices=["uniform", "zipfian", "both"],
+                    help="index stream: i.i.d. uniform (the seed bench "
+                         "behaviour) and/or the calibrated zipfian trace "
+                         "generator")
+    ap.add_argument("--alpha", type=float, nargs="+", default=[1.1],
+                    help="zipfian skew(s) to sweep (traces.py calibration: "
+                         "1.1 ~ Meta-trace-like)")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 4), ("data", "model"))
     events = CompileEventCounter()
     sweep = SWEEP_QUICK if args.quick else SWEEP
     storages = ("fp32", "int8") if args.storage == "both" else (args.storage,)
+    dedups = ("off", "on") if args.dedup == "both" else (args.dedup,)
+    if args.distribution == "both":
+        dists = [("uniform", None)] + [("zipfian", a) for a in args.alpha]
+    elif args.distribution == "zipfian":
+        dists = [("zipfian", a) for a in args.alpha]
+    else:
+        dists = [("uniform", None)]
     results = []
     comparisons = []
+    dedup_comparisons = []
     for (B, L, D) in sweep:
-        p50 = {}  # (storage, impl) -> p50 of mode=pifs
-        idx = jax.random.randint(jax.random.PRNGKey(1), (B, G, L), 0,
-                                 4096).astype(jnp.int32)
         setups = {}
         for storage in storages:
-            eng, _ = engine_for_tables([4096, 2048], dim=D, mesh=mesh,
+            eng, _ = engine_for_tables([VOCAB, VOCAB // 2], dim=D, mesh=mesh,
                                        hot_fraction=0.05, storage=storage)
             state = eng.init_state(jax.random.PRNGKey(0))
-            with mesh:
-                check_oracles(eng, state, idx, storage)
             setups[storage] = (eng, state)
-        for impl in IMPLS:
-            for mode in MODES:
+        for dist, alpha in dists:
+            idx = make_indices(B, L, dist, alpha)
+            dlabel = dist if alpha is None else f"{dist}(a={alpha})"
+            dup = {}     # storage -> measured dedup replay
+            for storage, (eng, state) in setups.items():
                 with mesh:
-                    group = bench_group(setups, idx, impl=impl, mode=mode,
-                                        events=events, reps=args.reps)
-                for storage, r in group.items():
-                    nbytes = bytes_moved_per_lookup(B, L, D, storage)
-                    r.update(impl=impl, mode=mode, B=B, L=L, D=D,
-                             storage=storage, bags_per_lookup=B * G,
-                             bytes_moved_per_lookup=nbytes,
-                             eff_bandwidth_mbps=(
-                                 B * G * L * D * 4 / (r["p50_ms"] * 1e-3)
-                                 / 1e6))
-                    results.append(r)
-                    if mode == "pifs":
-                        p50[(storage, impl)] = r["p50_ms"]
-                    print(f"storage={storage:5s} impl={impl:6s} "
-                          f"mode={mode:6s} B={B:3d} L={L:3d} D={D:3d}  "
-                          f"p50={r['p50_ms']:8.2f}ms "
-                          f"bytes/lookup={nbytes:6d}  "
-                          f"steady_traces={r['steady_traces']}")
-                    if r["steady_traces"]:
+                    check_oracles(eng, state, idx, storage)
+                dup[storage] = eng.dedup_factor(state, idx)
+            p50 = {}     # (storage, impl, dedup) -> p50 of mode=pifs
+            for impl in IMPLS:
+                for mode in MODES:
+                    for dedup in dedups:
+                        if dedup == "on" and mode != "pifs":
+                            # pond's cold path ships raw rows (no coalescing
+                            # by construction) and beacon shares the pifs
+                            # datapath — timing them again buys nothing
+                            continue
+                        with mesh:
+                            group = bench_group(
+                                setups, idx, impl=impl, mode=mode,
+                                dedup=dedup, events=events, reps=args.reps)
+                        if dedup == "on":
+                            # the bytes ledger below is the dedup replay:
+                            # it is only honest if the datapath actually
+                            # coalesced — a silent capacity fallback must
+                            # fail the bench, not report unrealized savings
+                            for storage, (eng, _) in setups.items():
+                                recs = eng.plan_stats().get("dedup", {})
+                                bad = [k for k, v in recs.items()
+                                       if v["requested"] == "on"
+                                       and not v["resolved"]]
+                                if bad:
+                                    raise AssertionError(
+                                        f"dedup=on fell back (capacity?) "
+                                        f"for storage={storage}: {bad} — "
+                                        "the bytes ledger would overstate "
+                                        "savings")
+                        for storage, r in group.items():
+                            info = dup[storage] if dedup == "on" else None
+                            nbytes = bytes_moved_per_lookup(
+                                B, L, D, storage, info)
+                            r.update(
+                                impl=impl, mode=mode, B=B, L=L, D=D,
+                                storage=storage, dedup=dedup,
+                                distribution=dist, alpha=alpha,
+                                bags_per_lookup=B * G,
+                                unique_rows_per_lookup=dup[storage][
+                                    "unique_rows"],
+                                dup_factor=dup[storage]["factor"],
+                                bytes_moved_per_lookup=nbytes,
+                                eff_bandwidth_mbps=(
+                                    B * G * L * D * 4 / (r["p50_ms"] * 1e-3)
+                                    / 1e6))
+                            results.append(r)
+                            if mode == "pifs":
+                                p50[(storage, impl, dedup)] = r["p50_ms"]
+                            print(f"{dlabel:16s} storage={storage:5s} "
+                                  f"dedup={dedup:3s} impl={impl:6s} "
+                                  f"mode={mode:6s} B={B:3d} L={L:3d} "
+                                  f"D={D:3d}  p50={r['p50_ms']:8.2f}ms "
+                                  f"bytes/lookup={nbytes:7d}  "
+                                  f"steady_traces={r['steady_traces']}")
+                            if r["steady_traces"]:
+                                raise AssertionError(
+                                    "plan cache failed: steady-state retrace "
+                                    f"for storage={storage} dedup={dedup} "
+                                    f"impl={impl} mode={mode} B={B} L={L} "
+                                    f"D={D}")
+            if len(storages) == 2 and "off" in dedups:
+                b_fp32 = bytes_moved_per_lookup(B, L, D, "fp32")
+                b_int8 = bytes_moved_per_lookup(B, L, D, "int8")
+                comp = {
+                    "B": B, "L": L, "D": D, "distribution": dist,
+                    "alpha": alpha,
+                    "bytes_fp32": b_fp32, "bytes_int8": b_int8,
+                    "bytes_ratio": b_int8 / b_fp32,
+                    "bw_improvement_x": b_fp32 / b_int8,
+                    "p50_ratio_jnp": (p50[("int8", "jnp", "off")]
+                                      / p50[("fp32", "jnp", "off")]),
+                    "p50_ratio_pallas": (p50[("int8", "pallas", "off")]
+                                         / p50[("fp32", "pallas", "off")]),
+                }
+                comparisons.append(comp)
+                print(f"int8 vs fp32 @ {dlabel} B={B} L={L} D={D}: "
+                      f"bytes {comp['bytes_ratio']:.3f}x "
+                      f"(bw {comp['bw_improvement_x']:.2f}x), "
+                      f"p50 jnp {comp['p50_ratio_jnp']:.2f}x / "
+                      f"pallas {comp['p50_ratio_pallas']:.2f}x")
+                if comp["bytes_ratio"] >= BYTES_RATIO_GATE:
+                    raise AssertionError(
+                        f"int8 bytes-moved gate failed at B={B} L={L} D={D}: "
+                        f"{comp['bytes_ratio']:.3f} >= {BYTES_RATIO_GATE}")
+                if comp["bw_improvement_x"] < BW_IMPROVEMENT_GATE:
+                    raise AssertionError(
+                        f"int8 effective-bandwidth gate failed at B={B} "
+                        f"L={L} D={D}: {comp['bw_improvement_x']:.2f}x < "
+                        f"{BW_IMPROVEMENT_GATE}x")
+            if len(dedups) == 2:
+                entries = B * G * L
+                gated = (dist == "zipfian" and (alpha or 0) >= 1.1
+                         and entries >= DEDUP_GATE_MIN_ENTRIES)
+                for storage in storages:
+                    b_off = bytes_moved_per_lookup(B, L, D, storage)
+                    b_on = bytes_moved_per_lookup(B, L, D, storage,
+                                                  dup[storage])
+                    comp = {
+                        "B": B, "L": L, "D": D, "storage": storage,
+                        "distribution": dist, "alpha": alpha,
+                        "entries": entries,
+                        "unique_rows": dup[storage]["unique_rows"],
+                        "dup_factor": dup[storage]["factor"],
+                        "bytes_off": b_off, "bytes_on": b_on,
+                        "bytes_ratio": b_on / b_off,
+                        "gated": gated,
+                        "p50_ratio_jnp": (p50[(storage, "jnp", "on")]
+                                          / p50[(storage, "jnp", "off")]),
+                        "p50_ratio_pallas": (
+                            p50[(storage, "pallas", "on")]
+                            / p50[(storage, "pallas", "off")]),
+                    }
+                    dedup_comparisons.append(comp)
+                    print(f"dedup vs off @ {dlabel} {storage} B={B} L={L} "
+                          f"D={D}: bytes {comp['bytes_ratio']:.3f}x "
+                          f"(dup factor {comp['dup_factor']:.2f}x, "
+                          f"gated={gated}), p50 jnp "
+                          f"{comp['p50_ratio_jnp']:.2f}x / pallas "
+                          f"{comp['p50_ratio_pallas']:.2f}x")
+                    if gated and comp["bytes_ratio"] > DEDUP_BYTES_GATE:
                         raise AssertionError(
-                            "plan cache failed: steady-state retrace for "
-                            f"storage={storage} impl={impl} mode={mode} "
-                            f"B={B} L={L} D={D}")
-        if len(storages) == 2:
-            b_fp32 = bytes_moved_per_lookup(B, L, D, "fp32")
-            b_int8 = bytes_moved_per_lookup(B, L, D, "int8")
-            comp = {
-                "B": B, "L": L, "D": D,
-                "bytes_fp32": b_fp32, "bytes_int8": b_int8,
-                "bytes_ratio": b_int8 / b_fp32,
-                "bw_improvement_x": b_fp32 / b_int8,
-                "p50_ratio_jnp": p50[("int8", "jnp")] / p50[("fp32", "jnp")],
-                "p50_ratio_pallas": (p50[("int8", "pallas")]
-                                     / p50[("fp32", "pallas")]),
-            }
-            comparisons.append(comp)
-            print(f"int8 vs fp32 @ B={B} L={L} D={D}: "
-                  f"bytes {comp['bytes_ratio']:.3f}x "
-                  f"(bw {comp['bw_improvement_x']:.2f}x), "
-                  f"p50 jnp {comp['p50_ratio_jnp']:.2f}x / "
-                  f"pallas {comp['p50_ratio_pallas']:.2f}x")
-            if comp["bytes_ratio"] >= BYTES_RATIO_GATE:
-                raise AssertionError(
-                    f"int8 bytes-moved gate failed at B={B} L={L} D={D}: "
-                    f"{comp['bytes_ratio']:.3f} >= {BYTES_RATIO_GATE}")
-            if comp["bw_improvement_x"] < BW_IMPROVEMENT_GATE:
-                raise AssertionError(
-                    f"int8 effective-bandwidth gate failed at B={B} L={L} "
-                    f"D={D}: {comp['bw_improvement_x']:.2f}x < "
-                    f"{BW_IMPROVEMENT_GATE}x")
+                            f"dedup bytes-moved gate failed at {dlabel} "
+                            f"storage={storage} B={B} L={L} D={D}: "
+                            f"{comp['bytes_ratio']:.3f} > "
+                            f"{DEDUP_BYTES_GATE}")
 
     out = {
         "bench": "sls_lookup",
-        "schema": 2,
+        "schema": 3,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,
         "platform": platform.platform(),
         "mesh": {"data": 2, "model": 4},
         "storage_modes": list(storages),
+        "dedup_modes": list(dedups),
+        "distributions": [d for d, _ in dists],
+        "alphas": args.alpha,
         "fp32_exact_pallas_vs_jnp": True,
+        "fp32_exact_dedup_vs_off": True,
         "oracle_agreement": True,
         "results": results,
         "int8_vs_fp32": comparisons,
+        "dedup_vs_off": dedup_comparisons,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"\nwrote {args.out} ({len(results)} rows, "
-          f"{len(comparisons)} comparisons)")
+          f"{len(comparisons)} int8 comparisons, "
+          f"{len(dedup_comparisons)} dedup comparisons)")
 
 
 if __name__ == "__main__":

@@ -78,23 +78,52 @@ class EngineState:
 class PIFSEmbeddingEngine:
     """Sharded multi-table embedding with paged placement + hot tier."""
 
+    DEDUP_MODES = ("off", "auto", "on")
+
     def __init__(self, paging: PagingConfig, mesh: Mesh,
                  axes: Optional[MeshAxes] = None,
                  planner: Optional[PlannerConfig] = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, dedup: str = "off",
+                 dedup_auto_threshold: float = 1.5,
+                 dedup_staging_bytes: int = 4 << 20):
+        """``dedup`` is the engine-wide default for :meth:`lookup`'s
+        gather-once duplicate-coalescing knob (off / auto / on);
+        ``dedup_auto_threshold`` is the expected batch-level duplicate
+        factor above which ``auto`` turns coalescing on for a plan, and
+        ``dedup_staging_bytes`` bounds the per-device staging buffer — a
+        signature whose worst-case staging exceeds it falls back to the
+        non-dedup datapath (exact, just without the bytes win)."""
         self.cfg = paging
         self.mesh = mesh
         self.axes = axes or axes_for(mesh)
         self.planner = planner or PlannerConfig()
         self.dtype = dtype
+        if dedup not in self.DEDUP_MODES:
+            raise ValueError(f"unknown dedup {dedup!r}; "
+                             f"expected one of {self.DEDUP_MODES}")
+        self.default_dedup = dedup
+        self.dedup_auto_threshold = dedup_auto_threshold
+        self.dedup_staging_bytes = dedup_staging_bytes
+        # optional measured-duplicate-factor hint for 'auto' resolutions
+        # that happen under an outer trace (serving warmup): the page
+        # histogram cannot see row-level skew when hot rows are scattered
+        # across pages (production id hashing does exactly that), so
+        # serving primes this from a measured replay of the live stream's
+        # prefix (repro.serving.prime_dedup_auto)
+        self.dedup_auto_hint: Optional[float] = None
         # compiled-lookup plan registry: signature -> shard_map+jit closure,
-        # built once per (mode, combine, dp_shard, impl, shapes) and reused so
-        # steady-state serving never retraces (lru_cache-style, but explicit
-        # so plan_stats() can report hits/traces).
+        # built once per (mode, combine, dp_shard, impl, dedup, shapes) and
+        # reused so steady-state serving never retraces (lru_cache-style, but
+        # explicit so plan_stats() can report hits/traces).
         self._plans: dict = {}
+        self._dedup_plans: dict = {}   # key -> resolution record (plan_stats)
         self._migrate_plan = None
         self._trace_count = 0
         self._plan_calls = 0
+        # host-side copy of the page-access histogram, refreshed by
+        # observe()/plan_and_migrate(): dedup='auto' resolution may run
+        # under an outer jit trace where state.counts is a tracer
+        self._host_counts: Optional[np.ndarray] = None
         if self.axes.tp_size(mesh) != paging.n_shards:
             raise ValueError(
                 f"paging.n_shards={paging.n_shards} != tp axis size "
@@ -215,7 +244,8 @@ class PIFSEmbeddingEngine:
     def lookup(self, state: EngineState, indices: jax.Array,
                weights: Optional[jax.Array] = None, mode: str = "pifs",
                combine: str = "psum", dp_shard: bool = True,
-               impl: str = "jnp", block_l: int = 8) -> jax.Array:
+               impl: str = "jnp", block_l: int = 8,
+               dedup: Optional[str] = None) -> jax.Array:
         """Pooled lookup.
 
         indices: (B, G, L) int32 — B batch (sharded over dp), G bags per
@@ -226,11 +256,21 @@ class PIFSEmbeddingEngine:
         weights: optional (B, G, L).
         impl: 'jnp' (gather + segment-sum; differentiable) or 'pallas'
         (the bag-tiled masked-partial SLS kernel; serving fast path).
+        dedup: 'off' | 'auto' | 'on' (None = the engine default) —
+        gather-once duplicate coalescing: each shard sort-uniques its owned
+        (nbags*L) rows and gathers/dequantizes every unique row exactly
+        once; the accumulate order is unchanged, so results are bit-for-bit
+        equal to 'off'.  'auto' decides per plan from the observe-phase
+        access histogram (expected duplicate factor >= the engine
+        threshold); 'on' still falls back for signatures whose staging
+        exceeds the VMEM budget.  The decision is frozen into the cached
+        plan (the key carries the *requested* knob), so 'auto' never
+        retraces across observe/replan cycles.
 
         The shard_map+jit closure for each distinct
-        (mode, combine, dp_shard, impl, idx/weights shape+dtype) signature is
-        built once and cached — steady-state serving does zero retraces
-        (see ``plan_stats``).
+        (mode, combine, dp_shard, impl, dedup, idx/weights shape+dtype)
+        signature is built once and cached — steady-state serving does zero
+        retraces (see ``plan_stats``).
         """
         if mode not in ("pifs", "pond", "beacon"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -238,17 +278,25 @@ class PIFSEmbeddingEngine:
             raise ValueError(f"unknown combine {combine!r}")
         if impl not in ("jnp", "pallas"):
             raise ValueError(f"unknown impl {impl!r}")
+        if dedup is None:
+            dedup = self.default_dedup
+        if dedup not in self.DEDUP_MODES:
+            raise ValueError(f"unknown dedup {dedup!r}; "
+                             f"expected one of {self.DEDUP_MODES}")
         key = ("lookup", mode, combine, dp_shard, impl,
                int(block_l) if impl == "pallas" else None,  # jnp ignores it
-               self.cfg.storage,
+               self.cfg.storage, dedup,
                tuple(indices.shape), jnp.dtype(indices.dtype).name,
                None if weights is None
                else (tuple(weights.shape), jnp.dtype(weights.dtype).name))
         plan = self._plans.get(key)
         if plan is None:
+            dedup_on = self._resolve_dedup(key, dedup, state, indices,
+                                           dp_shard=dp_shard)
             plan = self._build_lookup_plan(
                 mode=mode, combine=combine, dp_shard=dp_shard, impl=impl,
-                block_l=block_l, has_weights=weights is not None)
+                block_l=block_l, has_weights=weights is not None,
+                dedup=dedup_on)
             self._plans[key] = plan
         self._plan_calls += 1
         args = (state.cold, state.hot, state.page_scales,
@@ -258,8 +306,132 @@ class PIFSEmbeddingEngine:
         return plan(*args)
 
     # ------------------------------------------------- compiled-lookup plans
+    def _resolve_dedup(self, key, dedup: str, state: EngineState,
+                       indices: jax.Array, dp_shard: bool = True) -> bool:
+        """Freeze the gather-once coalescing decision for one plan.
+
+        Host-side, runs once per signature at plan build.  'on' only falls
+        back when the worst-case *per-device* staging buffer — the dedup
+        runs inside shard_map, so with ``dp_shard`` each device stages its
+        ``(B/dp)*G*L`` local entries, not the full batch — exceeds the
+        VMEM budget; 'auto' additionally requires the expected per-device
+        duplicate factor — computed from the observe-phase page histogram
+        (paper's profiler), or the engine's host copy of it when called
+        under an outer trace — to clear ``dedup_auto_threshold``.  A plan
+        built before the profiler has ever run (all-zero histogram) sees a
+        uniform prior and resolves 'auto' off; serving primes the
+        histogram before its post-warmup rebuild for exactly this reason
+        (``repro.serving.prime_dedup_auto``).  The resolution record
+        (requested/resolved/expected/measured factor) is reported by
+        ``plan_stats()``.
+        """
+        if dedup == "off":
+            return False
+        B, G, L = indices.shape
+        dp = self.axes.dp_size(self.mesh) if dp_shard else 1
+        n_entries = max(B // max(dp, 1), 1) * G * L    # per-device entries
+        staging_bytes = n_entries * self.cfg.dim * 4   # fp32 staging rows
+        capacity_ok = staging_bytes <= self.dedup_staging_bytes
+        counts = state.counts
+        if isinstance(counts, jax.core.Tracer):
+            counts = self._host_counts
+        expected = (None if counts is None
+                    else self._expected_dup_factor(np.asarray(counts),
+                                                   n_entries))
+        measured = None
+        if not any(isinstance(x, jax.core.Tracer)
+                   for x in (indices, state.page_to_shard, state.page_to_slot)):
+            measured = self.dedup_factor(state, indices)["factor"]
+        if dedup == "on":
+            resolved = capacity_ok
+        else:   # auto: best available duplicate-factor evidence vs threshold.
+            # The analytic page-histogram expectation is blind to row-level
+            # skew scattered across pages, so a measured replay (the plan-
+            # building batch when concrete, or the serving prime hint when
+            # building under a trace) can overrule it upward.
+            signals = [x for x in (expected, measured, self.dedup_auto_hint)
+                       if x is not None]
+            resolved = (capacity_ok and bool(signals)
+                        and max(signals) >= self.dedup_auto_threshold)
+        self._dedup_plans[key] = {
+            "requested": dedup, "resolved": bool(resolved),
+            "capacity_ok": bool(capacity_ok),
+            "expected_factor": None if expected is None else float(expected),
+            "measured_factor": measured,
+            "hint_factor": self.dedup_auto_hint,
+        }
+        return bool(resolved)
+
+    def _expected_dup_factor(self, counts: np.ndarray, n_entries: int
+                             ) -> float:
+        """Analytic expected duplicate factor for ``n_entries`` draws from
+        the row distribution implied by the page-access histogram (uniform
+        within a page): ``n / E[unique]`` with
+        ``E[unique] = sum_r 1 - (1 - p_r)^n``.  Callers pass the
+        *per-device* entry count (the dedup scope) — the per-shard factor
+        the kernel realizes tracks it (EXPERIMENTS.md §Duplicate-access
+        coalescing compares the two).  An all-zero histogram (profiler
+        never ran) means a uniform prior over all rows — essentially
+        duplicate-free at realistic vocab sizes."""
+        c = np.asarray(counts, np.float64)
+        ps = self.cfg.page_size
+        tot = c.sum()
+        if tot <= 0:
+            p = np.full(1, 1.0 / max(self.cfg.padded_rows, 1))
+            rows_per_p = np.full(1, float(self.cfg.padded_rows))
+        else:
+            p = c / (tot * ps)
+            rows_per_p = np.full_like(c, float(ps))
+        e_unique = float((rows_per_p * -np.expm1(
+            n_entries * np.log1p(-np.minimum(p, 1 - 1e-12)))).sum())
+        return n_entries / max(e_unique, 1.0)
+
+    def dedup_factor(self, state: EngineState, indices,
+                     weights=None) -> dict:
+        """Measured (realized) duplicate-access factor of one batch.
+
+        Host-side replay of exactly what the dedup'd datapath gathers:
+        per (dp-group, shard) unique owned local rows in the cold tier,
+        plus per dp-group unique hot-tier rows.  Returns entries (counting
+        weight!=0 only, so serving pad entries don't skew it), unique_cold /
+        unique_hot / unique_rows, and ``factor = entries / unique_rows`` —
+        the bytes-moved reduction the coalescing buys on this batch.
+        """
+        c = self.cfg
+        idx = np.asarray(indices)
+        B = idx.shape[0]
+        dp = min(max(1, self.axes.dp_size(self.mesh)), max(B, 1))
+        mask = np.ones(idx.shape, bool)
+        if weights is not None:
+            mask = np.asarray(weights) != 0
+        p2s = np.asarray(state.page_to_shard)
+        p2slot = np.asarray(state.page_to_slot)
+        ps = c.page_size
+        entries = 0
+        unique_cold = 0
+        unique_hot = 0
+        # array_split folds a non-divisible remainder into the groups
+        # instead of silently dropping trailing rows from the ledger
+        splits = np.array_split(np.arange(B), dp)
+        for rows in splits:
+            gi = idx[rows].reshape(-1)
+            gm = mask[rows].reshape(-1)
+            gi = gi[gm]
+            entries += gi.size
+            page = gi // ps
+            shard = p2s[page]
+            local = p2slot[page] * ps + gi % ps
+            for s in range(c.n_shards):
+                unique_cold += int(np.unique(local[shard == s]).size)
+            unique_hot += int(np.unique(local[shard == HOT_SHARD]).size)
+        unique_rows = unique_cold + unique_hot
+        return {"entries": int(entries), "unique_cold": unique_cold,
+                "unique_hot": unique_hot, "unique_rows": unique_rows,
+                "factor": entries / max(unique_rows, 1)}
+
     def _build_lookup_plan(self, *, mode: str, combine: str, dp_shard: bool,
-                           impl: str, block_l: int, has_weights: bool):
+                           impl: str, block_l: int, has_weights: bool,
+                           dedup: bool = False):
         """Build the shard_map + jit closure for one lookup signature."""
         axes, mesh = self.axes, self.mesh
         dp, tp = axes.dp, axes.tp
@@ -276,7 +448,8 @@ class PIFSEmbeddingEngine:
             wloc = w[0] if w else None
             return self._lookup_block(cold, hot, scales, p2s, p2slot, idx,
                                       wloc, mode=mode, combine=combine,
-                                      impl=impl, block_l=block_l)
+                                      impl=impl, block_l=block_l,
+                                      dedup=dedup)
 
         f = shard_map(
             block, mesh=mesh,
@@ -292,21 +465,52 @@ class PIFSEmbeddingEngine:
         return jax.jit(traced)
 
     def plan_stats(self) -> dict:
-        """Compiled-plan cache stats: plans built, jit traces, lookup calls."""
-        return {"plans": len(self._plans), "traces": self._trace_count,
-                "calls": self._plan_calls}
+        """Compiled-plan cache stats: plans built, jit traces, lookup calls.
+
+        When any plan was built with the gather-once coalescing knob
+        requested (``dedup`` in {'auto', 'on'}), the dict additionally
+        carries a ``"dedup"`` entry: one record per such plan with the
+        requested knob, the frozen resolution (on/off after the capacity
+        and — for 'auto' — histogram-threshold checks), the analytic
+        ``expected_factor`` at decision time, and the ``measured_factor``
+        realized on the plan-building batch (None when the plan was built
+        under an outer trace).  The key is omitted entirely while no
+        dedup-requesting plan exists, so ``dedup='off'`` callers see the
+        exact legacy shape."""
+        out = {"plans": len(self._plans), "traces": self._trace_count,
+               "calls": self._plan_calls}
+        if self._dedup_plans:
+            out["dedup"] = {self._dedup_key_label(k): dict(v)
+                            for k, v in self._dedup_plans.items()}
+        return out
+
+    @staticmethod
+    def _dedup_key_label(key) -> str:
+        """Compact human-readable label for a lookup-plan cache key —
+        includes every key field that can distinguish two plans, so no two
+        records ever collide in the ``plan_stats()['dedup']`` dict."""
+        (_, mode, combine, dp_shard, impl, block_l, storage, dedup,
+         shape, _idx_dtype, weights_info) = key
+        return (f"{mode}/{combine}/{impl}"
+                + (f"/bl{block_l}" if block_l is not None else "")
+                + ("" if dp_shard else "/nodp")
+                + f"/{storage}/dedup={dedup}/idx={'x'.join(map(str, shape))}"
+                + ("+w" if weights_info is not None else ""))
 
     def reset_plan_stats(self, clear_plans: bool = False) -> None:
         """Zero the trace/call counters; keeps compiled plans warm unless
-        ``clear_plans`` (clearing forces a retrace of every signature)."""
+        ``clear_plans`` (clearing forces a retrace of every signature —
+        and also drops the per-plan dedup resolution records, which are
+        re-frozen when the signatures rebuild)."""
         if clear_plans:
             self._plans.clear()
+            self._dedup_plans.clear()
         self._trace_count = 0
         self._plan_calls = 0
 
     def _lookup_block(self, cold, hot, scales, p2s, p2slot, idx, weights, *,
                       mode: str, combine: str, impl: str = "jnp",
-                      block_l: int = 8):
+                      block_l: int = 8, dedup: bool = False):
         """Per-device block: the fabric-switch Process Core."""
         c, axes = self.cfg, self.axes
         tp = axes.tp
@@ -329,15 +533,19 @@ class PIFSEmbeddingEngine:
         scale_be = scales[page] if self.quantized else None     # (nbags, L)
 
         # ---- hot tier: replicated, zero-communication ----
+        # dedup applies here too: hot hits are local-HBM reads, and under
+        # zipfian traffic the hot tier is where duplicates concentrate
         hot_out = sls_ops.masked_partial_sls_dense(
             hot, local_row, is_hot, wbags, impl=impl,
-            block_l=block_l)                                    # (nbags, D)
+            block_l=block_l, dedup=dedup)                       # (nbags, D)
 
         # ---- cold tier ----
         if mode == "pond":
             # raw rows cross the interconnect (communicate-then-reduce):
             # there is no pooling near the data in this baseline, so the
-            # kernel only serves the hot tier here.
+            # kernel only serves the hot tier here.  Coalescing does not
+            # apply either — the baseline's semantics ship one row per
+            # pooling entry, so only the hot tier above dedups in pond mode.
             seg = jnp.repeat(jnp.arange(nbags, dtype=jnp.int32), L)
             rows = sls_ops.masked_gather_rows(
                 cold, local_row.reshape(-1), owned.reshape(-1))
@@ -367,7 +575,8 @@ class PIFSEmbeddingEngine:
         cold_part = sls_ops.masked_partial_sls_dense(
             cold, local_row, owned, wbags, impl=impl,
             block_l=block_l, scales=scale_be,
-            out_dtype=jnp.float32 if self.quantized else None)   # (nbags, D)
+            out_dtype=jnp.float32 if self.quantized else None,
+            dedup=dedup)                                         # (nbags, D)
         if combine == "psum":
             cold_sum = jax.lax.psum(cold_part, tp)
             return (cold_sum + hot_out).reshape(b, G, -1)
@@ -417,12 +626,17 @@ class PIFSEmbeddingEngine:
         args = (state.counts, indices)
         if weights is not None:
             args = args + (weights,)
-        return dataclasses.replace(state, counts=f(*args))
+        new_counts = f(*args)
+        if not isinstance(new_counts, jax.core.Tracer):
+            # host copy for dedup='auto' plan resolution under outer traces
+            self._host_counts = np.asarray(new_counts)
+        return dataclasses.replace(state, counts=new_counts)
 
     # ------------------------------------------------------- plan + migration
     def plan_and_migrate(self, state: EngineState) -> Tuple[EngineState, dict]:
         """Host-side plan (hotness + spreading), then pure-gather migration."""
         counts = np.asarray(jax.device_get(state.counts))
+        self._host_counts = counts
         new_table, stats = plan(self.cfg, state.page_table, counts, self.planner)
         new_state = self.migrate(state, new_table)
         return new_state, stats
@@ -555,13 +769,22 @@ class ServeBinding:
     """
 
     def __init__(self, engine: PIFSEmbeddingEngine, state: EngineState,
-                 params, step, idx_key: Optional[str] = "indices"):
+                 params, step, idx_key: Optional[str] = "indices",
+                 track_dedup: bool = True):
         self.engine = engine
         self.state = state
         self.params = params
         self.step = step                   # (params, state, batch) -> scores
         self.idx_key = idx_key             # batch entry feeding the profiler
         self.replans = 0
+        # per-bucket duplicate-access accounting, fed by observe() on the
+        # maintenance path (never the timed service path): bucket index
+        # shape -> accumulated entries / unique rows over observed batches.
+        # The probe is a host-side numpy replay — tens of microseconds per
+        # observed batch at serving shapes; ``track_dedup=False`` disables
+        # it for deployments that do not want the maintenance-path cost.
+        self.track_dedup = track_dedup
+        self.dedup_stats: dict = {}
 
     def execute(self, batch: dict):
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -579,6 +802,31 @@ class ServeBinding:
             # not leaked into the next micro-batch's measured service time
             jax.block_until_ready(new.counts)
             self.state = new
+            if not self.track_dedup:
+                return
+            # dedup probe rides the same maintenance cadence: the measured
+            # per-bucket duplicate factor makes serving-side bytes wins
+            # attributable without touching the timed service path
+            d = self.engine.dedup_factor(
+                self.state, batch[self.idx_key], weights=w)
+            key = tuple(np.asarray(batch[self.idx_key]).shape)
+            rec = self.dedup_stats.setdefault(
+                key, {"batches": 0, "entries": 0, "unique_rows": 0})
+            rec["batches"] += 1
+            rec["entries"] += d["entries"]
+            rec["unique_rows"] += d["unique_rows"]
+
+    def dedup_report(self) -> dict:
+        """Measured per-bucket duplicate-access factors (from the observe
+        cadence): ``{bucket_shape_str: {batches, entries, unique_rows,
+        factor}}`` — ``factor`` is the bytes-moved reduction a dedup'd
+        datapath realizes on that bucket's traffic."""
+        out = {}
+        for shape, rec in self.dedup_stats.items():
+            out["x".join(map(str, shape))] = {
+                **rec,
+                "factor": rec["entries"] / max(rec["unique_rows"], 1)}
+        return out
 
     def replan(self) -> dict:
         new, stats = self.engine.plan_and_migrate(self.state)
@@ -596,7 +844,7 @@ class ServeBinding:
 
 def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,
                       page_bytes=4096, dtype=jnp.float32,
-                      storage: str = "fp32",
+                      storage: str = "fp32", dedup: str = "off",
                       axes: Optional[MeshAxes] = None,
                       planner: Optional[PlannerConfig] = None,
                       ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
@@ -606,7 +854,9 @@ def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,
     Page alignment: each table starts on a page boundary, so pages never
     straddle tables.  ``storage='int8'`` selects the quantized cold tier
     (per-page scales, fused dequant in the SLS datapath); note an int8 page
-    of the same ``page_bytes`` holds 4x the rows.
+    of the same ``page_bytes`` holds 4x the rows.  ``dedup`` sets the
+    engine-wide default for gather-once duplicate coalescing
+    (off/auto/on — see ``PIFSEmbeddingEngine.lookup``).
     """
     axes = axes or axes_for(mesh)
     n_shards = axes.tp_size(mesh)
@@ -636,5 +886,5 @@ def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,
             "int32 on device — shard the tables across engines or reduce "
             "the padded vocab sizes")
     return (PIFSEmbeddingEngine(cfg, mesh, axes=axes, planner=planner,
-                                dtype=dtype),
+                                dtype=dtype, dedup=dedup),
             np.asarray(offsets, dtype=np.int64))

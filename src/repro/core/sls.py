@@ -11,10 +11,17 @@ segment structure and a validity mask (padding entries carry weight 0).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+# Non-owned pooling entries are remapped to this sentinel before the
+# sort-based unique, so they (a) sort past every real row id and collapse
+# into at most one padded staging slot, and (b) never pollute the dequant
+# scale of a *real* unique row (remapping them to row 0 would).  Gathers
+# clamp the sentinel into range; its contribution is zeroed by the mask.
+DEDUP_SENTINEL = jnp.iinfo(jnp.int32).max
 
 
 def sls_ref(table: jax.Array, indices: jax.Array, segment_ids: jax.Array,
@@ -54,13 +61,84 @@ def masked_partial_sls(local_storage: jax.Array, local_rows: jax.Array,
     return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
 
 
+class DedupPlan(NamedTuple):
+    """Static-shape batch-level duplicate-coalescing plan (gather-once).
+
+    Capacity is always ``N = B*L`` (the worst case: every entry unique), so
+    shapes never depend on the data — no retraces.  ``n_slots`` / ``n_unique``
+    are *traced scalars*: the kernel bounds its DMA loop with ``n_slots`` so
+    the bytes actually moved scale with the realized unique count, while the
+    padded tail of ``unique_rows`` is never fetched.
+    """
+    unique_rows: jax.Array    # (N,) int32 row id per staging slot (padded
+    #                           slots and the non-owned run hold the sentinel)
+    slots: jax.Array          # (B, L) int32 staging slot per pooling entry
+    n_slots: jax.Array        # () int32 live staging slots (incl. the one
+    #                           sentinel run, when any entry is non-owned)
+    n_unique: jax.Array       # () int32 unique *owned* rows (the dedup stat)
+    unique_scales: Optional[jax.Array]  # (N,) f32 per-slot dequant scales
+
+
+def dedup_plan(local_rows: jax.Array, owned: jax.Array,
+               scales: Optional[jax.Array] = None) -> DedupPlan:
+    """Sort-based unique over the owned entries of dense (B, L) bags.
+
+    All outputs are static-shape (capacity ``B*L``); every random-access
+    structure the dedup'd accumulate needs is built here with one argsort:
+    duplicate entries of a row share a staging slot, so the row is gathered
+    (and dequantized) exactly once, and the accumulate reads through the
+    ``slots`` indirection in the original fixed l-order — the gather
+    changes, the accumulation order never does (bit-exactness).
+    """
+    B, L = local_rows.shape
+    N = B * L
+    r = jnp.where(owned, local_rows, DEDUP_SENTINEL).reshape(N)
+    r = r.astype(jnp.int32)
+    order = jnp.argsort(r)
+    sr = r[order]                                            # ascending rows
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), sr[1:] != sr[:-1]])
+    uid = (jnp.cumsum(is_new) - 1).astype(jnp.int32)         # slot per entry
+    slots = jnp.zeros((N,), jnp.int32).at[order].set(uid).reshape(B, L)
+    unique_rows = jnp.full((N,), DEDUP_SENTINEL, jnp.int32).at[uid].set(sr)
+    n_slots = uid[-1] + 1
+    n_unique = n_slots - (sr[-1] == DEDUP_SENTINEL).astype(jnp.int32)
+    unique_scales = None
+    if scales is not None:
+        # duplicates of a row share its page, hence its scale, so the
+        # conflicting-writes order is immaterial for owned slots; the
+        # sentinel slot's scale is arbitrary-but-finite (masked to zero)
+        ss = scales.reshape(N)[order].astype(jnp.float32)
+        unique_scales = jnp.ones((N,), jnp.float32).at[uid].set(ss)
+    return DedupPlan(unique_rows, slots, n_slots, n_unique, unique_scales)
+
+
+def _fixed_order_accumulate(rows: jax.Array, f: jax.Array, out_dtype
+                            ) -> jax.Array:
+    """Sequential accumulate in the kernel's fixed l=0..L-1 order with the
+    same ``add(mul(f, row))`` structure — the shared tail of every jnp SLS
+    path, and the reason they all agree with the Pallas kernels bit-for-bit
+    in fp32."""
+    B, L, D = rows.shape
+
+    def step(carry, xs):
+        rows_l, f_l = xs
+        return carry + f_l[:, None] * rows_l, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
+                          (rows.transpose(1, 0, 2), f.T))
+    return out
+
+
 def masked_partial_sls_dense(local_storage: jax.Array, local_rows: jax.Array,
                              owned: jax.Array,
                              weights: Optional[jax.Array] = None,
                              impl: str = "jnp", block_l: int = 8,
                              interpret: Optional[bool] = None,
                              scales: Optional[jax.Array] = None,
-                             out_dtype=None) -> jax.Array:
+                             out_dtype=None, dedup: bool = False,
+                             dedup_capacity: Optional[int] = None
+                             ) -> jax.Array:
     """Dense-bag form of :func:`masked_partial_sls`.
 
     local_rows/owned (B, L), optional weights (B, L) -> (B, D):
@@ -76,42 +154,63 @@ def masked_partial_sls_dense(local_storage: jax.Array, local_rows: jax.Array,
     impls with the identical op order, so the two stay bit-for-bit equal in
     fp32.  ``out_dtype`` defaults to the storage dtype (pass float32 for a
     quantized store).
+
+    ``dedup=True`` turns on gather-once duplicate coalescing (RecNMP /
+    BEACON-style): a static-shape sort-unique (:func:`dedup_plan`) compacts
+    the bags' owned rows, each unique row is gathered (and dequantized)
+    exactly once into a ``(B*L, D)`` staging buffer, and the accumulate
+    reads through the slot indirection in the *same* fixed l-order — so the
+    result is bit-for-bit equal to ``dedup=False`` for both impls (the
+    dequant multiply has identical operands whether applied per entry or
+    per unique row).  ``dedup_capacity`` bounds the staging rows (e.g. a
+    VMEM budget); when ``B*L`` exceeds it the call falls back to the
+    non-dedup path — exact by construction, just without the bytes win.
     """
     if out_dtype is None:
         out_dtype = local_storage.dtype
+    B, L = local_rows.shape
+    D = local_storage.shape[-1]
+    if dedup and dedup_capacity is not None and B * L > dedup_capacity:
+        dedup = False                      # capacity overflow: exact fallback
+    if B == 0 or L == 0:
+        return jnp.zeros((B, D), out_dtype)
     if impl == "pallas":
         from repro.kernels import ops as kernel_ops
+        if dedup:
+            plan = dedup_plan(local_rows, owned, scales)
+            return kernel_ops.masked_sls_dedup(
+                local_storage, plan, owned, weights,
+                out_dtype=out_dtype, block_l=block_l, interpret=interpret)
         return kernel_ops.masked_sls(
             local_storage, local_rows, owned, weights,
             out_dtype=out_dtype, block_l=block_l,
             interpret=interpret, scales=scales)
     if impl != "jnp":
         raise ValueError(f"unknown impl {impl!r}")
-    B, L = local_rows.shape
-    D = local_storage.shape[-1]
-    if L == 0:
-        return jnp.zeros((B, D), out_dtype)
-    # One fused gather, then a sequential accumulate in the kernel's fixed
-    # l=0..L-1 order with the same add(mul(f, mul(scale, row))) structure —
-    # lookup numerics are *impl-invariant* (the pallas path matches this
-    # bit-for-bit in fp32), at the cost of ordered adds instead of one fused
-    # reduce.  Differentiable (gather + scan -> scatter-add under AD), so
-    # training uses this path too (fp32 storage; int8 stores are serving-only).
-    safe_rows = jnp.where(owned, local_rows, 0)
-    rows = jnp.take(local_storage, safe_rows, axis=0).astype(out_dtype)
-    if scales is not None:
-        rows = rows * scales[..., None].astype(out_dtype)      # (B, L, D)
     f = owned.astype(out_dtype)
     if weights is not None:
         f = f * weights.astype(out_dtype)
-
-    def step(carry, xs):
-        rows_l, f_l = xs
-        return carry + f_l[:, None] * rows_l, None
-
-    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
-                          (rows.transpose(1, 0, 2), f.T))
-    return out
+    # One fused gather, then the fixed-l-order accumulate with the same
+    # add(mul(f, mul(scale, row))) structure as the kernels — lookup
+    # numerics are *impl-invariant* (the pallas path matches this
+    # bit-for-bit in fp32), at the cost of ordered adds instead of one fused
+    # reduce.  Differentiable (gather + scan -> scatter-add under AD), so
+    # training uses this path too (fp32 storage; int8 stores are serving-only).
+    if dedup:
+        plan = dedup_plan(local_rows, owned, scales)
+        V = local_storage.shape[0]
+        staging = jnp.take(local_storage,
+                           jnp.minimum(plan.unique_rows, V - 1),
+                           axis=0).astype(out_dtype)           # (B*L, D)
+        if plan.unique_scales is not None:
+            staging = staging * plan.unique_scales[:, None].astype(out_dtype)
+        rows = jnp.take(staging, plan.slots, axis=0)           # (B, L, D)
+    else:
+        safe_rows = jnp.where(owned, local_rows, 0)
+        rows = jnp.take(local_storage, safe_rows, axis=0).astype(out_dtype)
+        if scales is not None:
+            rows = rows * scales[..., None].astype(out_dtype)  # (B, L, D)
+    return _fixed_order_accumulate(rows, f, out_dtype)
 
 
 def masked_gather_rows(local_storage: jax.Array, local_rows: jax.Array,

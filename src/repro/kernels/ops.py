@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.interaction import dot_interaction_pallas
-from repro.kernels.sls import masked_sls_pallas, sls_pallas
+from repro.kernels.sls import (masked_sls_dedup_pallas, masked_sls_pallas,
+                               sls_pallas)
 
 LANES = 128
 
@@ -78,6 +79,37 @@ def masked_sls(table: jax.Array, indices: jax.Array, owned: jax.Array,
     out = masked_sls_pallas(pad_to_lanes(table, pad_lanes), indices, owned,
                             weights, scales, out_dtype=out_dtype,
                             interpret=interpret, block_l=block_l)
+    return out[:, :D]
+
+
+def masked_sls_dedup(table: jax.Array, plan, owned: jax.Array,
+                     weights: Optional[jax.Array] = None,
+                     out_dtype=jnp.float32, impl: str = "pallas",
+                     interpret: Optional[bool] = None, block_l: int = 8,
+                     pad_lanes: Optional[bool] = None) -> jax.Array:
+    """Gather-once dedup'd masked partial SLS: each unique owned row is
+    DMA'd (and dequantized) exactly once into VMEM staging, then the
+    bag-tiled accumulate reads through the plan's slot indirection.
+
+    ``plan`` is a ``core/sls.DedupPlan`` (unique_rows/slots/n_slots/
+    unique_scales); build it with ``core/sls.dedup_plan``.  Lane padding
+    only touches the table's D axis — the plan arrays are index-space and
+    unaffected.  Bit-for-bit equal to :func:`masked_sls` in fp32 (oracle:
+    ``ref.masked_sls_dedup_ref``).
+    """
+    if impl == "jnp":
+        return ref.masked_sls_dedup_ref(
+            table, plan.unique_rows, plan.slots, owned, weights,
+            unique_scales=plan.unique_scales, out_dtype=out_dtype)
+    if interpret is None:
+        interpret = _default_interpret()
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    D = table.shape[-1]
+    out = masked_sls_dedup_pallas(
+        pad_to_lanes(table, pad_lanes), plan.unique_rows, plan.slots,
+        owned, plan.n_slots, weights, plan.unique_scales,
+        out_dtype=out_dtype, interpret=interpret, block_l=block_l)
     return out[:, :D]
 
 

@@ -86,6 +86,48 @@ def masked_sls_quant_ref(table_q: jax.Array, indices: jax.Array,
     return out
 
 
+def masked_sls_dedup_ref(table: jax.Array, unique_rows: jax.Array,
+                         slots: jax.Array, owned: jax.Array,
+                         weights: Optional[jax.Array] = None,
+                         unique_scales: Optional[jax.Array] = None,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """Gather-once dedup'd masked partial SLS oracle (staging semantics).
+
+    table: (V, D); unique_rows: (U,) compacted row ids (sentinel-padded —
+    clamped into range at the gather); slots: (B, L) staging slot per
+    pooling entry; owned/weights as in :func:`masked_sls_ref`;
+    unique_scales: optional (U,) per-slot dequant scales.
+
+    Phase 1 gathers (and dequantizes) each unique row exactly once into a
+    (U, D) staging buffer; phase 2 is the **same fixed l-order accumulate**
+    as :func:`masked_sls_quant_ref`, reading rows through the slot
+    indirection.  Because the dequant multiply sees identical operands
+    whether applied per entry or per unique row, this matches
+    :func:`masked_sls_ref` / :func:`masked_sls_quant_ref` (given per-entry
+    ``scales[b,l] == unique_scales[slots[b,l]]``) bit-for-bit in fp32 —
+    and the two-phase Pallas kernel must match it bit-for-bit too.
+    """
+    B, L = slots.shape
+    D = table.shape[-1]
+    V = table.shape[0]
+    staging = jnp.take(table, jnp.minimum(unique_rows, V - 1),
+                       axis=0).astype(out_dtype)                # (U, D)
+    if unique_scales is not None:
+        staging = staging * unique_scales[:, None].astype(out_dtype)
+    rows = jnp.take(staging, slots, axis=0)                     # (B, L, D)
+    f = owned.astype(out_dtype)
+    if weights is not None:
+        f = f * weights.astype(out_dtype)
+
+    def step(carry, xs):
+        rows_l, f_l = xs
+        return carry + f_l[:, None] * rows_l, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
+                          (rows.transpose(1, 0, 2), f.T))
+    return out
+
+
 def dot_interaction_ref(feats: jax.Array, self_interaction: bool = False
                         ) -> jax.Array:
     """DLRM pairwise-dot feature interaction oracle.

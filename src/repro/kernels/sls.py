@@ -151,6 +151,162 @@ def _sls_call(table: jax.Array, indices: jax.Array,
     )(*prefetch, table)
 
 
+def _make_sls_dedup_kernel(L: int, block_l: int, has_weights: bool,
+                           has_scales: bool):
+    """Two-phase gather-once dedup'd SLS kernel body.
+
+    Phase 1 (first grid step only): double-buffered DMA of each *unique*
+    row from the HBM table into a VMEM landing pad, fused per-row dequant
+    (``float(row) * scale``), store into the persistent (U, D) VMEM staging
+    buffer.  The DMA loop is bounded by the *traced* live-slot count, so
+    the bytes moved scale with the realized unique count, not the padded
+    capacity.
+
+    Phase 2 (every grid step): the bag-tiled fixed-l-order accumulate of
+    ``_make_sls_kernel``, but each entry's row is a VMEM read from staging
+    through the slot indirection — no per-entry DMA.  The accumulate sees
+    the same operands in the same order as the non-dedup kernel (the
+    dequant multiply moved from per-entry to per-unique-row with identical
+    inputs), so the two are bit-for-bit equal in fp32.
+    """
+
+    def kernel(*refs):
+        # scalar-prefetch refs first (slots, owned[, w], uniq, n[, scales]),
+        # then table/out/scratch
+        it = iter(refs)
+        slots_ref = next(it)      # (B, L) staging slot per pooling entry
+        owned_ref = next(it)      # (B, L) ownership mask
+        w_ref = next(it) if has_weights else None
+        uniq_ref = next(it)       # (U,) unique row ids, sentinel-padded
+        n_ref = next(it)          # (1,) live staging slots
+        s_ref = next(it) if has_scales else None   # (U,) dequant scales
+        table_ref = next(it)      # (V, D) in ANY/HBM — manually DMA'd
+        out_ref = next(it)        # (1, D) accumulator block, revisited per bag
+        staging = next(it)        # (U, D) VMEM staging, persists across steps
+        landing = next(it)        # (2, D) VMEM DMA double buffer
+        sem = next(it)            # (2,) DMA semaphores
+
+        b = pl.program_id(0)
+        t = pl.program_id(1)
+        V = table_ref.shape[0]
+
+        @pl.when((b == 0) & (t == 0))
+        def _fill_staging():
+            # gather-once: each unique row crosses the memory interface
+            # exactly once; duplicates are served from VMEM in phase 2.
+            # At least one slot is always fetched so the sentinel-only
+            # (nothing owned) case still reads initialized staging.
+            n = jnp.maximum(n_ref[0], 1)
+
+            def row_dma(u, slot):
+                # clamp the sentinel (and padded slots) into range — the
+                # fetched line is masked to zero contribution in phase 2
+                r = jnp.minimum(uniq_ref[u], V - 1)
+                return pltpu.make_async_copy(table_ref.at[r],
+                                             landing.at[slot], sem.at[slot])
+
+            row_dma(0, 0).start()
+
+            def body(u, carry):
+                slot = u % 2
+
+                @pl.when(u + 1 < n)
+                def _prefetch_next():
+                    row_dma(u + 1, (u + 1) % 2).start()
+
+                row_dma(u, slot).wait()
+                row = landing[slot].astype(out_ref.dtype)
+                if has_scales:
+                    # fused dequant: scaled once per *unique* row, after its
+                    # (1-byte-per-element) DMA landed — same operands as the
+                    # non-dedup kernel's per-entry multiply
+                    row = row * s_ref[u].astype(out_ref.dtype)
+                staging[pl.ds(u, 1)] = row[None, :]
+                return carry
+
+            jax.lax.fori_loop(0, n, body, 0)
+
+        @pl.when(t == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        l0 = t * block_l
+
+        def body(i, carry):
+            l = l0 + i
+            lc = jnp.minimum(l, L - 1)
+            f = (l < L).astype(out_ref.dtype)
+            f = f * (owned_ref[b, lc] != 0).astype(out_ref.dtype)
+            if has_weights:
+                f = f * w_ref[b, lc].astype(out_ref.dtype)
+            row = staging[slots_ref[b, lc]][None, :]   # VMEM read, no DMA
+            out_ref[...] += f * row
+            return carry
+
+        jax.lax.fori_loop(0, block_l, body, 0)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "interpret", "block_l"))
+def masked_sls_dedup_pallas(table: jax.Array, unique_rows: jax.Array,
+                            slots: jax.Array, owned: jax.Array,
+                            n_slots: jax.Array,
+                            weights: Optional[jax.Array] = None,
+                            unique_scales: Optional[jax.Array] = None,
+                            out_dtype=jnp.float32, interpret: bool = True,
+                            block_l: int = 8) -> jax.Array:
+    """Gather-once dedup'd masked partial SLS (oracle:
+    ``kernels/ref.py:masked_sls_dedup_ref``).
+
+    ``unique_rows (U,)`` / ``slots (B, L)`` / ``n_slots (1,)`` come from
+    ``core/sls.dedup_plan`` (U = B*L capacity, sentinel-padded).  Grid and
+    accumulate structure match ``masked_sls_pallas``; the table DMA happens
+    once per unique row in a phase-1 prologue instead of once per pooling
+    entry.  Both grid dims must execute sequentially (staging is written at
+    the first step and read by all later ones) — they are "arbitrary"
+    semantics, which is the Pallas TPU default and the interpret-mode
+    execution order.
+    """
+    B, L = slots.shape
+    V, D = table.shape
+    if B == 0 or L == 0:
+        return jnp.zeros((B, D), out_dtype)
+    block_l = max(1, min(block_l, L))
+    grid = (B, pl.cdiv(L, block_l))
+    U = unique_rows.shape[0]
+
+    prefetch = [slots.astype(jnp.int32), owned.astype(jnp.int32)]
+    if weights is not None:
+        prefetch.append(weights)
+    prefetch.append(unique_rows.astype(jnp.int32))
+    prefetch.append(n_slots.astype(jnp.int32).reshape(1))
+    if unique_scales is not None:
+        prefetch.append(unique_scales.astype(jnp.float32))
+
+    def out_map(b, t, *prefetch_refs):
+        return (b, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],   # table stays in HBM
+        out_specs=pl.BlockSpec((1, D), out_map),
+        scratch_shapes=[pltpu.VMEM((U, D), out_dtype),     # staging
+                        pltpu.VMEM((2, D), table.dtype),   # DMA landing pad
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    kernel = _make_sls_dedup_kernel(L, block_l,
+                                    has_weights=weights is not None,
+                                    has_scales=unique_scales is not None)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
+        interpret=interpret,
+    )(*prefetch, table)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("out_dtype", "interpret", "block_l"))
 def sls_pallas(table: jax.Array, indices: jax.Array,

@@ -26,7 +26,7 @@ from repro.serving import (BatcherConfig, BindingExecutor, ClosedLoopSource,
                            OpenLoopSource, RuntimeConfig, ServingRuntime,
                            bind_model, closed_loop_factory,
                            dummy_request_factory, make_padder,
-                           request_stream)
+                           prime_dedup_auto, request_stream)
 from repro.serving.request import ArrivalConfig
 
 
@@ -35,13 +35,14 @@ def build_serving(cfg, mesh, *, mode: str = "pifs", impl: str = "jnp",
                   batch_sizes: Tuple[int, ...] = (8, 16, 32),
                   poolings: Tuple[int, ...] = (),
                   slo_ms: float = 50.0, hot_fraction: float = 0.05,
-                  storage: str = "fp32",
+                  storage: str = "fp32", dedup: str = "off",
                   runtime_cfg: RuntimeConfig = RuntimeConfig(),
                   ) -> Tuple[ServingRuntime, "object"]:
     """Compose (runtime, binding) for a config; buckets warmed by the
     caller via ``runtime.warmup``."""
     binding = bind_model(cfg, mesh, mode=mode, impl=impl, block_l=block_l,
-                         hot_fraction=hot_fraction, storage=storage)
+                         hot_fraction=hot_fraction, storage=storage,
+                         dedup=dedup)
     levels = tuple(sorted(set(poolings))) or (
         (cfg.pooling,) if hasattr(cfg, "pooling") else (1,))
     if batcher == "dynamic":
@@ -68,15 +69,28 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
     """End-to-end: bind, warm every bucket, serve the stream, and report
     metrics + the steady-state retrace count (must be 0).  The engine's
     cold-tier storage format rides in ``load.storage`` (the DLRM request
-    streams need it for table-offset page rounding)."""
+    streams need it for table-offset page rounding), the duplicate-
+    coalescing knob in ``load.dedup``; the summary carries the measured
+    per-bucket dedup factor so serving-side bytes wins are attributable."""
     runtime, binding = build_serving(
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
-        hot_fraction=hot_fraction, storage=load.storage,
+        hot_fraction=hot_fraction, storage=load.storage, dedup=load.dedup,
         runtime_cfg=runtime_cfg)
     with mesh:
         runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
+        # the open-loop stream is only materialized when something uses it
+        # (the serving source, or the 'auto' priming prefix) — closed-loop
+        # runs draw from their own factory
+        reqs = (request_stream(cfg, load)
+                if load.dedup == "auto" or closed_loop_users <= 0 else None)
+        if load.dedup == "auto" and prime_dedup_auto(binding, reqs):
+            # per-bucket 'auto' decisions freeze at plan build: prime the
+            # profiler with a prefix of the live stream, then rebuild the
+            # buckets against the primed histogram (still pre-steady-state)
+            runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
         binding.reset_plan_stats()        # steady state begins here
+        binding.dedup_stats.clear()       # drop warmup-dummy observations
         warm_replans = binding.replans
         if closed_loop_users > 0:
             source = ClosedLoopSource(
@@ -84,12 +98,13 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                 closed_loop_factory(cfg, load),
                 think_time_s=closed_loop_users / load.arrival.rate_qps)
         else:
-            source = OpenLoopSource(request_stream(cfg, load))
+            source = OpenLoopSource(reqs)
         summary = runtime.run(source)
     stats = binding.plan_stats()
     summary["steady_traces"] = stats["traces"]
     summary["plans"] = stats["plans"]
     summary["replans"] = binding.replans - warm_replans
+    summary["dedup_factors"] = binding.dedup_report()
     return summary
 
 
@@ -110,6 +125,10 @@ def main() -> None:
                     help="cold-tier storage: fp32 passthrough or int8 with "
                          "per-page scales (dequant fused into the SLS "
                          "accumulate)")
+    ap.add_argument("--dedup", default="off", choices=["off", "auto", "on"],
+                    help="gather-once duplicate coalescing in the SLS "
+                         "datapath (bit-exact; 'auto' decides per shape "
+                         "bucket from the access histogram)")
     ap.add_argument("--batcher", default="dynamic",
                     choices=["dynamic", "fixed"])
     ap.add_argument("--batch-sizes", type=int, nargs="+",
@@ -133,7 +152,8 @@ def main() -> None:
         n_requests=args.requests,
         arrival=ArrivalConfig(rate_qps=args.qps, process=args.arrival,
                               seed=args.seed),
-        slo_ms=args.slo_ms, seed=args.seed, storage=args.storage)
+        slo_ms=args.slo_ms, seed=args.seed, storage=args.storage,
+        dedup=args.dedup)
     out = serve_offered_load(
         cfg, mesh, load, mode=args.mode, impl=args.impl,
         block_l=args.block_l, batcher=args.batcher,
@@ -142,8 +162,13 @@ def main() -> None:
                                   replan_every=args.replan_every),
         closed_loop_users=args.closed_loop_users)
     out.pop("latency_hist", None)
+    dedup_factors = out.pop("dedup_factors", {})
     for k, v in out.items():
         print(f"  {k:24s} {v}")
+    for bucket, rec in dedup_factors.items():
+        print(f"  dedup[{bucket}]  factor={rec['factor']:.2f} "
+              f"({rec['entries']} entries -> {rec['unique_rows']} unique "
+              f"rows over {rec['batches']} observed batches)")
 
 
 if __name__ == "__main__":

@@ -30,13 +30,15 @@ from repro.models.params import Spec
 
 def build_engine(cfg: DLRMConfig, mesh: Mesh, hot_fraction: float = 0.05,
                  dtype=jnp.float32, storage: str = "fp32",
+                 dedup: str = "off",
                  ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
     """``storage='int8'`` selects the quantized cold tier (serving-only:
-    the int8 store is not differentiable — train with fp32)."""
+    the int8 store is not differentiable — train with fp32).  ``dedup``
+    sets the engine default for gather-once duplicate coalescing."""
     vocabs = [cfg.emb_num] * cfg.n_tables
     return engine_for_tables(vocabs, cfg.emb_dim, mesh,
                              hot_fraction=hot_fraction, dtype=dtype,
-                             storage=storage)
+                             storage=storage, dedup=dedup)
 
 
 def model_specs(cfg: DLRMConfig, mesh: Mesh, dtype=jnp.float32) -> dict:
@@ -60,11 +62,14 @@ def model_specs(cfg: DLRMConfig, mesh: Mesh, dtype=jnp.float32) -> dict:
 def forward(params: dict, engine: PIFSEmbeddingEngine, state,
             batch: Dict[str, jax.Array], cfg: DLRMConfig,
             mode: str = "pifs", interaction_impl: str = "jnp",
-            impl: str = "jnp", block_l: int = 8) -> jax.Array:
+            impl: str = "jnp", block_l: int = 8,
+            dedup: Optional[str] = None) -> jax.Array:
     """Returns CTR logits (B,).
 
     ``impl``/``block_l`` select the engine's SLS datapath (jnp vs the
-    bag-tiled Pallas kernel).  An optional ``batch["weights"]`` (B, T, L)
+    bag-tiled Pallas kernel); ``dedup`` the gather-once duplicate
+    coalescing knob (off/auto/on, None = engine default) — bit-exact
+    either way.  An optional ``batch["weights"]`` (B, T, L)
     carries per-lookup SLS weights — the serving batcher uses weight-0
     entries to pad variable-pooling bags to a shape bucket exactly.
     """
@@ -75,7 +80,8 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
     if "bot_proj" in params:
         x_bot = x_bot @ params["bot_proj"]                  # (B, d)
     pooled = engine.lookup(state, idx, weights=batch.get("weights"),
-                           mode=mode, impl=impl, block_l=block_l)  # (B, T, d)
+                           mode=mode, impl=impl, block_l=block_l,
+                           dedup=dedup)                     # (B, T, d)
     # dense towers use the full (dp x tp) mesh, not just dp (see
     # recsys._constrain_full_batch)
     from repro.models.recsys import _constrain_full_batch
@@ -126,11 +132,12 @@ def make_train_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
 
 def make_serve_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
                     mode: str = "pifs", interaction_impl: str = "jnp",
-                    impl: str = "jnp", block_l: int = 8):
+                    impl: str = "jnp", block_l: int = 8,
+                    dedup: Optional[str] = None):
     def step(params, emb_state, batch):
         logits = forward(params, engine, emb_state, batch, cfg, mode=mode,
                          interaction_impl=interaction_impl, impl=impl,
-                         block_l=block_l)
+                         block_l=block_l, dedup=dedup)
         return jax.nn.sigmoid(logits)
     return step
 

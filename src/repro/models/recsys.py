@@ -41,8 +41,10 @@ from repro.models.params import Spec
 
 def build_engine(cfg: RecConfig, mesh: Mesh, hot_fraction: float = 0.05,
                  dtype=jnp.float32, storage: str = "fp32",
+                 dedup: str = "off",
                  ) -> Tuple[PIFSEmbeddingEngine, np.ndarray]:
-    """``storage='int8'`` selects the quantized cold tier (serving-only).
+    """``storage='int8'`` selects the quantized cold tier (serving-only);
+    ``dedup`` sets the engine default for gather-once duplicate coalescing.
 
     The returned offsets are int64; lookups add them and downcast to int32
     on device, which is safe because engine_for_tables validates the whole
@@ -51,7 +53,7 @@ def build_engine(cfg: RecConfig, mesh: Mesh, hot_fraction: float = 0.05,
     """
     return engine_for_tables(list(cfg.vocab_sizes), cfg.embed_dim, mesh,
                              hot_fraction=hot_fraction, dtype=dtype,
-                             storage=storage)
+                             storage=storage, dedup=dedup)
 
 
 def _constrain_full_batch(x: jax.Array, engine) -> jax.Array:
@@ -72,20 +74,22 @@ def _constrain_full_batch(x: jax.Array, engine) -> jax.Array:
 
 def _seq_lookup(engine, state, ids: jax.Array, offset: int, mode: str,
                 dp_shard: bool = True, impl: str = "jnp",
-                block_l: int = 8) -> jax.Array:
+                block_l: int = 8, dedup: Optional[str] = None) -> jax.Array:
     """(B, S) ids in table `offset` -> (B, S, D) per-position embeddings."""
     idx = (ids + offset)[..., None]          # (B, S, 1): one bag per position
     return engine.lookup(state, idx.astype(jnp.int32), mode=mode,
-                         dp_shard=dp_shard, impl=impl, block_l=block_l)
+                         dp_shard=dp_shard, impl=impl, block_l=block_l,
+                         dedup=dedup)
 
 
 def _field_lookup(engine, state, ids: jax.Array, offsets: np.ndarray,
                   mode: str, dp_shard: bool = True, impl: str = "jnp",
-                  block_l: int = 8) -> jax.Array:
+                  block_l: int = 8, dedup: Optional[str] = None) -> jax.Array:
     """(B, F) per-field ids -> (B, F, D)."""
     idx = (ids + jnp.asarray(offsets, jnp.int32)[None, :])[..., None]
     return engine.lookup(state, idx.astype(jnp.int32), mode=mode,
-                         dp_shard=dp_shard, impl=impl, block_l=block_l)
+                         dp_shard=dp_shard, impl=impl, block_l=block_l,
+                         dedup=dedup)
 
 
 # ---------------------------------------------------------------------------
@@ -214,10 +218,11 @@ def _sasrec_block(bp: dict, x: jax.Array) -> jax.Array:
 
 def sasrec_encode(params, engine, state, seq_ids: jax.Array, cfg: RecConfig,
                   mode: str = "pifs", dp_shard: bool = True,
-                  impl: str = "jnp", block_l: int = 8) -> jax.Array:
+                  impl: str = "jnp", block_l: int = 8,
+                  dedup: Optional[str] = None) -> jax.Array:
     """(B, S) history -> (B, S, D) causal representations."""
     x = _seq_lookup(engine, state, seq_ids, 0, mode, dp_shard,
-                    impl=impl, block_l=block_l)               # (B, S, D)
+                    impl=impl, block_l=block_l, dedup=dedup)  # (B, S, D)
     if dp_shard:
         x = _constrain_full_batch(x, engine)
     x = x * jnp.sqrt(cfg.embed_dim).astype(x.dtype) + params["pos_emb"]
@@ -228,13 +233,13 @@ def sasrec_encode(params, engine, state, seq_ids: jax.Array, cfg: RecConfig,
 
 def bst_forward(params, engine, state, batch, cfg: RecConfig,
                 mode: str = "pifs", impl: str = "jnp",
-                block_l: int = 8) -> jax.Array:
+                block_l: int = 8, dedup: Optional[str] = None) -> jax.Array:
     """batch: seq (B, S), target (B,), dense (B, n_dense) -> CTR logit (B,)."""
     seq, target = batch["seq"], batch["target"]
     B, S = seq.shape
     tokens = jnp.concatenate([seq, target[:, None]], axis=1)  # (B, S+1)
     x = _seq_lookup(engine, state, tokens, 0, mode, impl=impl,
-                    block_l=block_l)
+                    block_l=block_l, dedup=dedup)
     x = _constrain_full_batch(x, engine)
     x = x + params["pos_emb"]
     for bp in params["blocks"]:
@@ -252,9 +257,10 @@ def bst_forward(params, engine, state, batch, cfg: RecConfig,
 
 def autoint_forward(params, engine, state, batch, cfg: RecConfig,
                     offsets: np.ndarray, mode: str = "pifs",
-                    impl: str = "jnp", block_l: int = 8) -> jax.Array:
+                    impl: str = "jnp", block_l: int = 8,
+                    dedup: Optional[str] = None) -> jax.Array:
     x = _field_lookup(engine, state, batch["fields"], offsets, mode,
-                      impl=impl, block_l=block_l)             # (B,F,D)
+                      impl=impl, block_l=block_l, dedup=dedup)  # (B,F,D)
     x = _constrain_full_batch(x, engine)
     for lp in params["layers"]:
         x = jax.nn.relu(_mha(lp["attn"], x, cfg.n_heads, causal=False)
@@ -265,9 +271,10 @@ def autoint_forward(params, engine, state, batch, cfg: RecConfig,
 
 def dcnv2_forward(params, engine, state, batch, cfg: RecConfig,
                   offsets: np.ndarray, mode: str = "pifs",
-                  impl: str = "jnp", block_l: int = 8) -> jax.Array:
+                  impl: str = "jnp", block_l: int = 8,
+                  dedup: Optional[str] = None) -> jax.Array:
     emb = _field_lookup(engine, state, batch["fields"], offsets, mode,
-                        impl=impl, block_l=block_l)
+                        impl=impl, block_l=block_l, dedup=dedup)
     emb = _constrain_full_batch(emb, engine)
     B = emb.shape[0]
     x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
@@ -305,23 +312,23 @@ def sasrec_loss(params, engine, state, batch, cfg, mode="pifs") -> jax.Array:
 
 def forward(params, engine, state, batch, cfg: RecConfig,
             offsets: np.ndarray, mode: str = "pifs", impl: str = "jnp",
-            block_l: int = 8) -> jax.Array:
+            block_l: int = 8, dedup: Optional[str] = None) -> jax.Array:
     it = cfg.interaction
     if it == "self-attn":
         return autoint_forward(params, engine, state, batch, cfg, offsets,
-                               mode, impl=impl, block_l=block_l)
+                               mode, impl=impl, block_l=block_l, dedup=dedup)
     if it == "cross":
         return dcnv2_forward(params, engine, state, batch, cfg, offsets,
-                             mode, impl=impl, block_l=block_l)
+                             mode, impl=impl, block_l=block_l, dedup=dedup)
     if it == "transformer-seq":
         return bst_forward(params, engine, state, batch, cfg, mode,
-                           impl=impl, block_l=block_l)
+                           impl=impl, block_l=block_l, dedup=dedup)
     if it == "self-attn-seq":
         # CTR-style scoring of a target against the sequence representation
         h = sasrec_encode(params, engine, state, batch["seq"], cfg, mode,
-                          impl=impl, block_l=block_l)
+                          impl=impl, block_l=block_l, dedup=dedup)
         t = _seq_lookup(engine, state, batch["target"][:, None], 0, mode,
-                        impl=impl, block_l=block_l)[:, 0]
+                        impl=impl, block_l=block_l, dedup=dedup)[:, 0]
         return jnp.sum(h[:, -1] * t, axis=-1)
     raise ValueError(it)
 
@@ -402,11 +409,12 @@ def make_train_step(cfg: RecConfig, engine: PIFSEmbeddingEngine,
 
 def make_serve_step(cfg: RecConfig, engine: PIFSEmbeddingEngine,
                     offsets: np.ndarray, mesh: Mesh, mode: str = "pifs",
-                    impl: str = "jnp", block_l: int = 8):
+                    impl: str = "jnp", block_l: int = 8,
+                    dedup: Optional[str] = None):
     def step(params, emb_state, batch):
         return jax.nn.sigmoid(
             forward(params, engine, emb_state, batch, cfg, offsets,
-                    mode=mode, impl=impl, block_l=block_l))
+                    mode=mode, impl=impl, block_l=block_l, dedup=dedup))
     return step
 
 

@@ -19,7 +19,7 @@ from repro.serving.batcher import (BatcherConfig, Bucket, DynamicBatcher,
 from repro.serving.loadgen import (LoadConfig, bind_model,
                                    closed_loop_factory,
                                    dummy_request_factory, make_padder,
-                                   request_stream)
+                                   prime_dedup_auto, request_stream)
 from repro.serving.metrics import LatencyHistogram, ServingMetrics
 from repro.serving.request import (AdmissionQueue, ArrivalConfig, Request,
                                    arrival_times)
@@ -35,5 +35,5 @@ __all__ = [
     "ServingMetrics", "ServingRuntime", "SimulatedExecutor", "Wait",
     "arrival_times", "bind_model", "closed_loop_factory",
     "dummy_request_factory", "make_padder", "pad_pooled_indices",
-    "request_stream", "stack_feature",
+    "prime_dedup_auto", "request_stream", "stack_feature",
 ]

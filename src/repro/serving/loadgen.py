@@ -49,6 +49,8 @@ class LoadConfig:
     seed: int = 0
     storage: str = "fp32"                # engine cold-tier storage; DLRM
     #                                      table offsets depend on its page size
+    dedup: str = "off"                   # gather-once duplicate coalescing
+    #                                      (off/auto/on; bit-exact either way)
 
 
 # ---------------------------------------------------------------------------
@@ -58,28 +60,34 @@ class LoadConfig:
 
 def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                block_l: int = 8, hot_fraction: float = 0.05,
-               seed: int = 0, storage: str = "fp32") -> ServeBinding:
+               seed: int = 0, storage: str = "fp32",
+               dedup: str = "off") -> ServeBinding:
     """Build engine + params + jitted serve step for a DLRM or Rec config.
 
     ``storage`` selects the engine's cold-tier format (fp32 passthrough or
-    int8 with per-page scales and fused dequant in the SLS datapath).
+    int8 with per-page scales and fused dequant in the SLS datapath);
+    ``dedup`` the gather-once duplicate-coalescing knob (off/auto/on —
+    bit-exact either way; 'auto' resolves per shape bucket from the
+    observe-phase histogram).
     """
     k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
     if isinstance(cfg, DLRMConfig):
         engine, _ = dlrm_mod.build_engine(cfg, mesh,
                                           hot_fraction=hot_fraction,
-                                          storage=storage)
+                                          storage=storage, dedup=dedup)
         params = prm.initialize(dlrm_mod.model_specs(cfg, mesh), k_params)
         step = jax.jit(dlrm_mod.make_serve_step(
-            cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l))
+            cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l,
+            dedup=dedup))
         idx_key = "indices"
     elif isinstance(cfg, RecConfig):
         engine, offs = rec_mod.build_engine(cfg, mesh,
                                             hot_fraction=hot_fraction,
-                                            storage=storage)
+                                            storage=storage, dedup=dedup)
         params = prm.initialize(rec_mod.model_specs(cfg, mesh), k_params)
         step = jax.jit(rec_mod.make_serve_step(
-            cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l))
+            cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l,
+            dedup=dedup))
         idx_key = None     # field ids are table-local; profiler stays off
     else:
         raise TypeError(f"unsupported serving config {type(cfg)}")
@@ -203,6 +211,67 @@ def closed_loop_factory(cfg, load: LoadConfig
                        features=_rec_features(cfg, rid, load.seed),
                        pooling=1, user=user)
     return make_rec
+
+
+def prime_dedup_auto(binding: ServeBinding, requests: Sequence[Request],
+                     n: int = 64) -> int:
+    """Prime the engine's access histogram for serving ``dedup='auto'``.
+
+    The 'auto' coalescing decision is frozen per lookup plan when the plan
+    is first built — for a serving runtime that is during bucket *warmup*,
+    before any live traffic has populated the observe-phase histogram, so
+    every bucket would freeze to the uniform-prior answer (off) and the
+    knob would be inert.  This feeds the first ``n`` requests' index
+    streams through the profiler (maintenance path), then drops the
+    compiled plans and probe state so the caller's **re-warmup** rebuilds
+    every bucket against the primed histogram; the rebuild traces land
+    before the caller resets plan stats, so the zero-steady-retrace
+    contract is untouched.  Returns the number of requests observed (0
+    for model families whose profiler is off — nothing was dropped)."""
+    if binding.idx_key is None:
+        return 0
+    engine = binding.engine
+    dp = max(1, engine.axes.dp_size(engine.mesh))
+    seen = 0
+    by_pooling: dict = {}
+    for r in requests[:n]:
+        feats = r.features.get(binding.idx_key)
+        if feats is None:
+            continue
+        feats = np.asarray(feats)
+        # observe shards its batch over dp: tile the single request to a
+        # dp-divisible batch (uniform inflation — the histogram's relative
+        # skew, which is all 'auto' reads, is unchanged)
+        idx = np.broadcast_to(feats[None], (dp,) + feats.shape)
+        binding.observe({binding.idx_key: idx})
+        by_pooling.setdefault(feats.shape[-1], []).append(feats)
+        seen += 1
+    if seen:
+        # measured-duplicate hint: the page-granular histogram is blind to
+        # row-level skew scattered across pages (hashed production ids),
+        # so replay the stacked prefix through the exact gather ledger the
+        # dedup datapath realizes; 'auto' resolutions built under the
+        # outer serve-step trace use this as evidence alongside the
+        # analytic expectation.  Prefix batches (~n requests) are larger
+        # than single buckets, so the hint leans optimistic — it is a
+        # decision heuristic, not the gated ledger (which stays measured
+        # per batch).
+        entries = uniques = 0
+        for feats_list in by_pooling.values():
+            d = engine.dedup_factor(binding.state, np.stack(feats_list))
+            entries += d["entries"]
+            uniques += d["unique_rows"]
+        engine.dedup_auto_hint = entries / max(uniques, 1)
+        binding.engine.reset_plan_stats(clear_plans=True)
+        # the engine's lookup plans are built while *tracing* the outer
+        # jitted serve step — once that step is compiled, the engine layer
+        # is bypassed entirely, so its cleared registry would never
+        # repopulate: drop the outer executable too, forcing the re-warmup
+        # to re-trace through engine.lookup against the primed histogram
+        if hasattr(binding.step, "clear_cache"):
+            binding.step.clear_cache()
+        binding.dedup_stats.clear()
+    return seen
 
 
 def dummy_request_factory(cfg, storage: str = "fp32"

@@ -139,6 +139,105 @@ def test_masked_sls_quant_jnp_dispatch_matches_oracle():
     np.testing.assert_array_equal(np.asarray(z), np.zeros((4, 16)))
 
 
+@pytest.mark.parametrize("B,L,V,D,block_l", [
+    (8, 8, 256, 64, 8),       # exact tiling
+    (8, 8, 256, 64, 3),       # tail tile
+    (4, 9, 128, 32, 4),       # tail tile of 1
+    (3, 7, 100, 130, 4),      # odd D, non-128-multiple
+])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_masked_sls_dedup_kernel_bit_exact(B, L, V, D, block_l, weighted):
+    """The two-phase gather-once kernel must match (a) its staging oracle
+    and (b) the non-dedup kernel **bit-for-bit**: the dedup stage changes
+    the gather, never the fixed-l accumulate order."""
+    from repro.core.sls import dedup_plan
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(B * L + D), 4)
+    table = jax.random.normal(k1, (V, D))
+    idx = jax.random.randint(k2, (B, L), 0, V // 4).astype(jnp.int32)  # dups
+    owned = jax.random.bernoulli(k3, 0.5, (B, L))
+    w = jax.random.uniform(k4, (B, L)) if weighted else None
+    plan = dedup_plan(idx, owned)
+    out = ops.masked_sls_dedup(table, plan, owned, w, interpret=True,
+                               block_l=block_l)
+    base = ops.masked_sls(table, idx, owned, w, interpret=True,
+                          block_l=block_l)
+    want = ref.masked_sls_dedup_ref(table, plan.unique_rows, plan.slots,
+                                    owned, w)
+    assert out.shape == (B, D)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_masked_sls_dedup_quant_kernel_bit_exact(weighted):
+    """int8 table: the per-unique-row fused dequant sees the same operands
+    as the non-dedup kernel's per-entry dequant — bitwise equal, and both
+    match the fixed-l-order quantized oracle."""
+    from repro.core.sls import dedup_plan
+    B, L, V, D = 6, 9, 128, 32
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(3), 5)
+    table_q = jax.random.randint(k1, (V, D), -127, 128).astype(jnp.int8)
+    idx = jax.random.randint(k2, (B, L), 0, V // 4).astype(jnp.int32)
+    owned = jax.random.bernoulli(k3, 0.5, (B, L))
+    # per-entry scales must be a function of the row (page scales are)
+    row_scale = jax.random.uniform(k4, (V,), minval=1e-4, maxval=2e-2)
+    scales = row_scale[idx]
+    w = jax.random.uniform(k5, (B, L)) if weighted else None
+    plan = dedup_plan(idx, owned, scales)
+    out = ops.masked_sls_dedup(table_q, plan, owned, w, interpret=True,
+                               block_l=4)
+    base = ops.masked_sls(table_q, idx, owned, w, scales=scales,
+                          interpret=True, block_l=4)
+    want = ref.masked_sls_quant_ref(table_q, idx, owned, scales, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_masked_sls_dedup_extremes():
+    """All-duplicate bags collapse to one staging row; all-unique bags
+    degrade gracefully to one DMA per entry; a fully-masked batch pools to
+    exactly zero (the sentinel staging slot never contributes)."""
+    from repro.core.sls import dedup_plan
+    B, L, V, D = 4, 6, 64, 16
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    table = jax.random.normal(k1, (V, D))
+    w = jax.random.uniform(k2, (B, L))
+    all_dup = jnp.full((B, L), 7, jnp.int32)
+    all_unique = jnp.arange(B * L, dtype=jnp.int32).reshape(B, L)
+    ones = jnp.ones((B, L), bool)
+    for idx, owned in [(all_dup, ones), (all_unique, ones),
+                       (all_dup, jnp.zeros((B, L), bool))]:
+        plan = dedup_plan(idx, owned)
+        out = ops.masked_sls_dedup(table, plan, owned, w, interpret=True)
+        base = ops.masked_sls(table, idx, owned, w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    assert int(dedup_plan(all_dup, ones).n_unique) == 1
+    assert int(dedup_plan(all_unique, ones).n_unique) == B * L
+    assert int(dedup_plan(all_dup, jnp.zeros((B, L), bool)).n_unique) == 0
+
+
+def test_dedup_plan_invariants():
+    """Plan structure: slots route every owned entry to a staging slot
+    holding exactly its row; non-owned entries route to the sentinel run;
+    padded capacity beyond n_slots stays sentinel."""
+    from repro.core.sls import DEDUP_SENTINEL, dedup_plan
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 10, (5, 7)), jnp.int32)
+    owned = jnp.asarray(rng.random((5, 7)) < 0.6)
+    plan = dedup_plan(idx, owned)
+    uniq = np.asarray(plan.unique_rows)
+    slots = np.asarray(plan.slots)
+    n_slots, n_unique = int(plan.n_slots), int(plan.n_unique)
+    o = np.asarray(owned)
+    routed = uniq[slots]
+    np.testing.assert_array_equal(routed[o], np.asarray(idx)[o])
+    assert (routed[~o] == DEDUP_SENTINEL).all()
+    assert (slots < n_slots).all()
+    assert n_unique == len(np.unique(np.asarray(idx)[o]))
+    assert (uniq[n_slots:] == DEDUP_SENTINEL).all()
+
+
 def test_sls_zero_length_bags():
     table = jnp.ones((8, 16))
     idx = jnp.zeros((4, 0), jnp.int32)

@@ -325,6 +325,145 @@ def test_engine_address_space_must_fit_int32(mesh):
     assert offs.dtype == np.int64
 
 
+# ---------------------------------------------------------------------------
+# Gather-once duplicate coalescing (dedup knob)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_dedup_lookup_bit_exact_pinned(engine, engine_q, mesh, impl):
+    """dedup=on equals dedup=off bit-for-bit: the coalesced stage changes
+    the gather (each unique owned row fetched/dequantized once), never the
+    fixed-l accumulate order — pinned here for fp32 and int8 storage,
+    weighted and unweighted (the hypothesis sweep covers the rest)."""
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 16), 0, 300
+                             ).astype(jnp.int32)   # small range => many dups
+    w = jax.random.uniform(jax.random.PRNGKey(2), (8, 2, 16))
+    for eng in (engine, engine_q):
+        state = eng.init_state(jax.random.PRNGKey(0))
+        with mesh:
+            a = eng.lookup(state, idx, impl=impl, dedup="off")
+            b = eng.lookup(state, idx, impl=impl, dedup="on")
+            aw = eng.lookup(state, idx, weights=w, impl=impl, dedup="off")
+            bw = eng.lookup(state, idx, weights=w, impl=impl, dedup="on")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(aw), np.asarray(bw))
+
+
+def test_dedup_grows_plan_cache_key(engine, mesh):
+    """The requested dedup knob is part of the lookup-plan signature: each
+    distinct value keys its own plan (one trace each), repeated calls hit
+    the cache, and plan_stats() reports the resolution records — but only
+    when a dedup-requesting plan exists (off-only callers see the exact
+    legacy stats shape)."""
+    state = engine.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    engine.reset_plan_stats(clear_plans=True)
+    with mesh:
+        engine.lookup(state, idx, dedup="off")
+        engine.lookup(state, idx, dedup="off")
+    stats = engine.plan_stats()
+    assert stats == {"plans": 1, "traces": 1, "calls": 2}  # no "dedup" key
+    with mesh:
+        engine.lookup(state, idx, dedup="on")
+        engine.lookup(state, idx, dedup="on")
+        engine.lookup(state, idx, dedup="auto")
+    stats = engine.plan_stats()
+    assert (stats["plans"], stats["traces"], stats["calls"]) == (3, 3, 5)
+    recs = stats["dedup"]
+    assert len(recs) == 2         # the 'on' and 'auto' plans
+    by_req = {r["requested"]: r for r in recs.values()}
+    assert by_req["on"]["resolved"] is True
+    assert by_req["on"]["measured_factor"] > 1.0
+    # zero histogram => uniform prior => essentially duplicate-free => off
+    assert by_req["auto"]["resolved"] is False
+    assert by_req["auto"]["expected_factor"] is not None
+
+
+def test_dedup_auto_no_retrace_across_observe_replan(engine, mesh):
+    """dedup='auto' freezes its per-plan decision at first build (the cache
+    key carries the *requested* knob), so observe/replan cycles — which
+    change the histogram the decision came from — never retrace, and
+    results stay placement-invariant."""
+    state = engine.init_state(jax.random.PRNGKey(0))
+    # hammer a narrow id range so the histogram is skewed when 'auto' looks
+    hot_idx = (jax.random.randint(jax.random.PRNGKey(1), (8, 2, 16), 0, 64)
+               ).astype(jnp.int32)
+    engine.reset_plan_stats(clear_plans=True)
+    with mesh:
+        state = engine.observe(state, hot_idx)
+        before = np.asarray(engine.lookup(state, hot_idx, dedup="auto"))
+        for _ in range(2):
+            state = engine.observe(state, hot_idx)
+            state, _stats = engine.plan_and_migrate(state)
+            after = np.asarray(engine.lookup(state, hot_idx, dedup="auto"))
+            np.testing.assert_allclose(before, after, rtol=1e-5, atol=1e-5)
+    stats = engine.plan_stats()
+    # exactly one lookup trace (the observe histogram plan is separate)
+    assert stats["traces"] == 1 and len(stats["dedup"]) == 1
+    rec = next(iter(stats["dedup"].values()))
+    # 64 hot rows hammered by 256 entries: auto must have turned dedup on
+    assert rec["requested"] == "auto" and rec["resolved"] is True
+    assert rec["expected_factor"] >= engine.dedup_auto_threshold
+
+
+def test_dedup_on_capacity_fallback_is_exact(mesh):
+    """dedup='on' with a staging budget smaller than the signature's
+    worst case resolves to the non-dedup datapath — recorded in the plan
+    stats, bit-exact by construction."""
+    eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                               hot_fraction=0.06)
+    eng.dedup_staging_bytes = 64          # far below (8*2*4) * 16 * 4
+    base, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                hot_fraction=0.06)
+    s1 = eng.init_state(jax.random.PRNGKey(0))
+    s2 = base.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    with mesh:
+        got = np.asarray(eng.lookup(s1, idx, dedup="on"))
+        want = np.asarray(base.lookup(s2, idx, dedup="off"))
+    np.testing.assert_array_equal(got, want)
+    rec = next(iter(eng.plan_stats()["dedup"].values()))
+    assert rec == {**rec, "requested": "on", "resolved": False,
+                   "capacity_ok": False}
+
+
+def test_dedup_engine_default_and_validation(mesh):
+    """engine_for_tables threads the engine-wide dedup default; bad knob
+    values fail loudly at construction and lookup."""
+    eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh, dedup="on")
+    assert eng.default_dedup == "on"
+    state = eng.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    with mesh:
+        eng.lookup(state, idx)            # default knob = 'on'
+    assert next(iter(eng.plan_stats()["dedup"].values()))["resolved"] is True
+    with pytest.raises(ValueError, match="dedup"):
+        engine_for_tables([500], dim=16, mesh=mesh, dedup="sometimes")
+    with mesh, pytest.raises(ValueError, match="dedup"):
+        eng.lookup(state, idx, dedup="bogus")
+
+
+def test_dedup_factor_counts_weighted_entries(engine, mesh):
+    """The measured duplicate factor replays the per-(dp-group, shard)
+    uniques the dedup'd datapath gathers, and weight-0 (serving pad)
+    entries are excluded from the entry count."""
+    state = engine.init_state(jax.random.PRNGKey(0))
+    idx = jnp.asarray(np.full((8, 2, 4), 17, np.int32))
+    d = engine.dedup_factor(state, idx)
+    # one row, hammered by every entry, owned by one shard per dp group
+    assert d["entries"] == 8 * 2 * 4
+    assert d["unique_rows"] == 2          # dp=2 groups gather it once each
+    assert d["factor"] == pytest.approx(32.0)
+    w = np.zeros((8, 2, 4), np.float32)
+    w[0, 0, 0] = 1.0
+    dw = engine.dedup_factor(state, idx, weights=w)
+    assert dw["entries"] == 1 and dw["unique_rows"] == 1
+
+
 def test_psum_scatter_combine(engine, mesh):
     state = engine.init_state(jax.random.PRNGKey(0))
     # bags per device must divide tp=4: B=8 over dp=2 -> 4 local x G=2 = 8 bags

@@ -12,6 +12,7 @@ from hypothesis import HealthCheck, given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import quant
+from repro.core import sls as sls_ops
 from repro.core.hot_cache import FIFOCache, HTRCache, LRUCache
 from repro.core.paging import (PagingConfig, initial_page_table, locate,
                                placement_gather_indices)
@@ -150,6 +151,104 @@ def test_sls_permutation_invariance(B, L, V, D):
     b = ref.sls_ref(table, jnp.asarray(idx_p, jnp.int32))
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gather-once duplicate coalescing (dedup) — bit-exactness properties
+# ---------------------------------------------------------------------------
+
+_DEDUP_ENGINES: dict = {}     # storage -> (engine, state); one lookup shape
+_DEDUP_SHAPE = (8, 2, 4)      # fixed across examples => plans cache, no
+#                               per-example retraces blow up the runtime
+
+
+def _dedup_engine(storage, mesh):
+    if storage not in _DEDUP_ENGINES:
+        from repro.core.pifs import engine_for_tables
+        eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                   hot_fraction=0.06, storage=storage)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        _DEDUP_ENGINES[storage] = (eng, state)
+    return _DEDUP_ENGINES[storage]
+
+
+@given(data=st.data(),
+       mode=st.sampled_from(["pifs", "pond", "beacon"]),
+       combine=st.sampled_from(["psum", "psum_scatter"]),
+       storage=st.sampled_from(["fp32", "int8"]),
+       impl=st.sampled_from(["jnp", "pallas"]),
+       weighted=st.booleans(),
+       extreme=st.sampled_from(["random", "all_dup", "all_unique"]))
+@settings(deadline=None, max_examples=20,
+          suppress_health_check=list(HealthCheck))
+def test_dedup_lookup_bit_exact(mesh, data, mode, combine, storage, impl,
+                                weighted, extreme):
+    """dedup=on must equal dedup=off **bit-for-bit** across every
+    (impl, mode, combine, storage, weighted) datapath, including the
+    all-duplicate and all-unique index extremes: the coalesced stage
+    changes where rows are gathered from, never the accumulate order."""
+    eng, state = _dedup_engine(storage, mesh)
+    B, G, L = _DEDUP_SHAPE
+    if extreme == "all_dup":
+        row = data.draw(st.integers(0, 499))
+        idx = np.full(_DEDUP_SHAPE, row, np.int32)
+    elif extreme == "all_unique":
+        start = data.draw(st.integers(0, 499 - B * G * L))
+        idx = (np.arange(B * G * L, dtype=np.int32) + start
+               ).reshape(_DEDUP_SHAPE)
+    else:
+        seed = data.draw(st.integers(0, 2 ** 16))
+        idx = np.random.default_rng(seed).integers(
+            0, 500, _DEDUP_SHAPE).astype(np.int32)
+    idx = jnp.asarray(idx)
+    w = None
+    if weighted:
+        wseed = data.draw(st.integers(0, 2 ** 16))
+        w = jnp.asarray(np.random.default_rng(wseed).random(
+            _DEDUP_SHAPE).astype(np.float32))
+    with mesh:
+        off = eng.lookup(state, idx, weights=w, mode=mode, combine=combine,
+                         impl=impl, dedup="off")
+        on = eng.lookup(state, idx, weights=w, mode=mode, combine=combine,
+                        impl=impl, dedup="on")
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+
+
+@given(B=st.integers(1, 6), L=st.integers(1, 8), cap=st.integers(0, 64),
+       quantized=st.booleans(), weighted=st.booleans(),
+       seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_dedup_capacity_overflow_falls_back_exact(B, L, cap, quantized,
+                                                  weighted, seed):
+    """A staging capacity smaller than the padded worst case (B*L) must
+    fall back to the non-dedup path — bit-exactly, for both impls and both
+    storage dtypes (the fallback is the same code path dedup is pinned
+    against, so correctness never depends on the capacity check)."""
+    rng = np.random.default_rng(seed)
+    V, D = 64, 16
+    if quantized:
+        table = jnp.asarray(rng.integers(-127, 128, (V, D)), jnp.int8)
+        row_scale = rng.uniform(1e-4, 2e-2, V).astype(np.float32)
+    else:
+        table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+        row_scale = None
+    idx = jnp.asarray(rng.integers(0, V // 2, (B, L)), jnp.int32)
+    owned = jnp.asarray(rng.random((B, L)) < 0.6)
+    w = (jnp.asarray(rng.random((B, L)).astype(np.float32))
+         if weighted else None)
+    scales = None if row_scale is None else jnp.asarray(row_scale)[idx]
+    kw = dict(weights=w, scales=scales,
+              out_dtype=jnp.float32 if quantized else None)
+    for impl in ("jnp", "pallas"):
+        base = sls_ops.masked_partial_sls_dense(
+            table, idx, owned, impl=impl, dedup=False, **kw)
+        capped = sls_ops.masked_partial_sls_dense(
+            table, idx, owned, impl=impl, dedup=True, dedup_capacity=cap,
+            **kw)
+        full = sls_ops.masked_partial_sls_dense(
+            table, idx, owned, impl=impl, dedup=True, **kw)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(capped))
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(full))
 
 
 @given(cap=st.integers(1, 64), n=st.integers(1, 500), seed=st.integers(0, 5))

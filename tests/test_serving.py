@@ -286,3 +286,70 @@ def test_end_to_end_serving_zero_steady_retraces(mesh):
     assert out["replans"] >= 1                # maintenance actually folded in
     assert 0.0 < out["batch_occupancy_mean"] <= 1.0
     assert out["qps"] > 0 and out["p99_ms"] >= out["p50_ms"]
+    # the observe-cadence dedup probe attributes bytes per shape bucket
+    assert out["dedup_factors"], "no bucket was ever observed"
+    for rec in out["dedup_factors"].values():
+        assert rec["batches"] >= 1
+        assert rec["entries"] >= rec["unique_rows"] > 0
+        assert rec["factor"] >= 1.0
+
+
+@pytest.mark.parametrize("dedup", ["on", "auto"])
+def test_end_to_end_serving_dedup_matches_off(mesh, dedup):
+    """Identical request stream served with dedup off vs on/auto: scores
+    are produced by bit-exact lookups, so the serving summary's served /
+    dropped / retrace accounting must be identical and the dedup'd run
+    must keep the zero-steady-retrace contract ('auto' freezes its
+    per-bucket decision at warmup and never retraces afterwards)."""
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import serve_offered_load
+    cfg = reduced(get_config("rmc1"))
+
+    def run(knob):
+        load = LoadConfig(
+            n_requests=32, arrival=ArrivalConfig(rate_qps=400.0, seed=3),
+            slo_ms=200.0, seed=3, dedup=knob)
+        return serve_offered_load(
+            cfg, mesh, load, batch_sizes=(8, 16),
+            runtime_cfg=RuntimeConfig(observe_every=2, replan_every=4))
+
+    base = run("off")
+    out = run(dedup)
+    assert out["served"] == base["served"] == 32
+    assert out["steady_traces"] == 0
+    assert out["dedup_factors"].keys() == base["dedup_factors"].keys()
+
+
+def test_serving_auto_dedup_resolves_from_primed_histogram(mesh):
+    """serve_offered_load(dedup='auto') must not be inert: the profiler is
+    primed with a prefix of the live stream before the post-warmup plan
+    rebuild, so per-bucket 'auto' resolutions see the real (zipfian)
+    traffic skew instead of freezing against the empty-histogram uniform
+    prior at first warmup."""
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import build_serving
+    from repro.serving import (OpenLoopSource, dummy_request_factory,
+                               prime_dedup_auto, request_stream)
+    cfg = reduced(get_config("rmc1"))
+    load = LoadConfig(n_requests=64,
+                      arrival=ArrivalConfig(rate_qps=400.0, seed=5),
+                      slo_ms=200.0, seed=5, dedup="auto")
+    runtime, binding = build_serving(cfg, mesh, dedup="auto",
+                                     batch_sizes=(8, 16))
+    with mesh:
+        runtime.warmup(dummy_request_factory(cfg))
+        cold = binding.plan_stats().get("dedup", {})
+        # first warmup ran before any traffic: uniform prior, all off
+        assert cold and all(not r["resolved"] for r in cold.values())
+        reqs = request_stream(cfg, load)
+        assert prime_dedup_auto(binding, reqs) > 0
+        runtime.warmup(dummy_request_factory(cfg))
+        binding.reset_plan_stats()
+        runtime.run(OpenLoopSource(reqs))
+    stats = binding.plan_stats()
+    recs = stats["dedup"]
+    # rebuilt against the primed histogram: the skewed stream must flip
+    # at least one bucket on, with the expected factor on record
+    assert any(r["resolved"] for r in recs.values())
+    assert all(r["expected_factor"] is not None for r in recs.values())
+    assert stats["traces"] == 0           # the rebuilds were pre-steady
