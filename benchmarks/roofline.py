@@ -2,6 +2,15 @@
 
 Prints the per-(arch x shape x mesh) three-term roofline with the dominant
 bottleneck and the MODEL/HLO useful-flops ratio — the §Roofline deliverable.
+
+Also prints the analytic *front-end* roofline (``front_end_points``): for
+each RMC config, the arithmetic intensity of the DLRM front end (SLS
+gather -> pooled features -> dot-interaction) under the split and fused
+pipelines.  The fused kernel keeps the pooled (B, F, D) features in VMEM
+(kernels/sls.py), dropping the pooled/features HBM round trips from the
+denominator — the operating point slides right along the bandwidth roof
+while flops stay fixed, which is the whole bet of the fusion (the front
+end is memory-bound at every RMC shape by orders of magnitude).
 """
 from __future__ import annotations
 
@@ -11,6 +20,84 @@ import os
 from typing import Dict, List, Optional
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+# nominal accelerator corner for the front-end roofline (a v5e-ish chip);
+# the *ratios* between split and fused are hardware-independent
+PEAK_TFLOPS = 197.0
+HBM_GBS = 819.0
+
+
+def _fe_bytes(B: int, Gt: int, L: int, D: int, front_end: str,
+              itemsize: int = 4) -> int:
+    """Front-end HBM bytes per batch — mirrors
+    ``benchmarks.sls_bench.front_end_bytes`` (kept dependency-free here so
+    the roofline stays importable without jax): both pipelines pay the row
+    gather + the (B, D) dense read + (B, P) triangle write; split adds the
+    pooled round trip (write + concat read) and the features round trip
+    (concat write + interaction read)."""
+    F = Gt + 1
+    Pp = F * (F - 1) // 2
+    gather = B * Gt * L * D * itemsize + (B * Gt * L * 4 if itemsize == 1
+                                          else 0)
+    stage = B * D * 4 + B * Pp * 4
+    if front_end == "fused":
+        return gather + stage
+    return gather + stage + 2 * B * Gt * D * 4 + 2 * B * F * D * 4
+
+
+def _fe_flops(B: int, Gt: int, L: int, D: int) -> int:
+    """Front-end flops per batch: the SLS weighted accumulate (2 flops per
+    gathered element) + the interaction matmul (2*F*F*D MACs per sample;
+    identical for split and fused — fusion moves bytes, not math)."""
+    F = Gt + 1
+    return B * (2 * Gt * L * D + 2 * F * F * D)
+
+
+def front_end_points(batch: int = 512, storages=("fp32", "int8")
+                     ) -> List[Dict]:
+    """Split-vs-fused operating points for every RMC config at ``batch``
+    (the serve_p99 shape).  Returns one record per (arch, storage) with
+    arithmetic intensity (flops/byte), memory/compute roofline times, and
+    the bound speedup fused buys."""
+    from repro.configs import get_config
+    balance = PEAK_TFLOPS * 1e12 / (HBM_GBS * 1e9)   # flops/byte ridge
+    rows = []
+    for arch in ("rmc1", "rmc2", "rmc3", "rmc4"):
+        cfg = get_config(arch)
+        B, Gt, L, D = batch, cfg.n_tables, cfg.pooling, cfg.emb_dim
+        flops = _fe_flops(B, Gt, L, D)
+        for storage in storages:
+            itemsize = 1 if storage == "int8" else 4
+            rec = {"arch": arch, "storage": storage, "B": B, "G": Gt,
+                   "L": L, "D": D, "flops": flops, "ridge": balance}
+            for fe in ("split", "fused"):
+                nbytes = _fe_bytes(B, Gt, L, D, fe, itemsize)
+                ai = flops / nbytes
+                mem_s = nbytes / (HBM_GBS * 1e9)
+                comp_s = flops / (PEAK_TFLOPS * 1e12)
+                rec[fe] = {"bytes": nbytes, "ai": ai,
+                           "memory_s": mem_s, "compute_s": comp_s,
+                           "bound_s": max(mem_s, comp_s),
+                           "dominant": ("memory" if mem_s >= comp_s
+                                        else "compute")}
+            rec["bound_speedup_x"] = (rec["split"]["bound_s"]
+                                      / rec["fused"]["bound_s"])
+            rows.append(rec)
+    return rows
+
+
+def front_end_table(batch: int = 512) -> str:
+    rows = [f"{'arch':6s} {'store':5s} {'AI split':>9s} {'AI fused':>9s} "
+            f"{'bytes x':>8s} {'bound x':>8s} {'dominant':>8s} "
+            f"(ridge {PEAK_TFLOPS * 1e12 / (HBM_GBS * 1e9):.0f} flops/B)"]
+    rows.append("-" * len(rows[0]))
+    for r in front_end_points(batch):
+        rows.append(
+            f"{r['arch']:6s} {r['storage']:5s} "
+            f"{r['split']['ai']:9.3f} {r['fused']['ai']:9.3f} "
+            f"{r['fused']['bytes'] / r['split']['bytes']:8.3f} "
+            f"{r['bound_speedup_x']:8.2f} {r['fused']['dominant']:>8s}")
+    return "\n".join(rows)
 
 
 def load_records(mesh: Optional[str] = None) -> List[Dict]:
@@ -57,6 +144,9 @@ def main() -> None:
         print(f"\n=== Roofline ({mesh}: "
               f"{'256' if mesh == 'pod' else '512'} chips) ===")
         print(table(mesh))
+    print("\n=== DLRM front end: split vs fused operating points "
+          "(B=512 serve_p99) ===")
+    print(front_end_table())
 
 
 if __name__ == "__main__":

@@ -61,8 +61,22 @@ stored bytes crossing the memory interface are the cost that matters):
     recorded, not gated (interpret-mode caveat below: the sort-unique adds
     interpreter work that TPU hardware amortizes against the DMA savings).
 
-Writes ``BENCH_sls.json`` (schema 3); documented in EXPERIMENTS.md §Perf,
-§Quantized cold-tier storage and §Duplicate-access coalescing.
+Fused front end (schema 4, ``--front-end sweep``, the default): a separate
+section on the *default DLRM shape* (8 tables x pooling 8, D=64) over a
+dp-only (8, 1) mesh — the replicated/dp-sharded serving config where
+``front_end='fused'`` resolves fused — gating (a) fused == split bit-for-bit
+per {impl, storage, dedup}, (b) the front-end bytes ledger
+(``front_end_bytes``: gather + pooled/features HBM round trips for split,
+gather only for fused) at ``fused <= 0.72x split``, (c) zero steady-state
+retraces, and (d) the tp-sharded control resolving the knob back to split
+(checked via ``plan_stats()['front_end']`` — excluded from the gate, never
+silently counted).  An ``e2e`` block times the full DLRM serve step
+(bottom MLP -> lookup -> interaction -> top MLP as one jitted step) for
+both pipelines and pins their scores bit-equal.
+
+Writes ``BENCH_sls.json`` (schema 4); documented in EXPERIMENTS.md §Perf,
+§Quantized cold-tier storage, §Duplicate-access coalescing and §Fused
+front end.
 
 Caveat: on CPU containers the Pallas kernel runs in *interpret mode* — its
 absolute latency here reflects the interpreter, not TPU hardware; the numbers
@@ -76,6 +90,7 @@ Usage: ``PYTHONPATH=src python -m benchmarks.sls_bench [--out BENCH_sls.json]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import platform
@@ -107,6 +122,14 @@ BYTES_RATIO_GATE = 0.35   # int8 stored bytes must be < 0.35x fp32
 BW_IMPROVEMENT_GATE = 2.0  # bytes-moved-basis effective-bandwidth gain
 DEDUP_BYTES_GATE = 0.5     # dedup=on gathered bytes vs off (zipfian gate)
 DEDUP_GATE_MIN_ENTRIES = 2048  # pooled entries below which the gate is off
+
+# ---- fused front end (schema 4) ----
+# Default DLRM shape (paper evaluation setup: 8 tables x pooling 8, D=64 —
+# the RMC1/2/3 embedding dim), dp-only mesh (8, 1): the replicated/
+# dp-sharded serving config where the fused front end resolves fused.
+FE_SHAPE = dict(B=16, G=8, L=8, D=64)
+FE_VOCAB = 2048            # rows per table (page-aligned for both storages)
+FE_BYTES_GATE = 0.72       # fused front-end bytes must be <= 0.72x split
 
 
 class CompileEventCounter:
@@ -141,8 +164,8 @@ def make_indices(B: int, L: int, distribution: str, alpha: float
 
 
 def bytes_moved_per_lookup(B: int, L: int, D: int, storage: str,
-                           dedup_info=None) -> int:
-    """Stored bytes DMA'd from the embedding store for one (B, G, L, D)
+                           dedup_info=None, g: int = G) -> int:
+    """Stored bytes DMA'd from the embedding store for one (B, g, L, D)
     lookup.  dedup=off (``dedup_info=None``): every pooling entry fetches
     its row once across the mesh (each row is owned by exactly one shard;
     the bench state is all-cold), plus one fp32 page scale per entry for
@@ -152,9 +175,33 @@ def bytes_moved_per_lookup(B: int, L: int, D: int, storage: str,
     row_bytes = D * (1 if storage == "int8" else 4)
     scale_bytes = 4 if storage == "int8" else 0
     if dedup_info is None:
-        return B * G * L * (row_bytes + scale_bytes)
+        return B * g * L * (row_bytes + scale_bytes)
     return (dedup_info["unique_cold"] * (row_bytes + scale_bytes)
             + dedup_info["unique_hot"] * D * 4)   # hot tier is always fp32
+
+
+def front_end_bytes(B: int, Gt: int, L: int, D: int, storage: str,
+                    front_end: str, dedup_info=None) -> int:
+    """Total bytes the DLRM front end (SLS gather -> pooled features ->
+    dot-interaction) moves per lookup.
+
+    Both pipelines pay the same row-gather traffic (``bytes_moved_per_
+    lookup``, dedup-aware), the (B, D) bottom-MLP read and the (B, P)
+    packed-triangle write.  The *split* pipeline additionally round-trips
+    the pooled features through HBM twice: the SLS writes (B, G, D) pooled
+    and the concat reads it back (one round trip), then the concat writes
+    the (B, F, D) features tensor and the interaction kernel reads it back
+    (the second) — the ``2 + 2`` x ``B*F*D*4`` traffic the fused kernel's
+    persistent VMEM staging eliminates (kernels/sls.py phase 2/3)."""
+    F = Gt + 1
+    Pp = F * (F - 1) // 2
+    gather = bytes_moved_per_lookup(B, L, D, storage, dedup_info, g=Gt)
+    stage = B * D * 4 + B * Pp * 4              # x in + packed triangle out
+    if front_end == "fused":
+        return gather + stage
+    pooled_rt = 2 * B * Gt * D * 4              # pooled write + concat read
+    feats_rt = 2 * B * F * D * 4                # concat write + kernel read
+    return gather + stage + pooled_rt + feats_rt
 
 
 def bench_group(setups, idx, *, impl: str, mode: str, dedup: str, events,
@@ -232,6 +279,243 @@ def check_oracles(eng, state, idx, storage: str) -> None:
                 f"mode={mode}: max|d|={np.abs(a - want).max()}")
 
 
+def fe_make_indices(B: int, Gt: int, L: int, distribution: str, alpha
+                    ) -> jax.Array:
+    """(B, Gt, L) ids in the shared first-table prefix (valid for both
+    storage layouts — same trick as :func:`make_indices`)."""
+    if distribution == "uniform":
+        return jax.random.randint(jax.random.PRNGKey(2), (B, Gt, L), 0,
+                                  FE_VOCAB).astype(jnp.int32)
+    gen = TraceGenerator(TraceConfig(
+        n_rows=FE_VOCAB, n_tables=Gt, pooling=L, batch=B,
+        distribution="zipfian", zipf_alpha=alpha, seed=2))
+    return jnp.asarray(gen.next_batch().astype(np.int32))
+
+
+def run_front_end_section(args, events, storages) -> dict:
+    """Schema-4 front-end sweep: fused vs split on the default DLRM shape.
+
+    Engine-level rows (dp-only (8, 1) mesh, where fusion resolves fused):
+    bitwise equality fused == split per {impl, storage, dedup}, p50/p90
+    per (front_end, impl), zero steady-state retraces, and the front-end
+    bytes ledger gated ``fused <= FE_BYTES_GATE x split``.  A tp-sharded
+    (2, 4) control config demonstrates the documented fallback: the knob
+    resolves back to split (checked via ``plan_stats()['front_end']``)
+    and the row is excluded from the gate rather than silently counted.
+    An end-to-end ``e2e`` block times the full DLRM serve step (bottom
+    MLP -> lookup -> interaction -> top MLP, one jitted step) for both
+    pipelines.
+    """
+    from repro.configs import get_config
+    from repro.models import dlrm as dlrm_mod
+    from repro.models import params as prm
+
+    B, Gt, L, D = (FE_SHAPE[k] for k in ("B", "G", "L", "D"))
+    mesh = make_mesh((8, 1), ("data", "model"))
+    results, comparisons = [], []
+    dists = [("uniform", None), ("zipfian", 1.1)]
+    if args.quick:
+        dists = [("zipfian", 1.1)]
+    reps = args.reps
+
+    setups = {}
+    for storage in storages:
+        eng, _ = engine_for_tables([FE_VOCAB] * Gt, dim=D, mesh=mesh,
+                                   hot_fraction=0.05, storage=storage)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        setups[storage] = (eng, state)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, D))
+
+    for dist, alpha in dists:
+        idx = fe_make_indices(B, Gt, L, dist, alpha)
+        dlabel = dist if alpha is None else f"{dist}(a={alpha})"
+        for storage, (eng, state) in setups.items():
+            dedups = ("off",) if dist == "uniform" else ("off", "on")
+            if args.dedup == "off":
+                dedups = ("off",)
+            dup = eng.dedup_factor(state, idx)
+            for dedup in dedups:
+                # ---- correctness gate: fused == split bit-for-bit ----
+                with mesh:
+                    outs = {}
+                    for impl in IMPLS:
+                        for fe in ("split", "fused"):
+                            outs[(impl, fe)] = np.asarray(eng.lookup_interact(
+                                state, idx, x, impl=impl, dedup=dedup,
+                                front_end=fe))
+                    base = outs[("jnp", "split")]
+                    for k, v in outs.items():
+                        if not np.array_equal(base, v):
+                            raise AssertionError(
+                                f"front end not bit-exact for {k} "
+                                f"(storage={storage} dedup={dedup})")
+                    # oracle: the split composition from engine primitives
+                    pooled = eng.lookup(state, idx, impl="jnp", dedup=dedup)
+                    feats = jnp.concatenate([x[:, None, :], pooled], axis=1)
+                    from repro.kernels import ref as kernel_ref
+                    want = np.asarray(kernel_ref.dot_interaction_ref(feats))
+                if not np.array_equal(base, want):
+                    raise AssertionError(
+                        f"front end disagrees with the lookup+interaction "
+                        f"oracle (storage={storage} dedup={dedup})")
+                # ---- timing + retrace probes ----
+                p50 = {}
+                for impl in IMPLS:
+                    for fe in ("split", "fused"):
+                        eng.reset_plan_stats(clear_plans=True)
+                        events.take()
+                        with mesh:
+                            for _ in range(2):
+                                jax.block_until_ready(eng.lookup_interact(
+                                    state, idx, x, impl=impl, dedup=dedup,
+                                    front_end=fe))
+                            warm_traces = eng.plan_stats()["traces"]
+                            lat = []
+                            for _ in range(reps):
+                                t0 = time.perf_counter()
+                                jax.block_until_ready(eng.lookup_interact(
+                                    state, idx, x, impl=impl, dedup=dedup,
+                                    front_end=fe))
+                                lat.append(time.perf_counter() - t0)
+                        stats = eng.plan_stats()
+                        steady = stats["traces"] - warm_traces
+                        if steady:
+                            raise AssertionError(
+                                f"front-end steady-state retrace: "
+                                f"impl={impl} fe={fe} storage={storage}")
+                        fe_recs = [r for r in stats["front_end"].values()
+                                   if r["requested"] == fe]
+                        resolved = fe_recs[0]["resolved"]
+                        if fe == "fused" and resolved != "fused":
+                            raise AssertionError(
+                                "fused plan did not resolve fused on the "
+                                f"dp-only mesh (storage={storage}): the "
+                                "bytes ledger would claim unrealized wins")
+                        if dedup == "on":
+                            drecs = [r for r in
+                                     stats.get("dedup", {}).values()
+                                     if r["requested"] == "on"]
+                            if not all(r["resolved"] for r in drecs):
+                                raise AssertionError(
+                                    "fe dedup=on fell back (capacity?)")
+                        info = dup if dedup == "on" else None
+                        nbytes = front_end_bytes(B, Gt, L, D, storage, fe,
+                                                 info)
+                        r = {"B": B, "G": Gt, "L": L, "D": D,
+                             "storage": storage, "impl": impl,
+                             "front_end": fe, "resolved": resolved,
+                             "dedup": dedup, "distribution": dist,
+                             "alpha": alpha,
+                             "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                             "p90_ms": float(np.percentile(lat, 90) * 1e3),
+                             "steady_traces": steady,
+                             "bytes_moved_per_lookup": nbytes,
+                             "dup_factor": dup["factor"]}
+                        results.append(r)
+                        p50[(impl, fe)] = r["p50_ms"]
+                        print(f"FE {dlabel:16s} storage={storage:5s} "
+                              f"dedup={dedup:3s} impl={impl:6s} "
+                              f"fe={fe:5s} p50={r['p50_ms']:8.2f}ms "
+                              f"bytes/lookup={nbytes:8d}")
+                # ---- bytes gate ----
+                info = dup if dedup == "on" else None
+                b_split = front_end_bytes(B, Gt, L, D, storage, "split", info)
+                b_fused = front_end_bytes(B, Gt, L, D, storage, "fused", info)
+                comp = {"B": B, "G": Gt, "L": L, "D": D, "storage": storage,
+                        "dedup": dedup, "distribution": dist, "alpha": alpha,
+                        "bytes_split": b_split, "bytes_fused": b_fused,
+                        "bytes_ratio": b_fused / b_split,
+                        "resolved": "fused", "gated": True,
+                        "p50_ratio_jnp": (p50[("jnp", "fused")]
+                                          / p50[("jnp", "split")]),
+                        "p50_ratio_pallas": (p50[("pallas", "fused")]
+                                             / p50[("pallas", "split")])}
+                comparisons.append(comp)
+                print(f"FE fused vs split @ {dlabel} {storage} dedup={dedup}: "
+                      f"bytes {comp['bytes_ratio']:.3f}x, p50 jnp "
+                      f"{comp['p50_ratio_jnp']:.2f}x / pallas "
+                      f"{comp['p50_ratio_pallas']:.2f}x")
+                if comp["bytes_ratio"] > FE_BYTES_GATE:
+                    raise AssertionError(
+                        f"front-end bytes gate failed at {dlabel} "
+                        f"storage={storage} dedup={dedup}: "
+                        f"{comp['bytes_ratio']:.3f} > {FE_BYTES_GATE}")
+
+    # ---- tp-sharded control: the knob must resolve back to split ----
+    mesh_tp = make_mesh((2, 4), ("data", "model"))
+    eng_tp, _ = engine_for_tables([FE_VOCAB] * Gt, dim=D, mesh=mesh_tp,
+                                  hot_fraction=0.05)
+    st_tp = eng_tp.init_state(jax.random.PRNGKey(0))
+    idx = fe_make_indices(B, Gt, L, "uniform", None)
+    with mesh_tp:
+        a = np.asarray(eng_tp.lookup_interact(st_tp, idx, x, impl="pallas",
+                                              front_end="fused"))
+        b = np.asarray(eng_tp.lookup_interact(st_tp, idx, x, impl="pallas",
+                                              front_end="split"))
+    rec = [r for r in eng_tp.plan_stats()["front_end"].values()
+           if r["requested"] == "fused"][0]
+    if rec["resolved"] != "split":
+        raise AssertionError("tp-sharded config must resolve fused -> split")
+    if not np.array_equal(a, b):
+        raise AssertionError("tp fallback changed numerics")
+    tp_control = {"mesh": {"data": 2, "model": 4}, "requested": "fused",
+                  "resolved": rec["resolved"], "reason": rec["reason"],
+                  "gated": False}
+    print(f"FE tp control: fused resolves -> {rec['resolved']} "
+          f"(excluded from the bytes gate)")
+
+    # ---- e2e: bottom MLP -> lookup -> interaction -> top MLP, one step ----
+    cfg = dataclasses.replace(get_config("rmc1"), emb_num=FE_VOCAB)
+    e2e = []
+    eng, _ = dlrm_mod.build_engine(cfg, mesh)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    params = prm.initialize(dlrm_mod.model_specs(cfg, mesh),
+                            jax.random.PRNGKey(1))
+    from repro.data.synth import dlrm_batches
+    batch = next(dlrm_batches(cfg, batch=B, n_batches=1))
+    jb = {"dense": jnp.asarray(batch["dense"]),
+          "indices": jnp.asarray(batch["indices"])}
+    e2e_reps = max(3, reps)
+    outs = {}
+    for fe in ("split", "fused"):
+        for impl in IMPLS:
+            step = jax.jit(dlrm_mod.make_serve_step(
+                cfg, eng, mesh, impl=impl, interaction_impl=impl,
+                front_end=fe))
+            eng.reset_plan_stats(clear_plans=True)
+            with mesh:
+                for _ in range(2):
+                    jax.block_until_ready(step(params, state, jb))
+                warm = eng.plan_stats()["traces"]
+                lat = []
+                for _ in range(e2e_reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(step(params, state, jb))
+                    lat.append(time.perf_counter() - t0)
+                outs[(fe, impl)] = np.asarray(step(params, state, jb))
+            steady = eng.plan_stats()["traces"] - warm
+            if steady:
+                raise AssertionError(
+                    f"e2e steady-state retrace: fe={fe} impl={impl}")
+            r = {"arch": cfg.name, "B": B, "front_end": fe, "impl": impl,
+                 "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                 "p90_ms": float(np.percentile(lat, 90) * 1e3),
+                 "steady_traces": steady}
+            e2e.append(r)
+            print(f"FE e2e {cfg.name} fe={fe:5s} impl={impl:6s} "
+                  f"p50={r['p50_ms']:8.2f}ms")
+    base = outs[("split", "jnp")]
+    for k, v in outs.items():
+        if not np.array_equal(base, v):
+            raise AssertionError(f"e2e scores not bit-exact for {k}")
+
+    return {"shape": dict(FE_SHAPE, vocab=FE_VOCAB),
+            "mesh": {"data": 8, "model": 1},
+            "bytes_gate": FE_BYTES_GATE,
+            "results": results, "fused_vs_split": comparisons,
+            "tp_control": tp_control, "e2e": e2e}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_sls.json")
@@ -254,6 +538,12 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, nargs="+", default=[1.1],
                     help="zipfian skew(s) to sweep (traces.py calibration: "
                          "1.1 ~ Meta-trace-like)")
+    ap.add_argument("--front-end", dest="front_end", default="sweep",
+                    choices=["sweep", "off"],
+                    help="schema-4 fused-front-end section: fused vs split "
+                         "on the default DLRM shape (dp-only mesh), bytes "
+                         "gate, tp-fallback control, and the end-to-end "
+                         "lookup->interaction->top-MLP step timing")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 4), ("data", "model"))
@@ -411,9 +701,13 @@ def main() -> None:
                             f"{comp['bytes_ratio']:.3f} > "
                             f"{DEDUP_BYTES_GATE}")
 
+    front_end = None
+    if args.front_end == "sweep":
+        front_end = run_front_end_section(args, events, storages)
+
     out = {
         "bench": "sls_lookup",
-        "schema": 3,
+        "schema": 4,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,
@@ -429,12 +723,15 @@ def main() -> None:
         "results": results,
         "int8_vs_fp32": comparisons,
         "dedup_vs_off": dedup_comparisons,
+        "front_end": front_end,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"\nwrote {args.out} ({len(results)} rows, "
           f"{len(comparisons)} int8 comparisons, "
-          f"{len(dedup_comparisons)} dedup comparisons)")
+          f"{len(dedup_comparisons)} dedup comparisons, "
+          f"{0 if front_end is None else len(front_end['results'])} "
+          f"front-end rows)")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,18 @@
 """Reproduce the paper's headline comparison: PIFS-Rec vs Pond vs Pond+PM vs
 BEACON vs RecNMP on an RMC4-scale zipfian trace (simlab, Table II params).
 
-Run:  PYTHONPATH=src python examples/pifs_vs_pond.py
+The analytic comparison is backed by a live-engine cross-check: the same
+zipfian trace runs through a real ``PIFSEmbeddingEngine`` with the post-seed
+datapath knobs, verifying pifs == pond numerically and reporting the
+measured duplicate-access factor the knobs exploit.
+
+Run:  PYTHONPATH=src python examples/pifs_vs_pond.py [--storage int8]
+      [--dedup on] [--impl pallas] [--skip-engine]
 """
+import argparse
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import numpy as np
 
 from repro.configs import get_config
@@ -13,7 +23,49 @@ from repro.simlab.simulator import ALL_SYSTEMS, make_system, simulate
 PAPER = {"pond": 3.89, "pond_pm": 3.57, "beacon": 2.03, "recnmp": 1.11}
 
 
+def engine_cross_check(model, storage: str, dedup: str, impl: str) -> None:
+    """Run a shrunk version of the trace through a real engine with the
+    requested knobs (the simulation above is analytic; this is the live
+    datapath the knobs actually change)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pifs import engine_for_tables
+    from repro.distributed.sharding import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    n_rows = min(model.emb_num, 8192)            # CPU-sized shrink
+    engine, offsets = engine_for_tables(
+        [n_rows] * model.n_tables, dim=model.emb_dim, mesh=mesh,
+        hot_fraction=0.05, storage=storage, dedup=dedup)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    gen = TraceConfig(n_rows=n_rows, n_tables=model.n_tables,
+                      pooling=model.pooling, batch=64,
+                      distribution="zipfian", seed=0)
+    ids = TraceGenerator(gen).next_batch()
+    idx = jnp.asarray(ids + offsets[None, :, None], jnp.int32)
+    with mesh:
+        pifs = np.asarray(engine.lookup(state, idx, mode="pifs", impl=impl))
+        pond = np.asarray(engine.lookup(state, idx, mode="pond", impl=impl))
+    np.testing.assert_allclose(pifs, pond, rtol=1e-5, atol=1e-5)
+    d = engine.dedup_factor(state, idx)
+    print(f"\nlive engine ({storage}, dedup={dedup}, impl={impl}, "
+          f"{n_rows} rows/table shrink): pifs == pond ok; "
+          f"zipfian duplicate factor {d['factor']:.2f}x "
+          f"({d['entries']} entries -> {d['unique_rows']} unique rows)")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--storage", default="fp32", choices=["fp32", "int8"],
+                    help="engine cold-tier format for the live cross-check")
+    ap.add_argument("--dedup", default="off", choices=["off", "auto", "on"],
+                    help="gather-once duplicate coalescing knob")
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"],
+                    help="engine SLS datapath")
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="analytic simulation only (no live engine)")
+    args = ap.parse_args()
+
     hw = HardwareParams()
     model = get_config("rmc4")
     cfg = TraceConfig(n_rows=model.emb_num, n_tables=model.n_tables,
@@ -43,6 +95,9 @@ def main() -> None:
               f"{100 * r.frac_local_access:6.1f} "
               f"{100 * r.buffer_hit_rate:5.1f} {ratio:8.2f} "
               f"{paper if paper else '':>7}")
+
+    if not args.skip_engine:
+        engine_cross_check(model, args.storage, args.dedup, args.impl)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,20 @@
-"""Quickstart: the PIFS embedding engine in 60 lines.
+"""Quickstart: the PIFS embedding engine in ~80 lines.
 
 Builds a sharded multi-table embedding, looks up in all three modes
 (pifs / pond / beacon), observes traffic, and runs one plan+migrate cycle —
-the paper's core loop.
+the paper's core loop.  The post-seed engine knobs are exposed so the
+quickstart exercises the same datapaths production serving uses:
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+  --storage {fp32,int8}   cold-tier format (int8 = per-page scales, dequant
+                          fused into the SLS accumulate)
+  --dedup {off,auto,on}   gather-once duplicate coalescing (bit-exact)
+  --impl {jnp,pallas}     SLS datapath (pallas = the bag-tiled kernel; runs
+                          in interpret mode off-TPU)
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--storage int8]
+      [--dedup on] [--impl pallas]
 """
+import argparse
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -17,38 +26,65 @@ from repro.core.pifs import engine_for_tables
 from repro.data.traces import TraceConfig, TraceGenerator
 from repro.distributed.sharding import make_mesh
 
-mesh = make_mesh((2, 4), ("data", "model"))  # 2-way DP x 4 "memory devices"
 
-# two embedding tables (think: ad ids, user ids) stacked into one engine
-engine, offsets = engine_for_tables(
-    vocab_sizes=[100_000, 50_000], dim=32, mesh=mesh, hot_fraction=0.05)
-state = engine.init_state(jax.random.PRNGKey(0))
-print(f"pages={engine.cfg.num_pages} page_size={engine.cfg.page_size} rows "
-      f"cold_shards={engine.cfg.n_shards} hot_rows={engine.cfg.hot_rows}")
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--storage", default="fp32", choices=["fp32", "int8"])
+    ap.add_argument("--dedup", default="off", choices=["off", "auto", "on"])
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
+    args = ap.parse_args()
 
-# a zipfian access trace (the DLRM reality: a few rows are very hot)
-gen = TraceGenerator(TraceConfig(n_rows=100_000, n_tables=2, pooling=4,
-                                 batch=64, distribution="zipfian"))
-batch = gen.next_batch()                     # (64, 2, 4) table-local ids
-idx = jnp.asarray(batch + offsets[None, :, None], jnp.int32)
+    mesh = make_mesh((2, 4), ("data", "model"))  # 2-way DP x 4 "memory devices"
 
-with mesh:
-    # pifs: reduce near the data — only pooled (B, T, D) partials cross ICI
-    pooled = engine.lookup(state, idx, mode="pifs")
-    # pond: the communicate-then-reduce baseline (raw rows cross)
-    pooled_pond = engine.lookup(state, idx, mode="pond")
-    np.testing.assert_allclose(np.asarray(pooled), np.asarray(pooled_pond),
-                               rtol=1e-5, atol=1e-5)
-    print("pifs == pond numerically:", pooled.shape)
+    # two embedding tables (think: ad ids, user ids) stacked into one engine
+    engine, offsets = engine_for_tables(
+        vocab_sizes=[100_000, 50_000], dim=32, mesh=mesh, hot_fraction=0.05,
+        storage=args.storage, dedup=args.dedup)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    print(f"pages={engine.cfg.num_pages} page_size={engine.cfg.page_size} "
+          f"rows cold_shards={engine.cfg.n_shards} "
+          f"hot_rows={engine.cfg.hot_rows} storage={args.storage} "
+          f"dedup={args.dedup} impl={args.impl}")
 
-    # observe traffic -> plan -> migrate (placement-invariant!)
-    for _ in range(4):
-        state = engine.observe(state, idx)
-    before = np.asarray(engine.lookup(state, idx))
-    state, stats = engine.plan_and_migrate(state)
-    after = np.asarray(engine.lookup(state, idx))
-    np.testing.assert_allclose(before, after, rtol=1e-5, atol=1e-5)
-    print(f"migrated {stats['moved_pages']} pages "
-          f"(hot={stats['hot_pages']}, "
-          f"load std {stats['load_std_before']:.1f} -> "
-          f"{stats['load_std_after']:.1f}); lookups unchanged")
+    # a zipfian access trace (the DLRM reality: a few rows are very hot);
+    # table-local ids are folded into each table's own vocab before the
+    # global offsets are applied
+    gen = TraceGenerator(TraceConfig(n_rows=100_000, n_tables=2, pooling=4,
+                                     batch=64, distribution="zipfian"))
+    batch = gen.next_batch()                     # (64, 2, 4) table-local ids
+    batch = batch % np.array([100_000, 50_000])[None, :, None]
+    idx = jnp.asarray(batch + offsets[None, :, None], jnp.int32)
+
+    with mesh:
+        # pifs: reduce near the data — only pooled (B, T, D) partials cross
+        # the ICI; the knobs ride the same compiled-lookup plan
+        pooled = engine.lookup(state, idx, mode="pifs", impl=args.impl)
+        # pond: the communicate-then-reduce baseline (raw rows cross)
+        pooled_pond = engine.lookup(state, idx, mode="pond", impl=args.impl)
+        np.testing.assert_allclose(np.asarray(pooled),
+                                   np.asarray(pooled_pond),
+                                   rtol=1e-5, atol=1e-5)
+        print("pifs == pond numerically:", pooled.shape)
+
+        # observe traffic -> plan -> migrate (placement-invariant!)
+        for _ in range(4):
+            state = engine.observe(state, idx)
+        before = np.asarray(engine.lookup(state, idx, impl=args.impl))
+        state, stats = engine.plan_and_migrate(state)
+        after = np.asarray(engine.lookup(state, idx, impl=args.impl))
+        # migration moves rows between the cold and hot partial sums, so
+        # the pooled association can shift an ulp — values, not placement,
+        # are invariant (the engine tests pin the exact-domain contracts)
+        np.testing.assert_allclose(before, after, rtol=1e-5, atol=1e-5)
+        print(f"migrated {stats['moved_pages']} pages "
+              f"(hot={stats['hot_pages']}, "
+              f"load std {stats['load_std_before']:.1f} -> "
+              f"{stats['load_std_after']:.1f}); lookups unchanged")
+        if args.dedup != "off":
+            d = engine.dedup_factor(state, idx)
+            print(f"duplicate-access factor: {d['factor']:.2f}x "
+                  f"({d['entries']} entries -> {d['unique_rows']} unique)")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,7 @@ class PIFSEmbeddingEngine:
     """Sharded multi-table embedding with paged placement + hot tier."""
 
     DEDUP_MODES = ("off", "auto", "on")
+    FRONT_END_MODES = ("split", "fused")
 
     def __init__(self, paging: PagingConfig, mesh: Mesh,
                  axes: Optional[MeshAxes] = None,
@@ -117,6 +118,7 @@ class PIFSEmbeddingEngine:
         # explicit so plan_stats() can report hits/traces).
         self._plans: dict = {}
         self._dedup_plans: dict = {}   # key -> resolution record (plan_stats)
+        self._fe_plans: dict = {}      # key -> front-end resolution record
         self._migrate_plan = None
         self._trace_count = 0
         self._plan_calls = 0
@@ -305,9 +307,182 @@ class PIFSEmbeddingEngine:
             args = args + (weights,)
         return plan(*args)
 
+    # --------------------------------------------------- fused front end
+    def lookup_interact(self, state: EngineState, indices: jax.Array,
+                        dense_feature: jax.Array,
+                        weights: Optional[jax.Array] = None,
+                        mode: str = "pifs", combine: str = "psum",
+                        dp_shard: bool = True, impl: str = "jnp",
+                        block_l: int = 8, block_b: int = 32,
+                        dedup: Optional[str] = None,
+                        front_end: str = "split") -> jax.Array:
+        """Pooled lookup fused with the DLRM dot-interaction.
+
+        indices: (B, G, L) as in :meth:`lookup`; dense_feature: (B, D) the
+        bottom-MLP output, stacked as feature row 0.  Returns the (B, P)
+        packed lower triangle of the (B, F, D) = (B, G+1, D) features'
+        pairwise dots — the input of the DLRM top MLP (after concatenating
+        the dense feature back on).
+
+        front_end: 'split' materializes the pooled features and runs the
+        interaction as a separate op (the seed pipeline); 'fused' keeps
+        them in VMEM from the SLS accumulate through the interaction
+        matmul (impl='pallas'; see ``kernels/sls.py``).  Fusion is scoped
+        to the replicated/dp-sharded serving config: with tp-sharded cold
+        partials (tp > 1) the interaction needs a cross-shard psum between
+        SLS and interaction, and ``mode='pond'`` ships raw rows, so those
+        configs resolve the knob back to 'split' **exactly** — same
+        numerics, recorded in ``plan_stats()['front_end']`` (the dedup
+        resolution pattern).  Bit-for-bit equal across
+        {front_end, impl, storage, dedup} in fp32.
+
+        ``combine`` only names the pooled-lookup collective for plan-cache
+        symmetry with :meth:`lookup`: the interaction consumes every bag of
+        a sample, so the split path always materializes the full psum
+        (psum_scatter's bag-sharded layout cannot feed the interaction).
+        """
+        if mode not in ("pifs", "pond", "beacon"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if combine not in ("psum", "psum_scatter"):
+            raise ValueError(f"unknown combine {combine!r}")
+        if impl not in ("jnp", "pallas"):
+            raise ValueError(f"unknown impl {impl!r}")
+        if front_end not in self.FRONT_END_MODES:
+            raise ValueError(f"unknown front_end {front_end!r}; "
+                             f"expected one of {self.FRONT_END_MODES}")
+        if dedup is None:
+            dedup = self.default_dedup
+        if dedup not in self.DEDUP_MODES:
+            raise ValueError(f"unknown dedup {dedup!r}; "
+                             f"expected one of {self.DEDUP_MODES}")
+        if dense_feature.ndim != 2 or dense_feature.shape[-1] != self.cfg.dim:
+            raise ValueError(
+                f"dense_feature must be (B, {self.cfg.dim}); got "
+                f"{dense_feature.shape}")
+        key = ("interact", mode, combine, dp_shard, impl,
+               (int(block_l), int(block_b)) if impl == "pallas" else None,
+               self.cfg.storage, dedup, front_end,
+               tuple(indices.shape), jnp.dtype(indices.dtype).name,
+               None if weights is None
+               else (tuple(weights.shape), jnp.dtype(weights.dtype).name))
+        plan = self._plans.get(key)
+        if plan is None:
+            fused = self._resolve_front_end(key, front_end, mode)
+            dedup_on = self._resolve_dedup(
+                key, dedup, state, indices, dp_shard=dp_shard,
+                fused_blocks=int(block_b) if fused else None)
+            plan = self._build_interact_plan(
+                mode=mode, dp_shard=dp_shard, impl=impl, block_l=block_l,
+                block_b=block_b, has_weights=weights is not None,
+                dedup=dedup_on, fused=fused)
+            self._plans[key] = plan
+        self._plan_calls += 1
+        args = (state.cold, state.hot, state.page_scales,
+                state.page_to_shard, state.page_to_slot, indices,
+                dense_feature)
+        if weights is not None:
+            args = args + (weights,)
+        return plan(*args)
+
+    def _resolve_front_end(self, key, front_end: str, mode: str) -> bool:
+        """Freeze the front-end fusion decision for one interact plan.
+
+        Host-side, once per signature at plan build (the dedup pattern).
+        'fused' resolves fused only for the replicated/dp-sharded config:
+        ``tp == 1`` and a reduce-near-data mode (pifs/beacon).  tp-sharded
+        cold partials are *masked partials* — the interaction is nonlinear
+        in the pooled features, so a cross-shard psum must land between
+        SLS and interaction and the fusion window closes; pond ships raw
+        rows (no pooling near the data at all).  Those configs resolve
+        back to 'split' exactly — identical numerics, just without the
+        VMEM-residency bytes win — and the resolution is recorded for
+        ``plan_stats()['front_end']``."""
+        tp = self.axes.tp_size(self.mesh)
+        if front_end == "split":
+            resolved, reason = False, "requested"
+        elif mode == "pond":
+            resolved, reason = False, (
+                "pond ships raw rows across shards; no per-shard pooled "
+                "partial exists to fuse the interaction onto")
+        elif tp > 1:
+            resolved, reason = False, (
+                f"tp-sharded masked partials (tp={tp}) need a cross-shard "
+                "psum between SLS and interaction")
+        else:
+            resolved, reason = True, "replicated/dp-sharded config"
+        self._fe_plans[key] = {
+            "requested": front_end,
+            "resolved": "fused" if resolved else "split",
+            "reason": reason,
+        }
+        return resolved
+
+    def _build_interact_plan(self, *, mode: str, dp_shard: bool, impl: str,
+                             block_l: int, block_b: int, has_weights: bool,
+                             dedup: bool, fused: bool):
+        """Build the shard_map + jit closure for one interact signature."""
+        axes, mesh = self.axes, self.mesh
+        dp, tp = axes.dp, axes.tp
+        if not dp_shard:
+            dp = ()
+        idx_spec = P(dp or None, None, None)
+        x_spec = P(dp or None, None)
+        out_spec = P(dp or None, None)
+        w_specs = (idx_spec,) if has_weights else ()
+
+        def block(cold, hot, scales, p2s, p2slot, idx, x, *w):
+            wloc = w[0] if w else None
+            if fused:
+                return self._interact_block_fused(
+                    cold, hot, scales, p2s, p2slot, idx, x, wloc,
+                    impl=impl, block_l=block_l, block_b=block_b,
+                    dedup=dedup)
+            pooled = self._lookup_block(cold, hot, scales, p2s, p2slot,
+                                        idx, wloc, mode=mode,
+                                        combine="psum", impl=impl,
+                                        block_l=block_l, dedup=dedup)
+            feats = jnp.concatenate([x[:, None, :], pooled], axis=1)
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.dot_interaction(feats, impl=impl,
+                                              block_b=block_b)
+
+        f = shard_map(
+            block, mesh=mesh,
+            in_specs=(P(tp), P(), P(), P(), P(), idx_spec, x_spec) + w_specs,
+            out_specs=out_spec, check_vma=False)
+
+        def traced(*args):
+            self._trace_count += 1
+            return f(*args)
+
+        return jax.jit(traced)
+
+    def _interact_block_fused(self, cold, hot, scales, p2s, p2slot, idx, x,
+                              weights, *, impl: str, block_l: int,
+                              block_b: int, dedup: bool):
+        """Per-device fused front-end block (tp == 1 by resolution): locate
+        each entry's tier + local row, then run the single-kernel SLS ->
+        interaction datapath.  Mirrors :meth:`_lookup_block`'s address math
+        exactly, so the masks/rows/scales the fused kernel sees are the
+        ones the split accumulates would have seen."""
+        c, axes = self.cfg, self.axes
+        ps = c.page_size
+        page = idx // ps
+        offset = idx % ps
+        shard = p2s[page]
+        local_row = p2slot[page] * ps + offset                 # (b, G, L)
+        owned = shard == jax.lax.axis_index(axes.tp)
+        is_hot = shard == HOT_SHARD
+        scale = scales[page] if self.quantized else None
+        return sls_ops.fused_front_end_dense(
+            cold, hot, x, local_row, owned, is_hot, weights=weights,
+            scales=scale, impl=impl, block_l=block_l, block_b=block_b,
+            dedup=dedup, out_dtype=jnp.float32)
+
     # ------------------------------------------------- compiled-lookup plans
     def _resolve_dedup(self, key, dedup: str, state: EngineState,
-                       indices: jax.Array, dp_shard: bool = True) -> bool:
+                       indices: jax.Array, dp_shard: bool = True,
+                       fused_blocks: Optional[int] = None) -> bool:
         """Freeze the gather-once coalescing decision for one plan.
 
         Host-side, runs once per signature at plan build.  'on' only falls
@@ -330,7 +505,22 @@ class PIFSEmbeddingEngine:
         B, G, L = indices.shape
         dp = self.axes.dp_size(self.mesh) if dp_shard else 1
         n_entries = max(B // max(dp, 1), 1) * G * L    # per-device entries
-        staging_bytes = n_entries * self.cfg.dim * 4   # fp32 staging rows
+        if fused_blocks is None:
+            # split-path dedup: the hot and cold accumulates are separate
+            # kernel invocations, so one (n_entries, D) fp32 row staging is
+            # live at a time
+            staging_bytes = n_entries * self.cfg.dim * 4
+        else:
+            # fused-front-end dedup: one kernel holds BOTH tiers' row
+            # stagings plus the two (BB*F, D) per-tier feature accumulators
+            # in VMEM simultaneously (kernels/sls.py
+            # fused_front_end_dedup_pallas scratch list)
+            b_local = max(B // max(dp, 1), 1)
+            BB = max(1, min(fused_blocks, b_local))
+            while b_local % BB:
+                BB //= 2
+            staging_bytes = (2 * n_entries * self.cfg.dim * 4
+                             + 2 * BB * (G + 1) * self.cfg.dim * 4)
         capacity_ok = staging_bytes <= self.dedup_staging_bytes
         counts = state.counts
         if isinstance(counts, jax.core.Tracer):
@@ -418,7 +608,10 @@ class PIFSEmbeddingEngine:
             gm = mask[rows].reshape(-1)
             gi = gi[gm]
             entries += gi.size
-            page = gi // ps
+            # mirror the device datapath's clamp semantics: XLA gathers
+            # clip out-of-range ids, so the host replay must too (the probe
+            # must never crash on traffic the engine itself would serve)
+            page = np.clip(gi // ps, 0, c.num_pages - 1)
             shard = p2s[page]
             local = p2slot[page] * ps + gi % ps
             for s in range(c.n_shards):
@@ -482,19 +675,32 @@ class PIFSEmbeddingEngine:
         if self._dedup_plans:
             out["dedup"] = {self._dedup_key_label(k): dict(v)
                             for k, v in self._dedup_plans.items()}
+        if self._fe_plans:
+            out["front_end"] = {self._dedup_key_label(k): dict(v)
+                                for k, v in self._fe_plans.items()}
         return out
 
     @staticmethod
     def _dedup_key_label(key) -> str:
-        """Compact human-readable label for a lookup-plan cache key —
-        includes every key field that can distinguish two plans, so no two
-        records ever collide in the ``plan_stats()['dedup']`` dict."""
-        (_, mode, combine, dp_shard, impl, block_l, storage, dedup,
-         shape, _idx_dtype, weights_info) = key
-        return (f"{mode}/{combine}/{impl}"
-                + (f"/bl{block_l}" if block_l is not None else "")
+        """Compact human-readable label for a lookup- or interact-plan
+        cache key — includes every key field that can distinguish two
+        plans, so no two records ever collide in the
+        ``plan_stats()['dedup']`` / ``['front_end']`` dicts."""
+        if key[0] == "interact":
+            (_, mode, combine, dp_shard, impl, blocks, storage, dedup,
+             front_end, shape, _idx_dtype, weights_info) = key
+            blk = ("" if blocks is None
+                   else f"/bl{blocks[0]}bb{blocks[1]}")
+            head, fe = "interact:", f"/fe={front_end}"
+        else:
+            (_, mode, combine, dp_shard, impl, block_l, storage, dedup,
+             shape, _idx_dtype, weights_info) = key
+            blk = f"/bl{block_l}" if block_l is not None else ""
+            head, fe = "", ""
+        return (f"{head}{mode}/{combine}/{impl}" + blk
                 + ("" if dp_shard else "/nodp")
-                + f"/{storage}/dedup={dedup}/idx={'x'.join(map(str, shape))}"
+                + f"/{storage}/dedup={dedup}" + fe
+                + f"/idx={'x'.join(map(str, shape))}"
                 + ("+w" if weights_info is not None else ""))
 
     def reset_plan_stats(self, clear_plans: bool = False) -> None:
@@ -505,6 +711,7 @@ class PIFSEmbeddingEngine:
         if clear_plans:
             self._plans.clear()
             self._dedup_plans.clear()
+            self._fe_plans.clear()
         self._trace_count = 0
         self._plan_calls = 0
 

@@ -213,6 +213,81 @@ def masked_partial_sls_dense(local_storage: jax.Array, local_rows: jax.Array,
     return _fixed_order_accumulate(rows, f, out_dtype)
 
 
+def fused_front_end_dense(cold_storage: jax.Array, hot_storage: jax.Array,
+                          x: jax.Array, local_rows: jax.Array,
+                          owned: jax.Array, is_hot: jax.Array,
+                          weights: Optional[jax.Array] = None,
+                          scales: Optional[jax.Array] = None,
+                          impl: str = "jnp", block_l: int = 8,
+                          block_b: int = 32,
+                          interpret: Optional[bool] = None,
+                          dedup: bool = False,
+                          out_dtype=jnp.float32) -> jax.Array:
+    """Fused DLRM front end: two-tier masked SLS -> dot-interaction.
+
+    local_rows/owned/is_hot (B, G, L): per-entry local row + tier masks
+    (cold vs replicated hot; entries in neither tier contribute zero);
+    x (B, D): the bottom-MLP output, stacked as feature row 0.  Returns
+    the (B, P) packed lower triangle of the (B, F, D) = (B, G+1, D)
+    features' pairwise dots.
+
+    impl='jnp' composes the split pipeline from this module's pieces
+    (per-tier :func:`masked_partial_sls_dense` -> add -> concat ->
+    interaction oracle) — it IS the split computation, so the knob is a
+    pure kernel-level optimization.  impl='pallas' runs the single fused
+    kernel whose phase-2 accumulates write pooled rows into persistent
+    VMEM ``(BB, F, D)`` batch-tiles and whose phase 3 is the interaction
+    matmul + triangle pack — the pooled features never round-trip HBM.
+    Both impls (and ``dedup`` on/off, which only changes the gather) are
+    bit-for-bit equal in fp32.
+    """
+    B, G, L = local_rows.shape
+    D = cold_storage.shape[-1]
+    F = G + 1
+    P = F * (F - 1) // 2
+    if B == 0 or L == 0 or G == 0:
+        return jnp.zeros((B, P), out_dtype)
+    if hot_storage.shape[0] == 0:
+        # tiering disabled (hot_fraction=0, the BEACON placement): keep one
+        # always-resident line so masked-out hot DMAs stay in range
+        hot_storage = jnp.zeros((1, D), hot_storage.dtype)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        plans = None
+        if dedup:
+            nb = B * G
+            cp = dedup_plan(local_rows.reshape(nb, L),
+                            owned.reshape(nb, L),
+                            None if scales is None
+                            else scales.reshape(nb, L))
+            hp = dedup_plan(local_rows.reshape(nb, L),
+                            is_hot.reshape(nb, L))
+            plans = (cp._replace(slots=cp.slots.reshape(B, G, L)),
+                     hp._replace(slots=hp.slots.reshape(B, G, L)))
+        return kernel_ops.fused_front_end(
+            cold_storage, hot_storage, x, local_rows, owned, is_hot,
+            weights=weights, scales=scales, dedup_plans=plans,
+            out_dtype=out_dtype, interpret=interpret, block_l=block_l,
+            block_b=block_b)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r}")
+    nb = B * G
+    flat = local_rows.reshape(nb, L)
+    w = None if weights is None else weights.reshape(nb, L)
+    cold_p = masked_partial_sls_dense(
+        cold_storage, flat, owned.reshape(nb, L), w, impl="jnp",
+        scales=None if scales is None else scales.reshape(nb, L),
+        out_dtype=out_dtype, dedup=dedup)
+    hot_p = masked_partial_sls_dense(
+        hot_storage, flat, is_hot.reshape(nb, L), w, impl="jnp",
+        out_dtype=out_dtype, dedup=dedup)
+    pooled = (cold_p + hot_p).reshape(B, G, D)
+    feats = jnp.concatenate([x[:, None, :].astype(out_dtype), pooled],
+                            axis=1)
+    from repro.kernels import ref as kernel_ref
+    return kernel_ref.dot_interaction_ref(feats)
+
+
 def masked_gather_rows(local_storage: jax.Array, local_rows: jax.Array,
                        owned: jax.Array) -> jax.Array:
     """Pond-mode per-shard step: ship the *raw rows* (zeros where not owned).

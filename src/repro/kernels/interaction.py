@@ -36,10 +36,17 @@ def _interaction_kernel(tri_ref, x_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("self_interaction", "block_b",
                                              "interpret"))
 def dot_interaction_pallas(feats: jax.Array, self_interaction: bool = False,
-                           block_b: int = 128, interpret: bool = True
-                           ) -> jax.Array:
+                           block_b: int = 128,
+                           interpret: bool | None = None) -> jax.Array:
     """feats: (B, F, D) -> (B, P) packed triangle. B must divide block_b
-    (caller pads); P = F*(F-1)/2 (+F with self_interaction)."""
+    (caller pads); P = F*(F-1)/2 (+F with self_interaction).
+
+    ``interpret=None`` (the default) detects the backend once at trace
+    time: compiled on TPU, interpreter elsewhere.  The old default of
+    ``True`` made real-TPU callers that never threaded the knob silently
+    run the interpreter; pass an explicit bool to override detection."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, F, D = feats.shape
     block_b = min(block_b, B)
     if B % block_b:

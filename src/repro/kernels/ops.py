@@ -21,7 +21,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.interaction import dot_interaction_pallas
-from repro.kernels.sls import (masked_sls_dedup_pallas, masked_sls_pallas,
+from repro.kernels.sls import (fused_front_end_dedup_pallas,
+                               fused_front_end_pallas,
+                               masked_sls_dedup_pallas, masked_sls_pallas,
                                sls_pallas)
 
 LANES = 128
@@ -116,12 +118,61 @@ def masked_sls_dedup(table: jax.Array, plan, owned: jax.Array,
 def dot_interaction(feats: jax.Array, self_interaction: bool = False,
                     impl: str = "pallas", block_b: int = 128,
                     interpret: Optional[bool] = None) -> jax.Array:
+    """DLRM pairwise-dot interaction.  ``interpret=None`` defers to the
+    kernel's backend detection (interpret only off-TPU); passing a bool
+    threads an explicit override through to ``dot_interaction_pallas``."""
     if impl == "jnp":
         return ref.dot_interaction_ref(feats, self_interaction)
-    if interpret is None:
-        interpret = _default_interpret()
     B = feats.shape[0]
     while B % block_b:
         block_b //= 2
     return dot_interaction_pallas(feats, self_interaction,
                                   block_b=max(block_b, 1), interpret=interpret)
+
+
+def fused_front_end(cold: jax.Array, hot: jax.Array, x: jax.Array,
+                    rows: jax.Array, owned: jax.Array, is_hot: jax.Array,
+                    weights: Optional[jax.Array] = None,
+                    scales: Optional[jax.Array] = None,
+                    dedup_plans=None, out_dtype=jnp.float32,
+                    impl: str = "pallas", interpret: Optional[bool] = None,
+                    block_l: int = 8, block_b: int = 32,
+                    pad_lanes: Optional[bool] = None) -> jax.Array:
+    """Fused DLRM front end: masked two-tier SLS -> dot-interaction in one
+    kernel — the pooled (B, F, D) features tensor never exists in HBM.
+
+    ``rows``/``owned``/``is_hot`` (B, G, L) are per-entry local rows + tier
+    masks, ``x`` (B, D) the bottom-MLP output.  ``dedup_plans`` is an
+    optional ``(cold_plan, hot_plan)`` pair of ``core/sls.DedupPlan``s
+    (slots reshaped (B, G, L) by the caller) selecting the gather-once
+    kernel variant.  Lane padding touches only the D axis of the three
+    dense operands; the (B, P) output is D-free, so no slice-back is
+    needed (zero lanes add exact +0 terms to every pairwise dot).
+    Bit-for-bit equal to the split pipeline in fp32 (oracle:
+    ``ref.fused_front_end_ref``).
+    """
+    if impl == "jnp":
+        if dedup_plans is not None:
+            # the coalesced gather never changes the accumulate (PR 4);
+            # the jnp oracle is the per-entry formulation
+            dedup_plans = None
+        return ref.fused_front_end_ref(cold, hot, x, rows, owned, is_hot,
+                                       weights, scales, out_dtype)
+    if interpret is None:
+        interpret = _default_interpret()
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    cold = pad_to_lanes(cold, pad_lanes)
+    hot = pad_to_lanes(hot, pad_lanes)
+    x = pad_to_lanes(x, pad_lanes)
+    if dedup_plans is not None:
+        cp, hp = dedup_plans
+        return fused_front_end_dedup_pallas(
+            cold, hot, x, cp.unique_rows, cp.slots, cp.n_slots,
+            hp.unique_rows, hp.slots, hp.n_slots, owned, is_hot,
+            weights, cp.unique_scales, out_dtype=out_dtype,
+            interpret=interpret, block_l=block_l, block_b=block_b)
+    return fused_front_end_pallas(
+        cold, hot, x, rows, owned, is_hot, weights, scales,
+        out_dtype=out_dtype, interpret=interpret, block_l=block_l,
+        block_b=block_b)

@@ -47,6 +47,69 @@ def masked_sls_ref(table: jax.Array, indices: jax.Array, owned: jax.Array,
     return (rows * w[..., None]).sum(axis=1)
 
 
+def _fixed_order_masked_sls(table: jax.Array, indices: jax.Array,
+                            owned: jax.Array,
+                            weights: Optional[jax.Array] = None,
+                            scales: Optional[jax.Array] = None,
+                            out_dtype=jnp.float32) -> jax.Array:
+    """Masked partial SLS with the kernels' **fixed l-order accumulation**
+    (the ``lax.scan`` structure of :func:`masked_sls_quant_ref`, optional
+    scales) — the shared tail of every oracle that must match a Pallas
+    kernel bit-for-bit in fp32."""
+    B, L = indices.shape
+    D = table.shape[-1]
+    safe = jnp.where(owned, indices, 0)
+    rows = jnp.take(table, safe, axis=0).astype(out_dtype)      # (B, L, D)
+    if scales is not None:
+        rows = rows * scales[..., None].astype(out_dtype)
+    f = owned.astype(out_dtype)
+    if weights is not None:
+        f = f * weights.astype(out_dtype)
+
+    def step(carry, xs):
+        rows_l, f_l = xs
+        return carry + f_l[:, None] * rows_l, None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
+                          (rows.transpose(1, 0, 2), f.T))
+    return out
+
+
+def fused_front_end_ref(cold: jax.Array, hot: jax.Array, x: jax.Array,
+                        rows: jax.Array, owned: jax.Array,
+                        is_hot: jax.Array,
+                        weights: Optional[jax.Array] = None,
+                        scales: Optional[jax.Array] = None,
+                        out_dtype=jnp.float32) -> jax.Array:
+    """Fused DLRM front-end oracle: SLS -> features -> dot-interaction.
+
+    cold/hot: (Vc, D) / (Vh, D) tier tables (cold may be int8 codes with
+    per-entry ``scales``); rows/owned/is_hot: (B, G, L) local rows + tier
+    masks; x: (B, D) bottom-MLP output (feature row 0).  Returns the
+    (B, P) packed lower triangle, P = F*(F-1)/2 with F = G + 1.
+
+    This is **exactly the split pipeline** with each tier's partial SLS in
+    the kernels' fixed l-order: ``pooled = cold_partial + hot_partial``
+    (that add order is the split path's ``psum(cold) + hot``), features
+    concatenated, then :func:`dot_interaction_ref` — which the fused Pallas
+    kernel must match **bit-for-bit in fp32** (phase 2 reproduces each
+    tier's accumulate with identical operands; phase 3 is the same
+    dot_general + static-gather pack as the interaction kernel)."""
+    B, G, L = rows.shape
+    D = cold.shape[-1]
+    flat = rows.reshape(B * G, L)
+    w = None if weights is None else weights.reshape(B * G, L)
+    cold_p = _fixed_order_masked_sls(
+        cold, flat, owned.reshape(B * G, L), w,
+        None if scales is None else scales.reshape(B * G, L), out_dtype)
+    hot_p = _fixed_order_masked_sls(
+        hot, flat, is_hot.reshape(B * G, L), w, None, out_dtype)
+    pooled = (cold_p + hot_p).reshape(B, G, D)
+    feats = jnp.concatenate([x[:, None, :].astype(out_dtype), pooled],
+                            axis=1)                             # (B, F, D)
+    return dot_interaction_ref(feats)
+
+
 def masked_sls_quant_ref(table_q: jax.Array, indices: jax.Array,
                          owned: jax.Array, scales: jax.Array,
                          weights: Optional[jax.Array] = None,
@@ -63,27 +126,13 @@ def masked_sls_quant_ref(table_q: jax.Array, indices: jax.Array,
     kernel must match this **bit-for-bit in fp32** (the dequant multiply
     happens per gathered row, *after* the bytes move, before the weighted
     add; accumulation order is the kernel's fixed l order).  The running
-    accumulate is a ``lax.scan`` over l: XLA contracts its mul+add to the
-    same FMA it emits for the kernel's accumulate loop — a python-unrolled
-    add chain compiles differently and drifts by an ulp on weighted
-    entries.
+    accumulate (:func:`_fixed_order_masked_sls`) is a ``lax.scan`` over l:
+    XLA contracts its mul+add to the same FMA it emits for the kernel's
+    accumulate loop — a python-unrolled add chain compiles differently and
+    drifts by an ulp on weighted entries.
     """
-    B, L = indices.shape
-    D = table_q.shape[-1]
-    safe = jnp.where(owned, indices, 0)
-    rows = jnp.take(table_q, safe, axis=0).astype(out_dtype)    # (B, L, D)
-    rows = rows * scales[..., None].astype(out_dtype)
-    f = owned.astype(out_dtype)
-    if weights is not None:
-        f = f * weights.astype(out_dtype)
-
-    def step(carry, xs):
-        rows_l, f_l = xs
-        return carry + f_l[:, None] * rows_l, None
-
-    out, _ = jax.lax.scan(step, jnp.zeros((B, D), out_dtype),
-                          (rows.transpose(1, 0, 2), f.T))
-    return out
+    return _fixed_order_masked_sls(table_q, indices, owned, weights, scales,
+                                   out_dtype)
 
 
 def masked_sls_dedup_ref(table: jax.Array, unique_rows: jax.Array,

@@ -41,6 +41,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -305,6 +306,344 @@ def masked_sls_dedup_pallas(table: jax.Array, unique_rows: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, D), out_dtype),
         interpret=interpret,
     )(*prefetch, table)
+
+
+def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
+                                 has_weights: bool, has_scales: bool,
+                                 dedup: bool):
+    """Fused DLRM front-end kernel body: SLS -> dot-interaction, one kernel.
+
+    Three phases over grid ``(B // BB, G, ceil(L / block_l))``:
+
+      * phase 1 (``dedup`` only, very first grid step): gather-once DMA of
+        each unique cold/hot row into persistent ``(U, D)`` VMEM row
+        staging, fused per-row dequant — identical structure to
+        ``_make_sls_dedup_kernel``'s prologue, once per *tier*.
+      * phase 2 (every step): the bag-tiled fixed-l-order masked accumulate,
+        writing pooled rows into persistent VMEM *feature staging* laid out
+        as ``(BB, F, D)`` batch-tiles (flattened ``(BB*F, D)`` scratch; one
+        accumulator pair per tier so the final ``cold + hot`` add matches
+        the split datapath's ``psum(cold_part) + hot_out`` bit-for-bit).
+        Feature row 0 of each sample is the bottom-MLP output (``x``),
+        loaded once per batch-tile.
+      * phase 3 (last ``(g, t)`` step of each batch-tile): the
+        dot-interaction matmul + static triangle pack of
+        ``_interaction_kernel`` on the resident ``(BB, F, D)`` features.
+
+    The pooled-features tensor never exists in HBM: the only HBM traffic is
+    the row gather (phase 1/2) plus the ``(BB, D)`` x block in and the
+    ``(BB, P)`` packed triangle out.
+    """
+    F = G + 1
+
+    def kernel(*refs):
+        it = iter(refs)
+        if dedup:
+            cslots_ref = next(it)   # (B, G, L) cold staging slot per entry
+            hslots_ref = next(it)   # (B, G, L) hot staging slot per entry
+        else:
+            rows_ref = next(it)     # (B, G, L) local row per entry
+        owned_ref = next(it)        # (B, G, L) cold-tier ownership mask
+        hot_ref = next(it)          # (B, G, L) hot-tier membership mask
+        w_ref = next(it) if has_weights else None
+        if dedup:
+            cuniq_ref = next(it)    # (U,) unique cold rows, sentinel-padded
+            cn_ref = next(it)       # (1,) live cold staging slots
+            cs_ref = next(it) if has_scales else None   # (U,) dequant scales
+            huniq_ref = next(it)    # (U,) unique hot rows, sentinel-padded
+            hn_ref = next(it)       # (1,) live hot staging slots
+        elif has_scales:
+            s_ref = next(it)        # (B, G, L) per-entry dequant scales
+        tri_ref = next(it)          # (P,) static triangle-pack permutation
+        cold_ref = next(it)         # (Vc, D) ANY/HBM — manually DMA'd
+        hot_table_ref = next(it)    # (Vh, D) ANY/HBM — manually DMA'd
+        x_ref = next(it)            # (BB, D) bottom-MLP block (auto-piped)
+        out_ref = next(it)          # (BB, P) packed-triangle block
+        if dedup:
+            crows = next(it)        # (U, D) VMEM cold row staging (dequant'd)
+            hrows = next(it)        # (U, D) VMEM hot row staging
+        stage_c = next(it)          # (BB*F, D) VMEM cold feature staging
+        stage_h = next(it)          # (BB*F, D) VMEM hot feature staging
+        cland = next(it)            # (2, D) cold DMA double buffer
+        hland = next(it)            # (2, D) hot DMA double buffer
+        csem = next(it)             # (2,) cold DMA semaphores
+        hsem = next(it)             # (2,) hot DMA semaphores
+
+        bt = pl.program_id(0)
+        g = pl.program_id(1)
+        t = pl.program_id(2)
+        n_tl = pl.num_programs(2)
+        l0 = t * block_l
+
+        if dedup:
+            @pl.when((bt == 0) & (g == 0) & (t == 0))
+            def _fill_row_staging():
+                # gather-once per tier: each unique row crosses the memory
+                # interface exactly once; phase 2 reads VMEM only.
+                for uniq_ref, n_ref, land, sem, staging, table, sref in (
+                        (cuniq_ref, cn_ref, cland, csem, crows, cold_ref,
+                         cs_ref),
+                        (huniq_ref, hn_ref, hland, hsem, hrows,
+                         hot_table_ref, None)):
+                    V = table.shape[0]
+                    n = jnp.maximum(n_ref[0], 1)
+
+                    def row_dma(u, slot, *, _t=table, _l=land, _s=sem,
+                                _u=uniq_ref, _V=V):
+                        r = jnp.minimum(_u[u], _V - 1)
+                        return pltpu.make_async_copy(_t.at[r], _l.at[slot],
+                                                     _s.at[slot])
+
+                    row_dma(0, 0).start()
+
+                    def body(u, carry, *, _land=land, _staging=staging,
+                             _sref=sref, _n=n, _dma=row_dma):
+                        slot = u % 2
+
+                        @pl.when(u + 1 < _n)
+                        def _prefetch_next():
+                            _dma(u + 1, (u + 1) % 2).start()
+
+                        _dma(u, slot).wait()
+                        row = _land[slot].astype(out_ref.dtype)
+                        if _sref is not None:
+                            row = row * _sref[u].astype(out_ref.dtype)
+                        _staging[pl.ds(u, 1)] = row[None, :]
+                        return carry
+
+                    jax.lax.fori_loop(0, n, body, 0)
+
+        @pl.when((g == 0) & (t == 0))
+        def _init_features():
+            # per batch-tile: zero both accumulators, land the bottom-MLP
+            # output in feature row 0 of the cold staging (the hot staging's
+            # row 0 stays zero, so the phase-3 add reproduces the split
+            # path's `concat([x, pooled])` exactly)
+            xv = x_ref[...].astype(out_ref.dtype)               # (BB, D)
+            D = xv.shape[-1]
+            init = jnp.zeros((BB, F, D), out_ref.dtype)
+            stage_c[...] = init.at[:, 0, :].set(xv).reshape(BB * F, D)
+            stage_h[...] = jnp.zeros_like(stage_h)
+
+        if not dedup:
+            def entry_dma(slot, k):
+                # one DMA per tier per entry; out-of-tier entries remap to
+                # the always-resident line 0 of that tier's table (their
+                # contribution is zeroed below) — same trick as
+                # ``_make_sls_kernel``'s ownership masking
+                i = k // block_l
+                l = jnp.minimum(l0 + k % block_l, L - 1)
+                b = bt * BB + i
+                r = rows_ref[b, g, l]
+                rc = jnp.where(owned_ref[b, g, l] != 0, r, 0)
+                rh = jnp.where(hot_ref[b, g, l] != 0, r, 0)
+                return (pltpu.make_async_copy(cold_ref.at[rc], cland.at[slot],
+                                              csem.at[slot]),
+                        pltpu.make_async_copy(hot_table_ref.at[rh],
+                                              hland.at[slot], hsem.at[slot]))
+
+            def start(slot, k):
+                c, h = entry_dma(slot, k)
+                c.start()
+                h.start()
+
+            start(0, 0)
+
+        n_entries = BB * block_l
+
+        def body(k, carry):
+            i = k // block_l
+            l = l0 + k % block_l
+            lc = jnp.minimum(l, L - 1)
+            b = bt * BB + i
+            if not dedup:
+                slot = k % 2
+
+                @pl.when(k + 1 < n_entries)
+                def _prefetch_next():
+                    start((k + 1) % 2, k + 1)
+
+                c, h = entry_dma(slot, k)
+                c.wait()
+                h.wait()
+            f = (l < L).astype(out_ref.dtype)
+            if has_weights:
+                f = f * w_ref[b, g, lc].astype(out_ref.dtype)
+            fc = f * (owned_ref[b, g, lc] != 0).astype(out_ref.dtype)
+            fh = f * (hot_ref[b, g, lc] != 0).astype(out_ref.dtype)
+            if dedup:
+                row_c = crows[cslots_ref[b, g, lc]][None, :]
+                row_h = hrows[hslots_ref[b, g, lc]][None, :]
+            else:
+                row_c = cland[slot][None, :].astype(out_ref.dtype)
+                if has_scales:
+                    row_c = row_c * s_ref[b, g, lc].astype(out_ref.dtype)
+                row_h = hland[slot][None, :].astype(out_ref.dtype)
+            sk = i * F + g + 1
+            stage_c[pl.ds(sk, 1)] = stage_c[pl.ds(sk, 1)] + fc * row_c
+            stage_h[pl.ds(sk, 1)] = stage_h[pl.ds(sk, 1)] + fh * row_h
+            return carry
+
+        jax.lax.fori_loop(0, n_entries, body, 0)
+
+        @pl.when((g == G - 1) & (t == n_tl - 1))
+        def _interact():
+            # phase 3: dot-interaction on the resident features — identical
+            # op structure to kernels/interaction.py's _interaction_kernel
+            D = stage_c.shape[-1]
+            feats = (stage_c[...] + stage_h[...]).reshape(BB, F, D)
+            z = jax.lax.dot_general(
+                feats, feats, (((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=out_ref.dtype)           # (BB, F, F)
+            out_ref[...] = jnp.take(z.reshape(BB, F * F), tri_ref[...],
+                                    axis=1)
+
+    return kernel
+
+
+def _fe_blocks(B: int, L: int, block_l: int, block_b: int, G: int):
+    """Resolve (BB, block_l, tri, P) for a fused front-end call: the batch
+    tile must divide B (largest power-of-two shrink of ``block_b`` that
+    does), the pooling tile is clamped to L, and the triangle pack is the
+    static lower-triangle permutation of F = G + 1 features."""
+    BB = max(1, min(block_b, B))
+    while B % BB:
+        BB //= 2
+    block_l = max(1, min(block_l, L))
+    F = G + 1
+    i, j = np.tril_indices(F, k=-1)
+    tri = jnp.asarray(i * F + j, jnp.int32)
+    return BB, block_l, tri, int(tri.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret",
+                                             "block_l", "block_b"))
+def fused_front_end_pallas(cold: jax.Array, hot: jax.Array, x: jax.Array,
+                           rows: jax.Array, owned: jax.Array,
+                           is_hot: jax.Array,
+                           weights: Optional[jax.Array] = None,
+                           scales: Optional[jax.Array] = None,
+                           out_dtype=jnp.float32,
+                           interpret: Optional[bool] = None,
+                           block_l: int = 8, block_b: int = 32) -> jax.Array:
+    """Fused SLS -> dot-interaction front end (oracle:
+    ``kernels/ref.py:fused_front_end_ref``).
+
+    rows/owned/is_hot (B, G, L): per-entry local row + tier masks (cold /
+    hot; entries in neither tier contribute zero).  x (B, D): the bottom-MLP
+    output, feature row 0.  Returns the (B, P) packed lower triangle of the
+    (B, F, D) features' pairwise dots, F = G + 1, without ever writing the
+    pooled features to HBM.  Bit-for-bit equal to the split pipeline
+    (masked SLS per tier -> add -> concat -> dot-interaction) in fp32.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, G, L = rows.shape
+    D = cold.shape[-1]
+    BB, block_l, tri, P = _fe_blocks(B, L, block_l, block_b, G)
+    if B == 0 or L == 0 or G == 0:
+        return jnp.zeros((B, P), out_dtype)
+
+    prefetch = [rows.astype(jnp.int32), owned.astype(jnp.int32),
+                is_hot.astype(jnp.int32)]
+    if weights is not None:
+        prefetch.append(weights)
+    if scales is not None:
+        prefetch.append(scales.astype(jnp.float32))
+    prefetch.append(tri)
+
+    F = G + 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(B // BB, G, pl.cdiv(L, block_l)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # cold stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY),    # hot stays in HBM
+                  pl.BlockSpec((BB, D), lambda bt, g, t, *p: (bt, 0))],
+        out_specs=pl.BlockSpec((BB, P), lambda bt, g, t, *p: (bt, 0)),
+        scratch_shapes=[pltpu.VMEM((BB * F, D), out_dtype),  # cold features
+                        pltpu.VMEM((BB * F, D), out_dtype),  # hot features
+                        pltpu.VMEM((2, D), cold.dtype),
+                        pltpu.VMEM((2, D), hot.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    kernel = _make_fused_front_end_kernel(
+        L, block_l, G, BB, has_weights=weights is not None,
+        has_scales=scales is not None, dedup=False)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P), out_dtype),
+        interpret=interpret,
+    )(*prefetch, cold, hot, x)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret",
+                                             "block_l", "block_b"))
+def fused_front_end_dedup_pallas(cold: jax.Array, hot: jax.Array,
+                                 x: jax.Array,
+                                 c_unique: jax.Array, c_slots: jax.Array,
+                                 c_n: jax.Array, h_unique: jax.Array,
+                                 h_slots: jax.Array, h_n: jax.Array,
+                                 owned: jax.Array, is_hot: jax.Array,
+                                 weights: Optional[jax.Array] = None,
+                                 c_scales: Optional[jax.Array] = None,
+                                 out_dtype=jnp.float32,
+                                 interpret: Optional[bool] = None,
+                                 block_l: int = 8, block_b: int = 32
+                                 ) -> jax.Array:
+    """Gather-once dedup'd fused front end: phase 1 stages each unique
+    cold/hot row once (fused dequant), phases 2-3 as
+    :func:`fused_front_end_pallas` with VMEM staging reads instead of
+    per-entry DMA.  ``c_*`` / ``h_*`` come from one ``core/sls.dedup_plan``
+    per tier (slots reshaped to (B, G, L)); bit-for-bit equal to the
+    non-dedup kernel.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, G, L = c_slots.shape
+    D = cold.shape[-1]
+    BB, block_l, tri, P = _fe_blocks(B, L, block_l, block_b, G)
+    if B == 0 or L == 0 or G == 0:
+        return jnp.zeros((B, P), out_dtype)
+    U = c_unique.shape[0]
+
+    prefetch = [c_slots.astype(jnp.int32), h_slots.astype(jnp.int32),
+                owned.astype(jnp.int32), is_hot.astype(jnp.int32)]
+    if weights is not None:
+        prefetch.append(weights)
+    prefetch.append(c_unique.astype(jnp.int32))
+    prefetch.append(c_n.astype(jnp.int32).reshape(1))
+    if c_scales is not None:
+        prefetch.append(c_scales.astype(jnp.float32))
+    prefetch.append(h_unique.astype(jnp.int32))
+    prefetch.append(h_n.astype(jnp.int32).reshape(1))
+    prefetch.append(tri)
+
+    F = G + 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(B // BB, G, pl.cdiv(L, block_l)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # cold stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY),    # hot stays in HBM
+                  pl.BlockSpec((BB, D), lambda bt, g, t, *p: (bt, 0))],
+        out_specs=pl.BlockSpec((BB, P), lambda bt, g, t, *p: (bt, 0)),
+        scratch_shapes=[pltpu.VMEM((U, D), out_dtype),     # cold row staging
+                        pltpu.VMEM((U, D), out_dtype),     # hot row staging
+                        pltpu.VMEM((BB * F, D), out_dtype),
+                        pltpu.VMEM((BB * F, D), out_dtype),
+                        pltpu.VMEM((2, D), cold.dtype),
+                        pltpu.VMEM((2, D), hot.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    kernel = _make_fused_front_end_kernel(
+        L, block_l, G, BB, has_weights=weights is not None,
+        has_scales=c_scales is not None, dedup=True)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P), out_dtype),
+        interpret=interpret,
+    )(*prefetch, cold, hot, x)
 
 
 @functools.partial(jax.jit,

@@ -36,13 +36,14 @@ def build_serving(cfg, mesh, *, mode: str = "pifs", impl: str = "jnp",
                   poolings: Tuple[int, ...] = (),
                   slo_ms: float = 50.0, hot_fraction: float = 0.05,
                   storage: str = "fp32", dedup: str = "off",
+                  front_end: str = "split",
                   runtime_cfg: RuntimeConfig = RuntimeConfig(),
                   ) -> Tuple[ServingRuntime, "object"]:
     """Compose (runtime, binding) for a config; buckets warmed by the
     caller via ``runtime.warmup``."""
     binding = bind_model(cfg, mesh, mode=mode, impl=impl, block_l=block_l,
                          hot_fraction=hot_fraction, storage=storage,
-                         dedup=dedup)
+                         dedup=dedup, front_end=front_end)
     levels = tuple(sorted(set(poolings))) or (
         (cfg.pooling,) if hasattr(cfg, "pooling") else (1,))
     if batcher == "dynamic":
@@ -76,7 +77,7 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
         hot_fraction=hot_fraction, storage=load.storage, dedup=load.dedup,
-        runtime_cfg=runtime_cfg)
+        front_end=load.front_end, runtime_cfg=runtime_cfg)
     with mesh:
         runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
         # the open-loop stream is only materialized when something uses it
@@ -129,6 +130,12 @@ def main() -> None:
                     help="gather-once duplicate coalescing in the SLS "
                          "datapath (bit-exact; 'auto' decides per shape "
                          "bucket from the access histogram)")
+    ap.add_argument("--front-end", default="split",
+                    choices=["split", "fused"],
+                    help="DLRM lookup->interaction pipeline: 'fused' keeps "
+                         "pooled features in VMEM from the SLS accumulate "
+                         "through the dot-interaction matmul (bit-exact; "
+                         "tp-sharded meshes resolve back to split)")
     ap.add_argument("--batcher", default="dynamic",
                     choices=["dynamic", "fixed"])
     ap.add_argument("--batch-sizes", type=int, nargs="+",
@@ -153,7 +160,7 @@ def main() -> None:
         arrival=ArrivalConfig(rate_qps=args.qps, process=args.arrival,
                               seed=args.seed),
         slo_ms=args.slo_ms, seed=args.seed, storage=args.storage,
-        dedup=args.dedup)
+        dedup=args.dedup, front_end=args.front_end)
     out = serve_offered_load(
         cfg, mesh, load, mode=args.mode, impl=args.impl,
         block_l=args.block_l, batcher=args.batcher,

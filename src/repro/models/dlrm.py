@@ -63,7 +63,8 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
             batch: Dict[str, jax.Array], cfg: DLRMConfig,
             mode: str = "pifs", interaction_impl: str = "jnp",
             impl: str = "jnp", block_l: int = 8,
-            dedup: Optional[str] = None) -> jax.Array:
+            dedup: Optional[str] = None,
+            front_end: str = "split") -> jax.Array:
     """Returns CTR logits (B,).
 
     ``impl``/``block_l`` select the engine's SLS datapath (jnp vs the
@@ -72,22 +73,39 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
     either way.  An optional ``batch["weights"]`` (B, T, L)
     carries per-lookup SLS weights — the serving batcher uses weight-0
     entries to pad variable-pooling bags to a shape bucket exactly.
+
+    ``front_end='fused'`` routes lookup + feature stacking + dot
+    interaction through the engine's fused front end
+    (``engine.lookup_interact``): the pooled (B, F, d) features stay in
+    VMEM from the SLS accumulate through the interaction matmul on the
+    replicated/dp-sharded serving config; tp-sharded and pond configs
+    resolve back to the split pipeline exactly (bit-identical logits,
+    recorded in ``engine.plan_stats()['front_end']``).
     """
+    if front_end not in PIFSEmbeddingEngine.FRONT_END_MODES:
+        raise ValueError(f"unknown front_end {front_end!r}")
     dense, idx = batch["dense"], batch["indices"]
     B = dense.shape[0]
     x_bot = mlp_apply(params["bottom"], dense, len(cfg.bottom_mlp),
                       final_act=True)
     if "bot_proj" in params:
         x_bot = x_bot @ params["bot_proj"]                  # (B, d)
-    pooled = engine.lookup(state, idx, weights=batch.get("weights"),
-                           mode=mode, impl=impl, block_l=block_l,
-                           dedup=dedup)                     # (B, T, d)
     # dense towers use the full (dp x tp) mesh, not just dp (see
     # recsys._constrain_full_batch)
     from repro.models.recsys import _constrain_full_batch
-    pooled = _constrain_full_batch(pooled, engine)
-    feats = jnp.concatenate([x_bot[:, None, :], pooled], axis=1)  # (B, F, d)
-    inter = kernel_ops.dot_interaction(feats, impl=interaction_impl)
+    if front_end == "fused":
+        inter = engine.lookup_interact(
+            state, idx, x_bot, weights=batch.get("weights"), mode=mode,
+            impl=impl, block_l=block_l, dedup=dedup, front_end="fused")
+        inter = _constrain_full_batch(inter, engine)        # (B, P)
+    else:
+        pooled = engine.lookup(state, idx, weights=batch.get("weights"),
+                               mode=mode, impl=impl, block_l=block_l,
+                               dedup=dedup)                 # (B, T, d)
+        pooled = _constrain_full_batch(pooled, engine)
+        feats = jnp.concatenate([x_bot[:, None, :], pooled],
+                                axis=1)                     # (B, F, d)
+        inter = kernel_ops.dot_interaction(feats, impl=interaction_impl)
     z = jnp.concatenate([x_bot, inter], axis=-1)
     logit = mlp_apply(params["top"], z, len(cfg.top_mlp))
     return logit[:, 0]
@@ -133,11 +151,12 @@ def make_train_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
 def make_serve_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
                     mode: str = "pifs", interaction_impl: str = "jnp",
                     impl: str = "jnp", block_l: int = 8,
-                    dedup: Optional[str] = None):
+                    dedup: Optional[str] = None,
+                    front_end: str = "split"):
     def step(params, emb_state, batch):
         logits = forward(params, engine, emb_state, batch, cfg, mode=mode,
                          interaction_impl=interaction_impl, impl=impl,
-                         block_l=block_l, dedup=dedup)
+                         block_l=block_l, dedup=dedup, front_end=front_end)
         return jax.nn.sigmoid(logits)
     return step
 

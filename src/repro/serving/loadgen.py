@@ -51,6 +51,10 @@ class LoadConfig:
     #                                      table offsets depend on its page size
     dedup: str = "off"                   # gather-once duplicate coalescing
     #                                      (off/auto/on; bit-exact either way)
+    front_end: str = "split"             # DLRM lookup->interaction pipeline:
+    #                                      'fused' keeps pooled features in
+    #                                      VMEM through the interaction (tp-
+    #                                      sharded configs resolve to split)
 
 
 # ---------------------------------------------------------------------------
@@ -61,14 +65,18 @@ class LoadConfig:
 def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                block_l: int = 8, hot_fraction: float = 0.05,
                seed: int = 0, storage: str = "fp32",
-               dedup: str = "off") -> ServeBinding:
+               dedup: str = "off", front_end: str = "split") -> ServeBinding:
     """Build engine + params + jitted serve step for a DLRM or Rec config.
 
     ``storage`` selects the engine's cold-tier format (fp32 passthrough or
     int8 with per-page scales and fused dequant in the SLS datapath);
     ``dedup`` the gather-once duplicate-coalescing knob (off/auto/on —
     bit-exact either way; 'auto' resolves per shape bucket from the
-    observe-phase histogram).
+    observe-phase histogram); ``front_end`` the DLRM lookup->interaction
+    pipeline ('fused' keeps pooled features in VMEM through the dot
+    interaction on replicated/dp-sharded meshes; bit-exact either way —
+    Rec configs have no DLRM dot-interaction stage, so the knob is
+    DLRM-only and ignored for them).
     """
     k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
     if isinstance(cfg, DLRMConfig):
@@ -78,7 +86,7 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
         params = prm.initialize(dlrm_mod.model_specs(cfg, mesh), k_params)
         step = jax.jit(dlrm_mod.make_serve_step(
             cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l,
-            dedup=dedup))
+            dedup=dedup, front_end=front_end))
         idx_key = "indices"
     elif isinstance(cfg, RecConfig):
         engine, offs = rec_mod.build_engine(cfg, mesh,

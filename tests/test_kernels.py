@@ -262,6 +262,153 @@ def test_sls_lane_padding_is_transparent(D):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ---------------------------------------------------------------------------
+# Fused front end: SLS -> dot-interaction in one kernel
+# ---------------------------------------------------------------------------
+
+
+def _fe_inputs(B, G, L, V, D, weighted, quantized, hot_rows=32, seed=0):
+    """Random two-tier inputs: every entry is cold-owned, hot, or neither
+    (the sharded-engine reality); hot local rows stay in range."""
+    ks = jax.random.split(jax.random.PRNGKey(seed + B + G + L + D), 7)
+    hot = jax.random.normal(ks[1], (hot_rows, D))
+    rows = jax.random.randint(ks[2], (B, G, L), 0, min(V, hot_rows)
+                              ).astype(jnp.int32)
+    if quantized:
+        cold = jax.random.randint(ks[0], (V, D), -127, 128).astype(jnp.int8)
+        # page-aligned scale addressing: duplicates of a row share its
+        # page's scale (the dedup contract), so derive scales per *row*
+        row_scales = jax.random.uniform(ks[5], (V,), minval=1e-4,
+                                        maxval=2e-2)
+        scales = row_scales[rows]
+    else:
+        cold = jax.random.normal(ks[0], (V, D))
+        scales = None
+    tier = jax.random.randint(ks[3], (B, G, L), 0, 3)   # 0=cold 1=hot 2=none
+    owned, is_hot = tier == 0, tier == 1
+    x = jax.random.normal(ks[4], (B, D))
+    w = jax.random.uniform(ks[6], (B, G, L)) if weighted else None
+    return cold, hot, x, rows, owned, is_hot, w, scales
+
+
+@pytest.mark.parametrize("B,G,L,D,block_l,block_b", [
+    (8, 2, 8, 16, 8, 4),       # exact tiling
+    (8, 4, 7, 32, 3, 8),       # F=5 not a multiple of the sublane tile;
+    #                            tail pooling tile
+    (4, 2, 5, 16, 4, 32),      # B < block_b (batch tile clamps to B)
+    (6, 3, 4, 24, 8, 4),       # odd D, B not a multiple of block_b
+    (1, 2, 1, 16, 8, 128),     # degenerate batch
+])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_fused_front_end_kernel_bit_exact(B, G, L, D, block_l, block_b,
+                                          weighted):
+    """The fused SLS -> interaction kernel must match the split-pipeline
+    oracle (fixed-l-order per-tier SLS -> add -> concat -> interaction)
+    bit-for-bit in fp32."""
+    cold, hot, x, rows, owned, is_hot, w, _ = _fe_inputs(
+        B, G, L, 128, D, weighted, quantized=False)
+    out = ops.fused_front_end(cold, hot, x, rows, owned, is_hot, w,
+                              interpret=True, block_l=block_l,
+                              block_b=block_b)
+    want = ref.fused_front_end_ref(cold, hot, x, rows, owned, is_hot, w)
+    F = G + 1
+    assert out.shape == (B, F * (F - 1) // 2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("dedup", [False, True])
+def test_fused_front_end_quant_kernel_bit_exact(weighted, dedup):
+    """int8 cold tier: the fused kernel's per-row dequant (per-entry or
+    gather-once) matches the quantized split oracle bit-for-bit."""
+    from repro.core import sls as core_sls
+    B, G, L, V, D = 6, 2, 5, 96, 16
+    cold, hot, x, rows, owned, is_hot, w, scales = _fe_inputs(
+        B, G, L, V, D, weighted, quantized=True)
+    plans = None
+    if dedup:
+        nb = B * G
+        cp = core_sls.dedup_plan(rows.reshape(nb, L), owned.reshape(nb, L),
+                                 scales.reshape(nb, L))
+        hp = core_sls.dedup_plan(rows.reshape(nb, L), is_hot.reshape(nb, L))
+        plans = (cp._replace(slots=cp.slots.reshape(B, G, L)),
+                 hp._replace(slots=hp.slots.reshape(B, G, L)))
+    out = ops.fused_front_end(cold, hot, x, rows, owned, is_hot, w,
+                              scales=scales, dedup_plans=plans,
+                              interpret=True, block_l=3, block_b=2)
+    want = ref.fused_front_end_ref(cold, hot, x, rows, owned, is_hot, w,
+                                   scales=scales)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("extreme", ["all_cold", "all_hot", "none"])
+def test_fused_front_end_mask_extremes(extreme):
+    """Degenerate tier masks: everything cold, everything hot, or nothing
+    owned (the pooled features are then all-zero and the interaction is
+    x-only) — all bit-exact against the oracle."""
+    B, G, L, V, D = 4, 3, 6, 64, 16
+    cold, hot, x, rows, _, _, _, _ = _fe_inputs(B, G, L, V, D, False, False)
+    full = jnp.ones((B, G, L), bool)
+    empty = jnp.zeros((B, G, L), bool)
+    owned, is_hot = {"all_cold": (full, empty), "all_hot": (empty, full),
+                     "none": (empty, empty)}[extreme]
+    out = ops.fused_front_end(cold, hot, x, rows, owned, is_hot,
+                              interpret=True, block_l=4, block_b=4)
+    want = ref.fused_front_end_ref(cold, hot, x, rows, owned, is_hot)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_fused_front_end_dedup_matches_nondedup_bitwise():
+    """The gather-once fused variant only changes where rows come from —
+    identical output bits to the per-entry-DMA fused kernel."""
+    from repro.core import sls as core_sls
+    B, G, L, V, D = 8, 2, 6, 64, 16
+    cold, hot, x, rows, owned, is_hot, w, _ = _fe_inputs(
+        B, G, L, V, D, True, False)
+    a = core_sls.fused_front_end_dense(cold, hot, x, rows, owned, is_hot, w,
+                                       impl="pallas", interpret=True,
+                                       dedup=False)
+    b = core_sls.fused_front_end_dense(cold, hot, x, rows, owned, is_hot, w,
+                                       impl="pallas", interpret=True,
+                                       dedup=True)
+    c = core_sls.fused_front_end_dense(cold, hot, x, rows, owned, is_hot, w,
+                                       impl="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_fused_front_end_lane_padding_is_transparent():
+    """D=24 is not lane-aligned: padding the three dense operands must not
+    change any output bit (zero lanes add exact +0 to every pairwise dot)."""
+    B, G, L, V, D = 4, 2, 5, 64, 24
+    cold, hot, x, rows, owned, is_hot, w, _ = _fe_inputs(
+        B, G, L, V, D, True, False)
+    a = ops.fused_front_end(cold, hot, x, rows, owned, is_hot, w,
+                            interpret=True, pad_lanes=True)
+    b = ops.fused_front_end(cold, hot, x, rows, owned, is_hot, w,
+                            interpret=True, pad_lanes=False)
+    assert a.shape == b.shape
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_interaction_interpret_default_detects_backend():
+    """dot_interaction_pallas defaulted interpret=True forever — on a CPU
+    container the None default must resolve to the interpreter (and on TPU
+    it would resolve to compiled; here we can only pin the off-TPU leg and
+    that an explicit override still threads through)."""
+    feats = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 16))
+    want = ref.dot_interaction_ref(feats)
+    out_default = dot_interaction_pallas(feats)              # None -> detect
+    out_forced = dot_interaction_pallas(feats, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_default),
+                                  np.asarray(out_forced))
+    np.testing.assert_allclose(np.asarray(out_default), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    out_ops = ops.dot_interaction(feats, impl="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_ops),
+                                  np.asarray(out_default))
+
+
 @pytest.mark.parametrize("B,F,D", [
     (8, 4, 16), (16, 8, 32), (128, 27, 16), (32, 9, 64),
 ])

@@ -230,3 +230,39 @@ def test_iter_cells_counts():
     skips = [c for c in cells if c[2]]
     # long_500k skipped for the 5 pure full-attention LM archs
     assert len(skips) == 5
+
+
+def test_dlrm_front_end_fused_matches_split_bitwise(rng):
+    """The whole DLRM serve step (bottom MLP -> lookup -> interaction ->
+    top MLP) produces bit-identical scores with front_end fused vs split
+    on the replicated/dp-sharded mesh, for both SLS impls."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    from repro.distributed.sharding import make_mesh
+    mesh_dp = make_mesh((8, 1), ("data", "model"))
+    cfg = reduced(get_config("rmc1"))
+    engine, offs = dlrm_mod.build_engine(cfg, mesh_dp)
+    params = prm.initialize(dlrm_mod.model_specs(cfg, mesh_dp),
+                            jax.random.PRNGKey(0))
+    state = engine.init_state(jax.random.PRNGKey(1))
+    B = 16
+    batch = {
+        "dense": jnp.asarray(rng.normal(size=(B, cfg.n_dense)), jnp.float32),
+        "indices": (jnp.asarray(rng.integers(
+            0, cfg.emb_num, (B, cfg.n_tables, cfg.pooling)), jnp.int32)
+            + jnp.asarray(offs, jnp.int32)[None, :, None]),
+    }
+    with mesh_dp:
+        outs = {}
+        for impl in ("jnp", "pallas"):
+            for fe in ("split", "fused"):
+                step = jax.jit(dlrm_mod.make_serve_step(
+                    cfg, engine, mesh_dp, impl=impl, interaction_impl=impl,
+                    front_end=fe))
+                outs[(impl, fe)] = np.asarray(step(params, state, batch))
+    base = outs[("jnp", "split")]
+    for k, v in outs.items():
+        np.testing.assert_array_equal(base, v, err_msg=str(k))
+    recs = [r for r in engine.plan_stats()["front_end"].values()
+            if r["requested"] == "fused"]
+    assert recs and all(r["resolved"] == "fused" for r in recs)

@@ -474,3 +474,157 @@ def test_psum_scatter_combine(engine, mesh):
         got = engine.lookup(state, idx, mode="pifs", combine="psum_scatter")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused front end (lookup_interact): resolution, plan cache, stability
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def mesh_dp():
+    """Replicated/dp-sharded mesh — the config where fusion resolves fused."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    from repro.distributed.sharding import make_mesh
+    return make_mesh((8, 1), ("data", "model"))
+
+
+@pytest.fixture()
+def engine_dp(mesh_dp):
+    eng, offs = engine_for_tables([500, 300], dim=16, mesh=mesh_dp,
+                                  hot_fraction=0.06)
+    return eng
+
+
+def _fe_args(engine, seed=1):
+    state = engine.init_state(jax.random.PRNGKey(0))
+    idx = jax.random.randint(jax.random.PRNGKey(seed), (8, 2, 4), 0, 500
+                             ).astype(jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, engine.cfg.dim))
+    return state, idx, x
+
+
+def test_front_end_matches_lookup_plus_interaction(engine_dp, mesh_dp):
+    """lookup_interact == lookup -> concat -> dot_interaction oracle, and
+    fused == split bitwise, on the dp-only mesh."""
+    from repro.kernels import ref as kernel_ref
+    state, idx, x = _fe_args(engine_dp)
+    with mesh_dp:
+        pooled = engine_dp.lookup(state, idx)
+        want = np.asarray(kernel_ref.dot_interaction_ref(
+            jnp.concatenate([x[:, None, :], pooled], axis=1)))
+        for impl in ("jnp", "pallas"):
+            s = np.asarray(engine_dp.lookup_interact(
+                state, idx, x, impl=impl, front_end="split"))
+            f = np.asarray(engine_dp.lookup_interact(
+                state, idx, x, impl=impl, front_end="fused"))
+            np.testing.assert_array_equal(s, f)
+            np.testing.assert_array_equal(f, want)
+
+
+def test_front_end_grows_plan_cache_key(engine_dp, mesh_dp):
+    """front_end is part of the interact-plan signature: each knob value
+    keys its own plan (one trace each), repeated calls hit the cache, and
+    plan_stats() grows a 'front_end' entry with the resolution records —
+    interact plans never collide with lookup plans."""
+    state, idx, x = _fe_args(engine_dp)
+    engine_dp.reset_plan_stats(clear_plans=True)
+    with mesh_dp:
+        engine_dp.lookup_interact(state, idx, x, front_end="split")
+        engine_dp.lookup_interact(state, idx, x, front_end="split")
+        engine_dp.lookup_interact(state, idx, x, front_end="fused")
+        engine_dp.lookup_interact(state, idx, x, front_end="fused")
+    stats = engine_dp.plan_stats()
+    assert (stats["plans"], stats["traces"], stats["calls"]) == (2, 2, 4)
+    recs = stats["front_end"]
+    assert len(recs) == 2
+    by_req = {r["requested"]: r for r in recs.values()}
+    assert by_req["split"]["resolved"] == "split"
+    assert by_req["fused"]["resolved"] == "fused"
+    assert all(label.startswith("interact:") for label in recs)
+    with mesh_dp:
+        engine_dp.lookup(state, idx)          # lookup plan is a distinct key
+    assert engine_dp.plan_stats()["plans"] == 3
+
+
+def test_front_end_tp_resolves_split_and_is_recorded(engine, mesh):
+    """tp-sharded masked partials need a cross-shard psum between SLS and
+    interaction: 'fused' resolves back to 'split' exactly, with the reason
+    recorded (the dedup resolution pattern)."""
+    state, idx, x = _fe_args(engine)
+    with mesh:
+        s = np.asarray(engine.lookup_interact(state, idx, x,
+                                              front_end="split"))
+        f = np.asarray(engine.lookup_interact(state, idx, x,
+                                              front_end="fused"))
+    np.testing.assert_array_equal(s, f)
+    recs = [r for r in engine.plan_stats()["front_end"].values()
+            if r["requested"] == "fused"]
+    assert recs and recs[0]["resolved"] == "split"
+    assert "psum" in recs[0]["reason"]
+
+
+def test_front_end_pond_resolves_split(engine_dp, mesh_dp):
+    """pond ships raw rows — no per-shard pooled partial to fuse onto, so
+    the knob resolves to split even on the dp-only mesh (and the split
+    interact plan reproduces pond's lookup numerics)."""
+    state, idx, x = _fe_args(engine_dp)
+    with mesh_dp:
+        s = np.asarray(engine_dp.lookup_interact(state, idx, x, mode="pond",
+                                                 front_end="split"))
+        f = np.asarray(engine_dp.lookup_interact(state, idx, x, mode="pond",
+                                                 front_end="fused"))
+    np.testing.assert_array_equal(s, f)
+    recs = [r for r in engine_dp.plan_stats()["front_end"].values()
+            if r["requested"] == "fused"]
+    assert recs and recs[0]["resolved"] == "split"
+
+
+def test_front_end_no_retrace_across_observe_replan(engine_dp, mesh_dp):
+    """Zero steady-state retraces across observe/replan cycles with
+    front_end='fused' (the serving contract), and lookups stay bit-stable
+    against their own split shadow after every migration."""
+    state, idx, x = _fe_args(engine_dp)
+    with mesh_dp:
+        engine_dp.lookup_interact(state, idx, x, impl="pallas",
+                                  front_end="fused")
+        engine_dp.lookup_interact(state, idx, x, impl="pallas",
+                                  front_end="split")
+        warm = engine_dp.plan_stats()["traces"]
+        for _ in range(3):
+            state = engine_dp.observe(state, idx)
+            state, _ = engine_dp.plan_and_migrate(state)
+            f = np.asarray(engine_dp.lookup_interact(
+                state, idx, x, impl="pallas", front_end="fused"))
+            s = np.asarray(engine_dp.lookup_interact(
+                state, idx, x, impl="pallas", front_end="split"))
+            np.testing.assert_array_equal(f, s)
+    assert engine_dp.plan_stats()["traces"] == warm
+
+
+def test_front_end_validation(engine_dp, mesh_dp):
+    state, idx, x = _fe_args(engine_dp)
+    with pytest.raises(ValueError, match="front_end"):
+        engine_dp.lookup_interact(state, idx, x, front_end="bogus")
+    with pytest.raises(ValueError, match="dense_feature"):
+        engine_dp.lookup_interact(state, idx, x[:, :4], front_end="fused")
+
+
+def test_front_end_quantized_bit_exact(mesh_dp):
+    """int8 cold tier through the fused front end: fused == split bitwise
+    (the per-row dequant rides the same VMEM staging)."""
+    eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh_dp,
+                               hot_fraction=0.06, storage="int8")
+    state, idx, x = _fe_args(eng)
+    w = jax.random.uniform(jax.random.PRNGKey(5), (8, 2, 4))
+    with mesh_dp:
+        for impl in ("jnp", "pallas"):
+            for dedup in ("off", "on"):
+                s = np.asarray(eng.lookup_interact(
+                    state, idx, x, weights=w, impl=impl, dedup=dedup,
+                    front_end="split"))
+                f = np.asarray(eng.lookup_interact(
+                    state, idx, x, weights=w, impl=impl, dedup=dedup,
+                    front_end="fused"))
+                np.testing.assert_array_equal(s, f)

@@ -326,3 +326,97 @@ ENTRY %main (x: f32[4,8]) -> f32[4,8] {
     s = summarize(hlo)
     # dot = 2*4*8*8 = 512 flops x 7 iterations
     assert s.flops == 512 * 7
+
+
+# ---------------------------------------------------------------------------
+# Fused front end (SLS -> dot-interaction) — bit-exactness properties
+# ---------------------------------------------------------------------------
+
+_FE_ENGINES: dict = {}        # storage -> (engine, state); dp-only mesh
+_FE_SHAPE = (8, 2, 4)         # fixed across examples => plans cache
+
+
+def _fe_engine(storage):
+    """Engine on the replicated/dp-sharded (8, 1) mesh — the config where
+    ``front_end='fused'`` resolves fused."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    if storage not in _FE_ENGINES:
+        from repro.core.pifs import engine_for_tables
+        from repro.distributed.sharding import make_mesh
+        mesh = make_mesh((8, 1), ("data", "model"))
+        eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                   hot_fraction=0.06, storage=storage)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        _FE_ENGINES[storage] = (eng, state, mesh)
+    return _FE_ENGINES[storage]
+
+
+@given(data=st.data(),
+       storage=st.sampled_from(["fp32", "int8"]),
+       impl=st.sampled_from(["jnp", "pallas"]),
+       combine=st.sampled_from(["psum", "psum_scatter"]),
+       dedup=st.sampled_from(["off", "on"]),
+       weighted=st.booleans())
+@settings(deadline=None, max_examples=20,
+          suppress_health_check=list(HealthCheck))
+def test_front_end_fused_equals_split_bit_exact(data, storage, impl, combine,
+                                                dedup, weighted):
+    """front_end='fused' must equal 'split' **bit-for-bit** across every
+    (impl, storage, dedup, weighted, combine) datapath, and both must
+    equal the oracle composition (engine.lookup -> concat -> interaction
+    ref): the fused kernel changes where the pooled features *live*
+    (VMEM), never what is accumulated or in which order."""
+    eng, state, mesh = _fe_engine(storage)
+    B, G, L = _FE_SHAPE
+    seed = data.draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 500, _FE_SHAPE).astype(np.int32))
+    x = jnp.asarray(rng.normal(size=(B, eng.cfg.dim)).astype(np.float32))
+    w = (jnp.asarray(rng.random(_FE_SHAPE).astype(np.float32))
+         if weighted else None)
+    with mesh:
+        split = eng.lookup_interact(state, idx, x, weights=w, impl=impl,
+                                    combine=combine, dedup=dedup,
+                                    front_end="split")
+        fused = eng.lookup_interact(state, idx, x, weights=w, impl=impl,
+                                    combine=combine, dedup=dedup,
+                                    front_end="fused")
+        pooled = eng.lookup(state, idx, weights=w, impl="jnp", dedup="off")
+        feats = jnp.concatenate([x[:, None, :], pooled], axis=1)
+        want = ref.dot_interaction_ref(feats)
+    np.testing.assert_array_equal(np.asarray(split), np.asarray(fused))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+    recs = [r for r in eng.plan_stats()["front_end"].values()
+            if r["requested"] == "fused"]
+    assert recs and all(r["resolved"] == "fused" for r in recs)
+
+
+@given(seed=st.integers(0, 2 ** 16), impl=st.sampled_from(["jnp", "pallas"]))
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=list(HealthCheck))
+def test_front_end_tp_shard_resolves_to_split_exact(mesh, seed, impl):
+    """On a tp-sharded mesh the cold partials need a cross-shard psum
+    between SLS and interaction: 'fused' must resolve back to 'split'
+    **exactly** — identical bits, resolution recorded in plan_stats()."""
+    from repro.core.pifs import engine_for_tables
+    key = ("tp", None)
+    if key not in _FE_ENGINES:
+        eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                                   hot_fraction=0.06)
+        _FE_ENGINES[key] = (eng, eng.init_state(jax.random.PRNGKey(0)), mesh)
+    eng, state, _ = _FE_ENGINES[key]
+    B, G, L = _FE_SHAPE
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 500, _FE_SHAPE).astype(np.int32))
+    x = jnp.asarray(rng.normal(size=(B, eng.cfg.dim)).astype(np.float32))
+    with mesh:
+        split = eng.lookup_interact(state, idx, x, impl=impl,
+                                    front_end="split")
+        fused = eng.lookup_interact(state, idx, x, impl=impl,
+                                    front_end="fused")
+    np.testing.assert_array_equal(np.asarray(split), np.asarray(fused))
+    recs = [r for r in eng.plan_stats()["front_end"].values()
+            if r["requested"] == "fused"]
+    assert recs and all(r["resolved"] == "split" for r in recs)
+    assert all("psum" in r["reason"] for r in recs)

@@ -353,3 +353,49 @@ def test_serving_auto_dedup_resolves_from_primed_histogram(mesh):
     assert any(r["resolved"] for r in recs.values())
     assert all(r["expected_factor"] is not None for r in recs.values())
     assert stats["traces"] == 0           # the rebuilds were pre-steady
+
+
+def test_end_to_end_serving_front_end_fused_matches_split():
+    """Identical request stream served with front_end fused vs split on the
+    replicated/dp-sharded mesh (where fusion actually resolves fused):
+    lookups are bit-exact, so the serving accounting must be identical,
+    the fused run must keep the zero-steady-retrace contract, and
+    plan_stats() must confirm every interact plan resolved fused."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    from repro.configs import get_config, reduced
+    from repro.distributed.sharding import make_mesh
+    from repro.launch.serve import serve_offered_load
+    cfg = reduced(get_config("rmc1"))
+    mesh_dp = make_mesh((8, 1), ("data", "model"))
+
+    outs = {}
+    for fe in ("split", "fused"):
+        load = LoadConfig(
+            n_requests=32, arrival=ArrivalConfig(rate_qps=400.0, seed=4),
+            slo_ms=200.0, seed=4, front_end=fe)
+        outs[fe] = serve_offered_load(
+            cfg, mesh_dp, load, impl="pallas", batch_sizes=(8, 16),
+            runtime_cfg=RuntimeConfig(observe_every=2, replan_every=4))
+    assert outs["fused"]["served"] == outs["split"]["served"] == 32
+    assert outs["fused"]["steady_traces"] == 0
+
+
+def test_bind_model_front_end_resolution(mesh):
+    """bind_model threads front_end through to the DLRM serve step; on the
+    tp-sharded session mesh the engine records the split fallback."""
+    from repro.configs import get_config, reduced
+    from repro.serving import bind_model
+    cfg = reduced(get_config("rmc1"))
+    binding = bind_model(cfg, mesh, front_end="fused")
+    B, T, L = 8, cfg.n_tables, cfg.pooling
+    rng = np.random.default_rng(0)
+    batch = {"dense": rng.normal(size=(B, cfg.n_dense)).astype(np.float32),
+             "indices": rng.integers(0, cfg.emb_num, (B, T, L)
+                                     ).astype(np.int32)}
+    with mesh:
+        scores = np.asarray(binding.execute(batch))
+    assert scores.shape == (B,) and np.isfinite(scores).all()
+    recs = [r for r in binding.plan_stats()["front_end"].values()
+            if r["requested"] == "fused"]
+    assert recs and recs[0]["resolved"] == "split"   # tp=4 mesh
