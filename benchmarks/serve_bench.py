@@ -26,7 +26,15 @@ hard gates:
     difference there is measurement noise): dynamic must sustain >= 80 %
     of the offered QPS.
 
-Writes ``BENCH_serve.json``; schema documented in EXPERIMENTS.md §Serving.
+``--faults`` switches to the fault-injection regimes instead (straggler,
+transient executor failures, corrupted data/store, a forced brown-out
+burst), each run under the retry/circuit-breaker/degradation-ladder
+controller with gates on availability, zero steady-state retraces, and
+recorded degradation/recovery transitions (EXPERIMENTS.md §Serving fault
+tolerance).
+
+Writes ``BENCH_serve.json`` (schema 3); schema documented in
+EXPERIMENTS.md §Serving.
 
 Service times are real measured device executions (interpret-mode caveat
 from BENCH_sls applies to pallas impl on CPU); arrivals/queueing run on
@@ -49,14 +57,18 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.distributed.sharding import make_mesh  # noqa: E402
 from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
-                           BindingExecutor, Bucket, DynamicBatcher,
-                           FixedBatcher, LoadConfig, OpenLoopSource,
-                           RuntimeConfig, ServingRuntime, bind_model,
-                           dummy_request_factory, make_padder,
-                           prime_dedup_auto, request_stream)
+                           BindingExecutor, BreakerConfig, Bucket,
+                           DegradationController,
+                           DynamicBatcher, FaultConfig,
+                           FaultInjectingExecutor, FixedBatcher,
+                           LadderConfig, LoadConfig, OpenLoopSource,
+                           RuntimeConfig, ServiceModel, ServingRuntime,
+                           bind_model, corrupt_store, dummy_request_factory,
+                           make_padder, prime_dedup_auto, request_stream)
 
 
 def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
@@ -83,6 +95,144 @@ def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
     return summary
 
 
+# ---------------------------------------------------------------------------
+# Fault regimes (--faults): chaos-hardened serving, schema 3
+# ---------------------------------------------------------------------------
+
+# one regime per injected fault class (ISSUE: straggler, transient executor
+# failure, corrupted store, OOB/NaN data) plus a forced brown-out burst that
+# exercises the breaker + degradation ladder end to end.  Availability gates
+# apply to the chaos classes (rare, retryable faults: healthy traffic must
+# see >= 0.99); the brownout burst deliberately fails batches past the retry
+# budget, so its gate is the *recorded recovery*, not availability.
+FAULT_REGIMES = [
+    # scheduled steps guarantee each class actually fires at smoke scale
+    # (~10-20 micro-batches); the chaos probabilities ride on top so the
+    # longer full-size runs also see unscheduled faults
+    dict(label="straggler", avail_gate=0.99,
+         faults=dict(straggler_at=(4, 12), straggler_prob=0.05,
+                     straggler_factor=8.0, stall_at=(1,), stall_prob=0.1,
+                     stall_s=0.01)),
+    dict(label="transient", avail_gate=0.99,
+         faults=dict(transient_at=(6,), transient_prob=0.05)),
+    dict(label="corrupt_data", avail_gate=0.99,
+         faults=dict(corrupt_oob_at=(3, 9), corrupt_oob_prob=0.05,
+                     corrupt_nan_at=(5, 11), corrupt_nan_prob=0.05)),
+    dict(label="corrupt_store", avail_gate=0.99, corrupt_store=True,
+         faults=dict()),
+    # forced failure burst past the retry budget: this regime exists to
+    # exercise the breaker + ladder end to end (its gate is the recorded
+    # degradation AND recovery, not availability — the burst deliberately
+    # fails whole batches); 2x requests so recovery completes in-run
+    dict(label="brownout", avail_gate=0.50, gate_transitions=True,
+         n_mult=2, faults=dict(transient_at=(5,), transient_runs=6)),
+]
+
+
+def _warm_all_rungs(binding, cfg, bat_cfg, runtime_cfg, svc_model, storage):
+    """Warm every ladder-rung variant over every bucket so mid-serving rung
+    switches stay retrace-free (the same contract the plain bench gates)."""
+    warm_rt = ServingRuntime(BindingExecutor(binding), DynamicBatcher(bat_cfg),
+                             make_padder(cfg), runtime_cfg,
+                             service_model=svc_model)
+    factory = dummy_request_factory(cfg, storage=storage)
+    for rung in binding.modes():
+        binding.set_mode(rung)
+        warm_rt.warmup(factory)
+    binding.set_mode("full")
+
+
+def run_fault_regime(binding, cfg, bat_cfg, load, runtime_cfg, svc_model,
+                     regime: dict, ckpt_dir: str) -> dict:
+    """One fault class: fresh controller + fault wrapper over the warmed
+    binding, full open-loop run, degradation report attached."""
+    binding.set_mode("full")          # fresh ladder per fault class
+    fault_cfg = FaultConfig(seed=13, **regime["faults"])
+    ctrl = DegradationController(
+        binding=binding,
+        # short virtual-time cooldown + eager step-up so trip/recovery both
+        # complete within a smoke-sized run (hysteresis band stays wide)
+        breaker=BreakerConfig(trip_after=5, cooldown_s=0.02),
+        ladder=LadderConfig(min_dwell_batches=4, step_up_at=0.15,
+                            poison_restore_after=2))
+    fex = FaultInjectingExecutor(BindingExecutor(binding), fault_cfg,
+                                 idx_key=binding.idx_key)
+    runtime = ServingRuntime(fex, DynamicBatcher(bat_cfg), make_padder(cfg),
+                             runtime_cfg, service_model=svc_model,
+                             controller=ctrl)
+    reqs = request_stream(cfg, load)
+    if regime.get("corrupt_store"):
+        # promote hot pages with the live stream's prefix (a corrupted hot
+        # tier nobody reads poisons nothing), snapshot the healthy state,
+        # then scribble NaNs the restore path must heal
+        dp = max(1, binding.engine.axes.dp_size(binding.engine.mesh))
+        for r in reqs[:16]:
+            idx = np.asarray(r.features[binding.idx_key])
+            binding.observe({binding.idx_key:
+                             np.broadcast_to(idx[None], (dp,) + idx.shape)})
+        binding.replan()
+        binding.attach_checkpointer(Checkpointer(ckpt_dir), save_now=True)
+        corrupt_store(binding, frac=0.5, seed=3)
+    elif binding.checkpointer is None:
+        binding.attach_checkpointer(Checkpointer(ckpt_dir), save_now=True)
+    binding.reset_plan_stats()
+    base_poisoned = binding.poisoned_batches
+    summary = runtime.run(OpenLoopSource(reqs))
+    summary["steady_traces"] = binding.plan_stats()["traces"]
+    summary["faults_fired"] = fex.report()
+    summary["poisoned_batches"] = binding.poisoned_batches - base_poisoned
+    return summary
+
+
+def run_fault_section(binding, cfg, bat_cfg, runtime_cfg, svc_model,
+                      n_requests, capacity_qps, slo_ms, storage, dedup,
+                      ckpt_dir) -> dict:
+    runs: dict = {}
+    for regime in FAULT_REGIMES:
+        arrival = ArrivalConfig(rate_qps=0.3 * capacity_qps,
+                                process="poisson", seed=7)
+        load = LoadConfig(n_requests=n_requests * regime.get("n_mult", 1),
+                          arrival=arrival, slo_ms=slo_ms, seed=7,
+                          storage=storage, dedup=dedup)
+        r = run_fault_regime(binding, cfg, bat_cfg, load, runtime_cfg,
+                             svc_model, regime, ckpt_dir)
+        deg = r["degradation"]
+        label = regime["label"]
+        print(f"[{label:13s}] avail={r['availability']:.4f} "
+              f"goodput={r['goodput_qps']:7.1f} qps "
+              f"p99={r['p99_ms']:8.2f} served={r['served']} "
+              f"failed={r['failed']} retries={r['retries']} "
+              f"rung={deg['rung']} transitions={deg['n_transitions']} "
+              f"trips={deg['breaker_trips']} restores={deg['restores']} "
+              f"fired={r['faults_fired']} "
+              f"steady_traces={r['steady_traces']}")
+        # ---- gates ----
+        if r["steady_traces"]:
+            raise AssertionError(
+                f"plan cache failed under faults: steady-state retrace in "
+                f"{label}")
+        if r["availability"] < regime["avail_gate"]:
+            raise AssertionError(
+                f"availability gate failed in {label}: "
+                f"{r['availability']:.4f} < {regime['avail_gate']}")
+        if regime.get("gate_transitions") and deg["n_transitions"] < 2:
+            raise AssertionError(
+                f"{label}: expected degradation AND recovery transitions, "
+                f"recorded {deg['transitions']}")
+        if label == "transient" and not r["retries"]:
+            raise AssertionError("transient regime exercised no retries")
+        if label == "corrupt_data" and not r["poisoned_batches"]:
+            raise AssertionError(
+                "corrupt_data regime: NaN injection never reached the "
+                "score scrub")
+        if label == "corrupt_store" and not deg["restores"]:
+            raise AssertionError(
+                "corrupt_store regime: poisoned store never triggered a "
+                "checkpoint restore")
+        runs[label] = {"avail_gate": regime["avail_gate"], **r}
+    return runs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -107,6 +257,10 @@ def main() -> None:
                          "serving wins are attributable in bytes)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration (fewer requests/buckets)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the fault-injection regimes (straggler, "
+                         "transient, corrupt data/store, forced brown-out) "
+                         "instead of the policy-comparison regimes")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -146,7 +300,11 @@ def main() -> None:
           f"dedup={args.dedup}")
     binding = bind_model(cfg, mesh, mode=args.mode, impl=args.impl,
                          block_l=args.block_l, storage=args.storage,
-                         dedup=args.dedup)
+                         dedup=args.dedup,
+                         # fault runs need the ladder's serve-step variants
+                         # and the NaN/Inf score scrub armed
+                         degraded_variants=args.faults,
+                         scrub_scores=args.faults)
     bat_cfg = BatcherConfig(batch_sizes=batch_sizes, poolings=poolings)
     fixed_bucket = Bucket(batch_sizes[-1], poolings[-1])
     runtime_cfg = RuntimeConfig(observe_every=4, replan_every=32)
@@ -184,7 +342,39 @@ def main() -> None:
               f"{svc_max * 1e3:.2f} ms), slo {slo_ms:.1f} ms, "
               f"coalesce cap {max_wait_ms:.1f} ms")
 
-        runs: dict = {}
+        if args.faults:
+            import tempfile
+            bat_cfg_f = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
+            _warm_all_rungs(binding, cfg, bat_cfg_f, runtime_cfg,
+                            calib.service_model, args.storage)
+            runs = run_fault_section(
+                binding, cfg, bat_cfg_f, runtime_cfg, calib.service_model,
+                n_requests, capacity_qps, slo_ms, args.storage, args.dedup,
+                tempfile.mkdtemp(prefix="serve_bench_ckpt_"))
+            out = {
+                "bench": "serve",
+                "schema": 3,
+                "section": "faults",
+                "backend": jax.default_backend(),
+                "interpret_mode": jax.default_backend() != "tpu",
+                "jax_version": jax.__version__,
+                "platform": platform.platform(),
+                "mesh": {"data": 2, "model": 4},
+                "arch": args.arch, "mode": args.mode, "impl": args.impl,
+                "block_l": args.block_l, "storage": args.storage,
+                "dedup": args.dedup,
+                "capacity_qps": capacity_qps, "slo_ms": slo_ms,
+                "n_requests": n_requests,
+                "fault_runs": {k: {kk: vv for kk, vv in v.items()
+                                   if kk != "latency_hist"}
+                               for k, v in runs.items()},
+            }
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"\nwrote {args.out}")
+            return
+
+        runs = {}
         for regime in regimes:
             offered_qps = regime["frac"] * capacity_qps
             arrival = ArrivalConfig(
@@ -236,7 +426,7 @@ def main() -> None:
 
     out = {
         "bench": "serve",
-        "schema": 2,
+        "schema": 3,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,

@@ -80,20 +80,27 @@ class PIFSEmbeddingEngine:
 
     DEDUP_MODES = ("off", "auto", "on")
     FRONT_END_MODES = ("split", "fused")
+    TIER_MODES = ("all", "hot_only")
 
     def __init__(self, paging: PagingConfig, mesh: Mesh,
                  axes: Optional[MeshAxes] = None,
                  planner: Optional[PlannerConfig] = None,
                  dtype=jnp.float32, dedup: str = "off",
                  dedup_auto_threshold: float = 1.5,
-                 dedup_staging_bytes: int = 4 << 20):
+                 dedup_staging_bytes: int = 4 << 20,
+                 validate_ids: bool = False):
         """``dedup`` is the engine-wide default for :meth:`lookup`'s
         gather-once duplicate-coalescing knob (off / auto / on);
         ``dedup_auto_threshold`` is the expected batch-level duplicate
         factor above which ``auto`` turns coalescing on for a plan, and
         ``dedup_staging_bytes`` bounds the per-device staging buffer — a
         signature whose worst-case staging exceeds it falls back to the
-        non-dedup datapath (exact, just without the bytes win)."""
+        non-dedup datapath (exact, just without the bytes win).
+        ``validate_ids`` is the strict-mode debug knob: lookups check their
+        (concrete, host-visible) indices against the padded address space
+        and raise on out-of-range ids instead of letting the device gather
+        clamp them silently — OOB traffic otherwise serves row 0 /
+        last-row embeddings with no error at all."""
         self.cfg = paging
         self.mesh = mesh
         self.axes = axes or axes_for(mesh)
@@ -103,6 +110,7 @@ class PIFSEmbeddingEngine:
             raise ValueError(f"unknown dedup {dedup!r}; "
                              f"expected one of {self.DEDUP_MODES}")
         self.default_dedup = dedup
+        self.validate_ids = validate_ids
         self.dedup_auto_threshold = dedup_auto_threshold
         self.dedup_staging_bytes = dedup_staging_bytes
         # optional measured-duplicate-factor hint for 'auto' resolutions
@@ -243,11 +251,33 @@ class PIFSEmbeddingEngine:
         return jnp.where(is_hot[:, None], hot_rows, cold_rows)
 
     # ----------------------------------------------------------------- lookup
+    def _check_ids(self, indices) -> None:
+        """Strict-mode OOB guard (``validate_ids=True``): raise host-side on
+        ids outside the padded address space instead of letting the device
+        gather clamp them to valid rows silently.  Only concrete arrays can
+        be checked — under an outer jit trace the caller (e.g.
+        ``ServeBinding.execute``) must validate the host batch *before*
+        entering the trace, which is where serving wires this in."""
+        if isinstance(indices, jax.core.Tracer):
+            return
+        idx = np.asarray(indices)
+        bad = (idx < 0) | (idx >= self.cfg.padded_rows)
+        if bad.any():
+            n = int(bad.sum())
+            example = int(idx[np.unravel_index(np.argmax(bad), idx.shape)])
+            raise ValueError(
+                f"validate_ids: {n} out-of-range id(s) in lookup batch "
+                f"(e.g. {example}; valid range is [0, "
+                f"{self.cfg.padded_rows})) — the device gather would have "
+                "clamped these to real rows and served wrong embeddings "
+                "silently")
+
     def lookup(self, state: EngineState, indices: jax.Array,
                weights: Optional[jax.Array] = None, mode: str = "pifs",
                combine: str = "psum", dp_shard: bool = True,
                impl: str = "jnp", block_l: int = 8,
-               dedup: Optional[str] = None) -> jax.Array:
+               dedup: Optional[str] = None,
+               tiers: str = "all") -> jax.Array:
         """Pooled lookup.
 
         indices: (B, G, L) int32 — B batch (sharded over dp), G bags per
@@ -268,11 +298,17 @@ class PIFSEmbeddingEngine:
         exceeds the VMEM budget.  The decision is frozen into the cached
         plan (the key carries the *requested* knob), so 'auto' never
         retraces across observe/replan cycles.
+        tiers: 'all' (normal) or 'hot_only' — the serving brown-out rung:
+        only the replicated hot tier is read, cold rows contribute exact
+        zeros, and **no cross-shard collective runs at all** (the degraded
+        mode for a congested/faulted fabric link).  Scores change (cold
+        contributions are zero-filled), so this is never resolved
+        implicitly — callers opt in per plan.
 
         The shard_map+jit closure for each distinct
-        (mode, combine, dp_shard, impl, dedup, idx/weights shape+dtype)
-        signature is built once and cached — steady-state serving does zero
-        retraces (see ``plan_stats``).
+        (mode, combine, dp_shard, impl, dedup, tiers, idx/weights
+        shape+dtype) signature is built once and cached — steady-state
+        serving does zero retraces (see ``plan_stats``).
         """
         if mode not in ("pifs", "pond", "beacon"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -285,9 +321,14 @@ class PIFSEmbeddingEngine:
         if dedup not in self.DEDUP_MODES:
             raise ValueError(f"unknown dedup {dedup!r}; "
                              f"expected one of {self.DEDUP_MODES}")
+        if tiers not in self.TIER_MODES:
+            raise ValueError(f"unknown tiers {tiers!r}; "
+                             f"expected one of {self.TIER_MODES}")
+        if self.validate_ids:
+            self._check_ids(indices)
         key = ("lookup", mode, combine, dp_shard, impl,
                int(block_l) if impl == "pallas" else None,  # jnp ignores it
-               self.cfg.storage, dedup,
+               self.cfg.storage, dedup, tiers,
                tuple(indices.shape), jnp.dtype(indices.dtype).name,
                None if weights is None
                else (tuple(weights.shape), jnp.dtype(weights.dtype).name))
@@ -298,7 +339,7 @@ class PIFSEmbeddingEngine:
             plan = self._build_lookup_plan(
                 mode=mode, combine=combine, dp_shard=dp_shard, impl=impl,
                 block_l=block_l, has_weights=weights is not None,
-                dedup=dedup_on)
+                dedup=dedup_on, tiers=tiers)
             self._plans[key] = plan
         self._plan_calls += 1
         args = (state.cold, state.hot, state.page_scales,
@@ -355,6 +396,8 @@ class PIFSEmbeddingEngine:
         if dedup not in self.DEDUP_MODES:
             raise ValueError(f"unknown dedup {dedup!r}; "
                              f"expected one of {self.DEDUP_MODES}")
+        if self.validate_ids:
+            self._check_ids(indices)
         if dense_feature.ndim != 2 or dense_feature.shape[-1] != self.cfg.dim:
             raise ValueError(
                 f"dense_feature must be (B, {self.cfg.dim}); got "
@@ -624,7 +667,7 @@ class PIFSEmbeddingEngine:
 
     def _build_lookup_plan(self, *, mode: str, combine: str, dp_shard: bool,
                            impl: str, block_l: int, has_weights: bool,
-                           dedup: bool = False):
+                           dedup: bool = False, tiers: str = "all"):
         """Build the shard_map + jit closure for one lookup signature."""
         axes, mesh = self.axes, self.mesh
         dp, tp = axes.dp, axes.tp
@@ -642,7 +685,7 @@ class PIFSEmbeddingEngine:
             return self._lookup_block(cold, hot, scales, p2s, p2slot, idx,
                                       wloc, mode=mode, combine=combine,
                                       impl=impl, block_l=block_l,
-                                      dedup=dedup)
+                                      dedup=dedup, tiers=tiers)
 
         f = shard_map(
             block, mesh=mesh,
@@ -691,15 +734,16 @@ class PIFSEmbeddingEngine:
              front_end, shape, _idx_dtype, weights_info) = key
             blk = ("" if blocks is None
                    else f"/bl{blocks[0]}bb{blocks[1]}")
-            head, fe = "interact:", f"/fe={front_end}"
+            head, fe, tiers = "interact:", f"/fe={front_end}", "all"
         else:
             (_, mode, combine, dp_shard, impl, block_l, storage, dedup,
-             shape, _idx_dtype, weights_info) = key
+             tiers, shape, _idx_dtype, weights_info) = key
             blk = f"/bl{block_l}" if block_l is not None else ""
             head, fe = "", ""
         return (f"{head}{mode}/{combine}/{impl}" + blk
                 + ("" if dp_shard else "/nodp")
                 + f"/{storage}/dedup={dedup}" + fe
+                + ("" if tiers == "all" else f"/{tiers}")
                 + f"/idx={'x'.join(map(str, shape))}"
                 + ("+w" if weights_info is not None else ""))
 
@@ -717,7 +761,8 @@ class PIFSEmbeddingEngine:
 
     def _lookup_block(self, cold, hot, scales, p2s, p2slot, idx, weights, *,
                       mode: str, combine: str, impl: str = "jnp",
-                      block_l: int = 8, dedup: bool = False):
+                      block_l: int = 8, dedup: bool = False,
+                      tiers: str = "all"):
         """Per-device block: the fabric-switch Process Core."""
         c, axes = self.cfg, self.axes
         tp = axes.tp
@@ -745,6 +790,22 @@ class PIFSEmbeddingEngine:
         hot_out = sls_ops.masked_partial_sls_dense(
             hot, local_row, is_hot, wbags, impl=impl,
             block_l=block_l, dedup=dedup)                       # (nbags, D)
+
+        if tiers == "hot_only":
+            # brown-out rung: serve the replicated hot tier only — cold
+            # entries are masked to exact zeros by ``is_hot`` above and the
+            # faulted/congested cross-shard path is never touched (zero
+            # collectives).  Scores change (cold contributions zero-fill),
+            # which is why this datapath is an explicit opt-in per plan.
+            if combine == "psum":
+                return hot_out.reshape(b, G, -1)
+            tp_size = axes.tp_size(self.mesh)
+            if nbags % tp_size:
+                raise ValueError(f"bags ({nbags}) must divide tp ({tp_size}) "
+                                 "for psum_scatter combine")
+            out = jax.lax.dynamic_slice_in_dim(
+                hot_out, my * (nbags // tp_size), nbags // tp_size, 0)
+            return out.reshape(b // tp_size, G, -1)
 
         # ---- cold tier ----
         if mode == "pond":
@@ -973,11 +1034,33 @@ class ServeBinding:
     ``plan_stats`` exposes the compiled-plan cache contract the batcher's
     bucket set is built around (one signature per bucket, zero steady-state
     retraces once warmed).
+
+    Robustness seams (all opt-in, all off by default):
+
+      * ``steps`` — named serve-step *variants* (the brown-out ladder's
+        quality rungs: split front end, dedup off, hot-tier-only, ...);
+        ``set_mode`` switches between them without retracing once each
+        variant's buckets are warmed, because every variant is its own
+        jitted executable over the same input signatures.
+      * ``validate_ids`` — host-side strict OOB check on the batch's index
+        stream *before* it enters the jitted step (the device gather would
+        clamp silently).
+      * ``scrub_scores`` — NaN/Inf score scrub with per-batch poisoned-row
+        accounting: a corrupted store (or injected NaN features) degrades
+        to zero-scored rows instead of shipping NaN downstream, and the
+        poison counters give the recovery controller its signal.
+      * ``attach_checkpointer``/``restore`` — mid-serving state recovery:
+        reload the EngineState from the last committed checkpoint between
+        micro-batches (the observe/replan seam).  State shapes/dtypes are
+        unchanged, so a restore never retraces the serve step.
     """
 
     def __init__(self, engine: PIFSEmbeddingEngine, state: EngineState,
                  params, step, idx_key: Optional[str] = "indices",
-                 track_dedup: bool = True):
+                 track_dedup: bool = True,
+                 steps: Optional[dict] = None,
+                 validate_ids: bool = False,
+                 scrub_scores: bool = False):
         self.engine = engine
         self.state = state
         self.params = params
@@ -992,12 +1075,87 @@ class ServeBinding:
         # it for deployments that do not want the maintenance-path cost.
         self.track_dedup = track_dedup
         self.dedup_stats: dict = {}
+        # named serve-step variants (brown-out rungs); "full" is the
+        # configured-quality step and always present
+        self.steps = dict(steps or {})
+        self.steps.setdefault("full", step)
+        self.active = "full"
+        self.validate_ids = validate_ids
+        self.scrub_scores = scrub_scores
+        # poisoned-score accounting (scrub_scores): totals + last batch
+        self.poisoned_rows = 0
+        self.poisoned_batches = 0
+        self.last_poisoned = 0
+        # mid-serving recovery
+        self.checkpointer = None
+        self.ckpt_step = 0
+        self.restores = 0
+
+    # ------------------------------------------------------------ variants
+    def modes(self) -> tuple:
+        """The available serve-step variant labels ('full' first)."""
+        rest = [k for k in self.steps if k != "full"]
+        return ("full",) + tuple(rest)
+
+    def set_mode(self, label: str) -> None:
+        """Switch the active serve-step variant (a brown-out ladder rung).
+
+        Unknown labels fall back to 'full' — model families that lack a
+        given degraded datapath (e.g. Rec configs have no DLRM front end)
+        simply keep serving at the nearest quality they have."""
+        self.active = label if label in self.steps else "full"
 
     def execute(self, batch: dict):
+        if self.validate_ids and self.idx_key and self.idx_key in batch:
+            # the serve step is jitted: the OOB check must see the concrete
+            # host batch, before tracing swallows it
+            self.engine._check_ids(np.asarray(batch[self.idx_key]))
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        out = self.step(self.params, self.state, jb)
+        out = self.steps[self.active](self.params, self.state, jb)
         jax.block_until_ready(out)
+        if self.scrub_scores:
+            scores = np.asarray(out)
+            finite = np.isfinite(scores)
+            self.last_poisoned = int(scores.size - finite.sum())
+            if self.last_poisoned:
+                self.poisoned_rows += self.last_poisoned
+                self.poisoned_batches += 1
+                out = jnp.where(jnp.asarray(finite), out,
+                                jnp.zeros_like(out))
+            return out
+        self.last_poisoned = 0
         return out
+
+    # ------------------------------------------------------------ recovery
+    def attach_checkpointer(self, checkpointer, save_now: bool = True
+                            ) -> None:
+        """Wire a ``repro.checkpoint.Checkpointer`` for mid-serving state
+        recovery; ``save_now`` commits the current (healthy) EngineState
+        synchronously so ``restore`` always has a baseline."""
+        self.checkpointer = checkpointer
+        if save_now:
+            self.snapshot()
+
+    def snapshot(self) -> None:
+        """Commit the current EngineState (blocking — callers sit on the
+        maintenance path, never the timed service path)."""
+        if self.checkpointer is None:
+            raise RuntimeError("no checkpointer attached")
+        self.ckpt_step += 1
+        self.checkpointer.save(self.ckpt_step, self.state, blocking=True)
+
+    def restore(self) -> None:
+        """Reload EngineState from the latest committed checkpoint (the
+        mid-serving heal path, run between micro-batches on the
+        observe/replan seam).  Restored leaves have identical shapes,
+        dtypes, and shardings, so no serve-step plan ever retraces; the
+        checkpointer's per-leaf CRC check makes an on-disk corruption fail
+        loudly here rather than serve garbage."""
+        if self.checkpointer is None:
+            raise RuntimeError("no checkpointer attached")
+        self.state = self.checkpointer.restore(
+            self.state, shardings=self.engine.state_shardings())
+        self.restores += 1
 
     def observe(self, batch: dict) -> None:
         if self.idx_key and self.idx_key in batch:

@@ -38,12 +38,16 @@ def build_serving(cfg, mesh, *, mode: str = "pifs", impl: str = "jnp",
                   storage: str = "fp32", dedup: str = "off",
                   front_end: str = "split",
                   runtime_cfg: RuntimeConfig = RuntimeConfig(),
+                  validate_ids: bool = False,
                   ) -> Tuple[ServingRuntime, "object"]:
     """Compose (runtime, binding) for a config; buckets warmed by the
-    caller via ``runtime.warmup``."""
+    caller via ``runtime.warmup``.  ``validate_ids`` arms the binding's
+    host-side strict OOB-id check (raise loudly instead of letting the
+    device gather clamp bad ids silently)."""
     binding = bind_model(cfg, mesh, mode=mode, impl=impl, block_l=block_l,
                          hot_fraction=hot_fraction, storage=storage,
-                         dedup=dedup, front_end=front_end)
+                         dedup=dedup, front_end=front_end,
+                         validate_ids=validate_ids)
     levels = tuple(sorted(set(poolings))) or (
         (cfg.pooling,) if hasattr(cfg, "pooling") else (1,))
     if batcher == "dynamic":
@@ -66,6 +70,7 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                        hot_fraction: float = 0.05,
                        runtime_cfg: RuntimeConfig = RuntimeConfig(),
                        closed_loop_users: int = 0,
+                       validate_ids: bool = False,
                        ) -> Dict[str, object]:
     """End-to-end: bind, warm every bucket, serve the stream, and report
     metrics + the steady-state retrace count (must be 0).  The engine's
@@ -77,7 +82,8 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
         hot_fraction=hot_fraction, storage=load.storage, dedup=load.dedup,
-        front_end=load.front_end, runtime_cfg=runtime_cfg)
+        front_end=load.front_end, runtime_cfg=runtime_cfg,
+        validate_ids=validate_ids)
     with mesh:
         runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
         # the open-loop stream is only materialized when something uses it
@@ -144,6 +150,10 @@ def main() -> None:
                     choices=["poisson", "bursty", "uniform"])
     ap.add_argument("--closed-loop-users", type=int, default=0,
                     help="> 0 switches to a closed-loop load of N users")
+    ap.add_argument("--validate-ids", action="store_true",
+                    help="strict mode: raise host-side on out-of-range "
+                         "embedding ids instead of letting the device "
+                         "gather clamp them silently")
     ap.add_argument("--observe-every", type=int, default=4)
     ap.add_argument("--replan-every", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
@@ -167,7 +177,8 @@ def main() -> None:
         batch_sizes=tuple(args.batch_sizes),
         runtime_cfg=RuntimeConfig(observe_every=args.observe_every,
                                   replan_every=args.replan_every),
-        closed_loop_users=args.closed_loop_users)
+        closed_loop_users=args.closed_loop_users,
+        validate_ids=args.validate_ids)
     out.pop("latency_hist", None)
     dedup_factors = out.pop("dedup_factors", {})
     for k, v in out.items():

@@ -64,7 +64,8 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
             mode: str = "pifs", interaction_impl: str = "jnp",
             impl: str = "jnp", block_l: int = 8,
             dedup: Optional[str] = None,
-            front_end: str = "split") -> jax.Array:
+            front_end: str = "split",
+            tiers: str = "all") -> jax.Array:
     """Returns CTR logits (B,).
 
     ``impl``/``block_l`` select the engine's SLS datapath (jnp vs the
@@ -81,9 +82,16 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
     replicated/dp-sharded serving config; tp-sharded and pond configs
     resolve back to the split pipeline exactly (bit-identical logits,
     recorded in ``engine.plan_stats()['front_end']``).
+
+    ``tiers='hot_only'`` is the brown-out rung: embedding lookups read the
+    replicated hot tier only (cold contributions zero-filled, zero
+    collectives) — NOT bit-exact; only the split path supports it, so it
+    forces ``front_end='split'``.
     """
     if front_end not in PIFSEmbeddingEngine.FRONT_END_MODES:
         raise ValueError(f"unknown front_end {front_end!r}")
+    if tiers != "all":
+        front_end = "split"                    # fused path is all-tiers only
     dense, idx = batch["dense"], batch["indices"]
     B = dense.shape[0]
     x_bot = mlp_apply(params["bottom"], dense, len(cfg.bottom_mlp),
@@ -101,7 +109,7 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
     else:
         pooled = engine.lookup(state, idx, weights=batch.get("weights"),
                                mode=mode, impl=impl, block_l=block_l,
-                               dedup=dedup)                 # (B, T, d)
+                               dedup=dedup, tiers=tiers)    # (B, T, d)
         pooled = _constrain_full_batch(pooled, engine)
         feats = jnp.concatenate([x_bot[:, None, :], pooled],
                                 axis=1)                     # (B, F, d)
@@ -152,11 +160,13 @@ def make_serve_step(cfg: DLRMConfig, engine: PIFSEmbeddingEngine, mesh: Mesh,
                     mode: str = "pifs", interaction_impl: str = "jnp",
                     impl: str = "jnp", block_l: int = 8,
                     dedup: Optional[str] = None,
-                    front_end: str = "split"):
+                    front_end: str = "split",
+                    tiers: str = "all"):
     def step(params, emb_state, batch):
         logits = forward(params, engine, emb_state, batch, cfg, mode=mode,
                          interaction_impl=interaction_impl, impl=impl,
-                         block_l=block_l, dedup=dedup, front_end=front_end)
+                         block_l=block_l, dedup=dedup, front_end=front_end,
+                         tiers=tiers)
         return jax.nn.sigmoid(logits)
     return step
 

@@ -32,22 +32,49 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
+    """Deterministic fault schedule shared by training and serving.
+
+    Fires at the listed steps exactly once each, plus (chaos mode) with a
+    per-step probability via a seeded hash — reproducible across restarts
+    and across the processes of a run.  Training calls :meth:`maybe_fail`
+    (raise on fire); the serving fault layer (``repro.serving.faults``)
+    calls :meth:`fires` and maps the decision onto its own fault classes
+    (stragglers, transient executor errors, stalls, data corruption), so
+    both runtimes speak one injection vocabulary.
+    """
     fail_at_steps: Tuple[int, ...] = ()
     fail_prob: float = 0.0
     seed: int = 0
     _fired: set = dataclasses.field(default_factory=set)
 
-    def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at_steps and step not in self._fired:
+    @property
+    def armed(self) -> bool:
+        """Whether this injector can ever fire (lets wrappers skip work)."""
+        return bool(self.fail_at_steps) or self.fail_prob > 0.0
+
+    def fires(self, step: int) -> bool:
+        """Decide (and record) whether the fault fires at ``step``.
+
+        Each step fires at most once: the training restart loop re-runs the
+        failed step after restore, and serving retries re-run the failed
+        batch — neither should loop forever on one scheduled fault.
+        """
+        if step in self._fired:
+            return False
+        if step in self.fail_at_steps:
             self._fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
+            return True
         if self.fail_prob > 0.0:
-            # deterministic hash-based chaos (reproducible across restarts
-            # only fires once per step because the step re-runs after restore)
+            # deterministic hash-based chaos (reproducible across restarts)
             h = hash((self.seed, step)) % 10_000
-            if h < self.fail_prob * 10_000 and step not in self._fired:
+            if h < self.fail_prob * 10_000:
                 self._fired.add(step)
-                raise SimulatedFailure(f"chaos failure at step {step}")
+                return True
+        return False
+
+    def maybe_fail(self, step: int) -> None:
+        if self.fires(step):
+            raise SimulatedFailure(f"injected failure at step {step}")
 
 
 class StragglerWatchdog:

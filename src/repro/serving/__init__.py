@@ -4,11 +4,14 @@ The online-inference layer the paper evaluates under (concurrent
 production-style access streams, tail-latency SLOs) on top of the PIFS
 engine's compiled-lookup plan cache:
 
-  request.py  — Request, arrival processes, bounded admission queue
-  batcher.py  — shape buckets, deadline-aware coalescing, exact padding
-  metrics.py  — latency histograms, p50/p90/p99/p99.9, QPS, SLO accounting
-  runtime.py  — the discrete-event loop + engine executor + load sources
-  loadgen.py  — model bindings, padders, request streams (open/closed loop)
+  request.py     — Request, arrival processes, bounded admission queue
+  batcher.py     — shape buckets, deadline-aware coalescing, exact padding
+  metrics.py     — latency histograms, p50/p90/p99/p99.9, QPS, SLO/
+                   availability accounting
+  runtime.py     — the discrete-event loop + engine executor + load sources
+  loadgen.py     — model bindings, padders, request streams (open/closed)
+  faults.py      — deterministic fault injection around any executor
+  degradation.py — retry / circuit breaker / brown-out ladder controller
 
 The engine-facing seam is ``repro.core.pifs.ServeBinding``.
 """
@@ -16,6 +19,11 @@ from repro.serving.batcher import (BatcherConfig, Bucket, DynamicBatcher,
                                    FixedBatcher, FixedServiceModel, Flush,
                                    ServiceModel, Wait, pad_pooled_indices,
                                    stack_feature)
+from repro.serving.degradation import (RUNGS, BreakerConfig, CircuitBreaker,
+                                       DegradationController, LadderConfig,
+                                       RetryPolicy)
+from repro.serving.faults import (FaultConfig, FaultInjectingExecutor,
+                                  TransientServingFailure, corrupt_store)
 from repro.serving.loadgen import (LoadConfig, bind_model,
                                    closed_loop_factory,
                                    dummy_request_factory, make_padder,
@@ -29,11 +37,14 @@ from repro.serving.runtime import (BindingExecutor, ClosedLoopSource,
 
 __all__ = [
     "AdmissionQueue", "ArrivalConfig", "BatcherConfig", "BindingExecutor",
-    "Bucket", "ClosedLoopSource", "DynamicBatcher", "FixedBatcher",
-    "FixedServiceModel", "Flush", "LatencyHistogram", "LoadConfig",
-    "OpenLoopSource", "Request", "RuntimeConfig", "ServiceModel",
-    "ServingMetrics", "ServingRuntime", "SimulatedExecutor", "Wait",
-    "arrival_times", "bind_model", "closed_loop_factory",
-    "dummy_request_factory", "make_padder", "pad_pooled_indices",
-    "prime_dedup_auto", "request_stream", "stack_feature",
+    "BreakerConfig", "Bucket", "CircuitBreaker", "ClosedLoopSource",
+    "DegradationController", "DynamicBatcher", "FaultConfig",
+    "FaultInjectingExecutor", "FixedBatcher", "FixedServiceModel", "Flush",
+    "LadderConfig", "LatencyHistogram", "LoadConfig", "OpenLoopSource",
+    "RUNGS", "Request", "RetryPolicy", "RuntimeConfig", "ServiceModel",
+    "ServingMetrics", "ServingRuntime", "SimulatedExecutor",
+    "TransientServingFailure", "Wait", "arrival_times", "bind_model",
+    "closed_loop_factory", "corrupt_store", "dummy_request_factory",
+    "make_padder", "pad_pooled_indices", "prime_dedup_auto",
+    "request_stream", "stack_feature",
 ]

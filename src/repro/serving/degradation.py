@@ -1,0 +1,205 @@
+"""Graceful degradation for the serving runtime: retry, circuit breaker,
+and the hysteresis brown-out ladder.
+
+Under injected (or real) faults the runtime should bend, not break:
+
+  * **Retry with backoff** — a transient executor failure
+    (:class:`~repro.serving.faults.TransientServingFailure`) is retried up
+    to ``RetryPolicy.max_attempts`` times; each backoff consumes *virtual*
+    time, so the latency cost of retrying is visible in p99.  A request
+    whose budget is exhausted is marked ``failed`` and counted exactly
+    once in SLO metrics.
+  * **Circuit breaker** — ``BreakerConfig.trip_after`` consecutive failed
+    attempts trip the breaker open: batches fail fast (no executor call)
+    until ``cooldown_s`` of virtual time passes, then a half-open probe
+    batch decides between closing and re-opening.  Fail-fast keeps a
+    persistent fault from head-of-line-blocking the queue behind doomed
+    retries.
+  * **Brown-out ladder** — a pressure EWMA (1 per failed batch, 0 per
+    healthy one) steps the service down a quality ladder under sustained
+    pressure and back up on recovery, with hysteresis (distinct down/up
+    thresholds + a minimum dwell) so it never flaps:
+
+        full > split_fe > no_dedup > hot_only > shed
+
+    Rungs are applied through ``ServeBinding.set_mode`` — each rung is a
+    pre-warmed jitted serve-step variant over the *same* bucket
+    signatures, so stepping down (or up) never retraces.  ``split_fe``
+    and ``no_dedup`` are bit-exact with ``full`` (test-pinned); ``hot_only``
+    zero-fills cold-tier contributions (scores change, availability
+    survives); ``shed`` additionally tightens the admission-queue bound so
+    overload is rejected at the door instead of timing out inside.
+  * **Poison-triggered restore** — ``poison_restore_after`` consecutive
+    batches with scrubbed (non-finite) scores signal a corrupted store;
+    the runtime heals it between micro-batches via ``ServeBinding.restore()``
+    (checkpoint reload on the maintenance seam — no retrace, no restart).
+
+All state advances on the runtime's virtual clock, so chaos runs are
+deterministic and replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.serving.faults import TransientServingFailure
+
+RUNGS = ("full", "split_fe", "no_dedup", "hot_only", "shed")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_attempts: int = 3            # total attempts (first try included)
+    backoff_s: float = 0.002         # virtual seconds before attempt 2
+    backoff_mult: float = 2.0        # exponential growth per further attempt
+
+    def backoff(self, failures: int) -> float:
+        """Virtual-time penalty after the ``failures``-th failed attempt."""
+        return self.backoff_s * self.backoff_mult ** (failures - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    trip_after: int = 5              # consecutive failed attempts to trip
+    cooldown_s: float = 0.5          # open-state dwell before half-open
+
+
+@dataclasses.dataclass(frozen=True)
+class LadderConfig:
+    alpha: float = 0.3               # pressure EWMA weight
+    step_down_at: float = 0.5        # pressure >= this -> one rung down
+    step_up_at: float = 0.05         # pressure <= this -> one rung up
+    min_dwell_batches: int = 8       # hysteresis: batches between moves
+    shed_capacity: int = 64          # admission bound while on 'shed'
+    poison_restore_after: int = 2    # consecutive poisoned batches -> restore
+
+
+class CircuitBreaker:
+    """closed -> (trip_after consecutive failures) -> open -> (cooldown on
+    the virtual clock) -> half-open probe -> closed | open."""
+
+    def __init__(self, cfg: BreakerConfig):
+        self.cfg = cfg
+        self.state = "closed"
+        self.consecutive = 0
+        self.open_until = 0.0
+        self.trips = 0
+
+    def allow(self, now: float) -> bool:
+        if self.state == "open":
+            if now >= self.open_until:
+                self.state = "half_open"     # admit one probe batch
+                return True
+            return False
+        return True
+
+    def record_failure(self, now: float) -> None:
+        self.consecutive += 1
+        if (self.state == "half_open"
+                or self.consecutive >= self.cfg.trip_after):
+            self.state = "open"
+            self.open_until = now + self.cfg.cooldown_s
+            self.trips += 1
+            self.consecutive = 0
+
+    def record_success(self) -> None:
+        self.consecutive = 0
+        if self.state == "half_open":
+            self.state = "closed"
+
+
+class DegradationController:
+    """Composes retry policy, circuit breaker, and the brown-out ladder;
+    the runtime consults it around every executor call.  ``binding`` is
+    optional — a controller over a :class:`SimulatedExecutor` still
+    retries, trips, and walks the ladder (rungs just change no datapath).
+    """
+
+    def __init__(self, binding=None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[BreakerConfig] = None,
+                 ladder: Optional[LadderConfig] = None,
+                 retryable: Tuple[type, ...] = (TransientServingFailure,)):
+        self.binding = binding
+        self.retry = retry or RetryPolicy()
+        self.breaker = CircuitBreaker(breaker or BreakerConfig())
+        self.ladder = ladder or LadderConfig()
+        self.retryable = tuple(retryable)
+        self.rung = 0
+        self.pressure = 0.0
+        self.transitions: List[dict] = []
+        self.queue = None
+        self._base_capacity: Optional[int] = None
+        self._dwell = 0
+        self._poison_streak = 0
+        self.restores = 0
+
+    # --------------------------------------------------------------- wiring
+    @property
+    def rung_label(self) -> str:
+        return RUNGS[self.rung]
+
+    def bind_queue(self, queue) -> None:
+        """Give the shed rung an admission queue to tighten."""
+        self.queue = queue
+        self._base_capacity = queue.capacity
+
+    # -------------------------------------------------------------- breaker
+    def allow_execute(self, now: float) -> bool:
+        return self.breaker.allow(now)
+
+    def on_attempt_failure(self, now: float) -> None:
+        self.breaker.record_failure(now)
+
+    # --------------------------------------------------------------- ladder
+    def on_batch_done(self, now: float, ok: bool, poisoned: int = 0) -> None:
+        """Feed the ladder one resolved micro-batch (success, retry-
+        exhausted failure, or fail-fast) and move rungs if warranted."""
+        if ok:
+            self.breaker.record_success()
+            self._poison_streak = self._poison_streak + 1 if poisoned else 0
+        l = self.ladder
+        self.pressure = ((1 - l.alpha) * self.pressure
+                         + l.alpha * (0.0 if ok else 1.0))
+        self._dwell += 1
+        if self._dwell < l.min_dwell_batches:
+            return
+        if self.pressure >= l.step_down_at and self.rung < len(RUNGS) - 1:
+            self._move(now, self.rung + 1, f"pressure={self.pressure:.2f}")
+        elif self.pressure <= l.step_up_at and self.rung > 0:
+            self._move(now, self.rung - 1, f"pressure={self.pressure:.2f}")
+
+    def _move(self, now: float, new_rung: int, reason: str) -> None:
+        frm, to = RUNGS[self.rung], RUNGS[new_rung]
+        self.rung = new_rung
+        self._dwell = 0
+        self.transitions.append({"t": round(now, 6), "from": frm, "to": to,
+                                 "reason": reason})
+        if self.binding is not None:
+            self.binding.set_mode(to)
+        if self.queue is not None:
+            self.queue.set_capacity(self.ladder.shed_capacity
+                                    if to == "shed" else self._base_capacity)
+
+    # ------------------------------------------------------------- recovery
+    @property
+    def wants_restore(self) -> bool:
+        return (self.binding is not None
+                and self.binding.checkpointer is not None
+                and self._poison_streak >= self.ladder.poison_restore_after)
+
+    def note_restored(self) -> None:
+        self._poison_streak = 0
+        self.restores += 1
+
+    # --------------------------------------------------------------- report
+    def report(self) -> dict:
+        return {
+            "rung": self.rung_label,
+            "pressure": round(self.pressure, 4),
+            "transitions": list(self.transitions),
+            "n_transitions": len(self.transitions),
+            "breaker_state": self.breaker.state,
+            "breaker_trips": self.breaker.trips,
+            "restores": self.restores,
+        }

@@ -1,0 +1,220 @@
+"""Serving-side fault injection: deterministic chaos for the serving loop.
+
+The paper's claim is tail latency under heavy concurrent load; a real
+CXL-fabric deployment only delivers that p99 if it also survives the
+faults such fabrics see — congested links (stragglers), transient device
+errors, maintenance stalls, corrupted pages.  ``FaultInjectingExecutor``
+wraps any executor (``BindingExecutor`` or ``SimulatedExecutor``) and
+injects four fault classes, each driven by its own
+:class:`repro.runtime.fault_tolerance.FailureInjector` so training and
+serving share one injection vocabulary (scheduled steps + seeded-hash
+chaos, reproducible across runs):
+
+  * **straggler** — the batch's service time is multiplied by
+    ``straggler_factor`` (a congested fabric link slowing one collective).
+    The batch still *succeeds*; only the virtual clock suffers.
+  * **transient** — ``run_batch`` raises :class:`TransientServingFailure`
+    (a device error / dropped RPC).  ``transient_runs`` > 1 makes the
+    failure persist across that many consecutive attempts, which is how
+    tests drive a burst past the retry budget and into the circuit
+    breaker.
+  * **stall** — maintenance (``observe``/``replan``) takes ``stall_s``
+    extra seconds (a fabric-switch firmware pause landing on the
+    maintenance path).
+  * **corruption** — the *data plane* is poisoned: some ids pushed out of
+    range (``corrupt_oob``; the device gather would clamp them silently —
+    ``validate_ids`` exists to catch exactly this) or dense rows set to
+    NaN (``corrupt_nan``; the score scrub in ``ServeBinding`` catches the
+    fallout).  Corruption copies the batch first — a retry of the same
+    micro-batch sees the *original* data, matching a re-read from the
+    (healthy) feature store.
+
+Every ``run_batch`` *attempt* advances the fault step, so a retried batch
+re-rolls the dice rather than deterministically re-failing forever.
+
+``corrupt_store`` poisons the engine's replicated hot tier in place (NaN
+rows) — the stand-in for a corrupted memory page — which only
+``ServeBinding.restore()`` (reload from the checkpointer) heals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.fault_tolerance import FailureInjector, SimulatedFailure
+
+
+class TransientServingFailure(SimulatedFailure):
+    """A retryable serving-path failure (transient device/RPC error)."""
+
+
+# distinct per-class seed salts so one FaultConfig.seed yields independent
+# (but individually reproducible) schedules per fault class
+_SALTS = {"straggler": 0x57A6, "transient": 0x7EA4, "stall": 0x57A1,
+          "corrupt_oob": 0x00B0, "corrupt_nan": 0x0A17}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-class fire schedules: explicit steps and/or chaos probability.
+
+    ``*_at`` steps index run_batch *attempts* (for straggler / transient /
+    corruption) or maintenance calls (for stall), starting at 0 and
+    counting warmup executions too if the wrapper is installed before
+    warmup — install it after warmup (the usual pattern) to keep warmup
+    deterministic and fault-free.
+    """
+    seed: int = 0
+    straggler_prob: float = 0.0
+    straggler_at: Tuple[int, ...] = ()
+    straggler_factor: float = 8.0
+    transient_prob: float = 0.0
+    transient_at: Tuple[int, ...] = ()
+    transient_runs: int = 1          # consecutive failing attempts per firing
+    stall_prob: float = 0.0
+    stall_at: Tuple[int, ...] = ()
+    stall_s: float = 0.25
+    corrupt_oob_prob: float = 0.0
+    corrupt_oob_at: Tuple[int, ...] = ()
+    corrupt_nan_prob: float = 0.0
+    corrupt_nan_at: Tuple[int, ...] = ()
+
+    def injectors(self) -> Dict[str, FailureInjector]:
+        def inj(name: str, prob: float, at: Tuple[int, ...]):
+            return FailureInjector(fail_at_steps=tuple(at), fail_prob=prob,
+                                   seed=hash((self.seed, _SALTS[name])))
+        return {
+            "straggler": inj("straggler", self.straggler_prob,
+                             self.straggler_at),
+            "transient": inj("transient", self.transient_prob,
+                             self.transient_at),
+            "stall": inj("stall", self.stall_prob, self.stall_at),
+            "corrupt_oob": inj("corrupt_oob", self.corrupt_oob_prob,
+                               self.corrupt_oob_at),
+            "corrupt_nan": inj("corrupt_nan", self.corrupt_nan_prob,
+                               self.corrupt_nan_at),
+        }
+
+
+class FaultInjectingExecutor:
+    """Wraps an executor, injecting the :class:`FaultConfig` fault classes.
+
+    Duck-types the executor protocol (``run_batch``/``observe``/
+    ``replan``) so the runtime, retry loop, and benchmarks cannot tell it
+    from the real thing.  ``fired`` counts injections per class;
+    ``corrupted_batches`` remembers which attempt steps carried poisoned
+    data (tests assert the scrub caught exactly those).
+    """
+
+    def __init__(self, inner, cfg: FaultConfig,
+                 idx_key: Optional[str] = "indices",
+                 dense_key: Optional[str] = "dense",
+                 oob_id: int = 2 ** 31 - 2):
+        self.inner = inner
+        self.cfg = cfg
+        self.idx_key = idx_key
+        self.dense_key = dense_key
+        self.oob_id = oob_id
+        self._inj = cfg.injectors()
+        self._step = 0           # run_batch attempts
+        self._mstep = 0          # maintenance calls (observe + replan)
+        self._transient_left = 0
+        self.fired: Dict[str, int] = {k: 0 for k in self._inj}
+        self.corrupted_batches: list = []
+
+    # ------------------------------------------------------------- helpers
+    def _fire(self, name: str, step: int) -> bool:
+        if self._inj[name].fires(step):
+            self.fired[name] += 1
+            return True
+        return False
+
+    def _corrupt(self, step: int, batch: dict) -> dict:
+        """Return a (possibly) corrupted shallow copy; never mutate the
+        caller's batch — a retry must see the original data."""
+        oob = (self.idx_key and self.idx_key in batch
+               and self._fire("corrupt_oob", step))
+        nan = (self.dense_key and self.dense_key in batch
+               and self._fire("corrupt_nan", step))
+        if not (oob or nan):
+            return batch
+        rng = np.random.default_rng([self.cfg.seed & 0x7FFFFFFF, step])
+        batch = dict(batch)
+        if oob:
+            idx = np.array(batch[self.idx_key], copy=True)
+            flat = idx.reshape(-1)
+            k = max(1, flat.size // 64)
+            pos = rng.choice(flat.size, size=k, replace=False)
+            flat[pos] = self.oob_id
+            batch[self.idx_key] = idx
+        if nan:
+            dense = np.array(batch[self.dense_key], copy=True,
+                             dtype=np.float32)
+            rows = rng.choice(dense.shape[0],
+                              size=max(1, dense.shape[0] // 8),
+                              replace=False)
+            dense[rows] = np.nan
+            batch[self.dense_key] = dense
+        self.corrupted_batches.append(step)
+        return batch
+
+    # ------------------------------------------------ executor protocol
+    def run_batch(self, bucket, batch) -> float:
+        step = self._step
+        self._step += 1
+        if self._transient_left > 0:
+            self._transient_left -= 1
+            self.fired["transient"] += 1
+            raise TransientServingFailure(
+                f"injected transient failure (burst) at attempt {step}")
+        if self._fire("transient", step):
+            self._transient_left = self.cfg.transient_runs - 1
+            raise TransientServingFailure(
+                f"injected transient failure at attempt {step}")
+        batch = self._corrupt(step, batch)
+        svc = self.inner.run_batch(bucket, batch)
+        if self._fire("straggler", step):
+            svc *= self.cfg.straggler_factor
+        return svc
+
+    def observe(self, batch) -> float:
+        dt = self.inner.observe(batch)
+        step = self._mstep
+        self._mstep += 1
+        if self._fire("stall", step):
+            dt += self.cfg.stall_s
+        return dt
+
+    def replan(self) -> float:
+        dt = self.inner.replan()
+        step = self._mstep
+        self._mstep += 1
+        if self._fire("stall", step):
+            dt += self.cfg.stall_s
+        return dt
+
+    def report(self) -> Dict[str, int]:
+        return dict(self.fired)
+
+
+def corrupt_store(binding, frac: float = 0.25, seed: int = 0) -> int:
+    """Scribble NaNs over a fraction of the binding's replicated hot tier
+    (the stand-in for a corrupted fabric-attached memory page).  Returns
+    the number of poisoned rows.  Only ``binding.restore()`` (reload from
+    the checkpointer) heals this — lookups hitting poisoned rows produce
+    non-finite scores that the scrub then catches."""
+    import dataclasses as _dc
+
+    import jax
+
+    hot = np.array(binding.state.hot, copy=True)
+    n = max(1, int(hot.shape[0] * frac))
+    rng = np.random.default_rng(seed)
+    rows = rng.choice(hot.shape[0], size=n, replace=False)
+    hot[rows] = np.nan
+    sh = binding.engine.state_shardings().hot
+    binding.state = _dc.replace(
+        binding.state, hot=jax.device_put(hot.astype(np.float32), sh))
+    return n

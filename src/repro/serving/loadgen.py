@@ -65,7 +65,10 @@ class LoadConfig:
 def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                block_l: int = 8, hot_fraction: float = 0.05,
                seed: int = 0, storage: str = "fp32",
-               dedup: str = "off", front_end: str = "split") -> ServeBinding:
+               dedup: str = "off", front_end: str = "split",
+               degraded_variants: bool = False,
+               validate_ids: bool = False,
+               scrub_scores: bool = False) -> ServeBinding:
     """Build engine + params + jitted serve step for a DLRM or Rec config.
 
     ``storage`` selects the engine's cold-tier format (fp32 passthrough or
@@ -77,8 +80,22 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
     interaction on replicated/dp-sharded meshes; bit-exact either way —
     Rec configs have no DLRM dot-interaction stage, so the knob is
     DLRM-only and ignored for them).
+
+    ``degraded_variants`` additionally builds the brown-out ladder's
+    serve-step variants (``repro.serving.degradation.RUNGS``) as separate
+    jitted executables sharing the engine/params/state — the degradation
+    controller switches between them via ``binding.set_mode`` without
+    retracing (each variant is warmed per bucket by the caller).  DLRM
+    rungs: split_fe (split front end, bit-exact), no_dedup (split + dedup
+    off, bit-exact), hot_only (hot-tier-only lookups, cold rows
+    zero-filled — scores change), shed (same datapath as hot_only; the
+    controller also tightens admission).  Rec configs have no DLRM front
+    end or tiers knob, so split_fe aliases full and hot_only/shed alias
+    no_dedup.  ``validate_ids``/``scrub_scores`` arm the binding's
+    host-side guardrails (OOB-id raise, NaN/Inf score scrub).
     """
     k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
+    steps = None
     if isinstance(cfg, DLRMConfig):
         engine, _ = dlrm_mod.build_engine(cfg, mesh,
                                           hot_fraction=hot_fraction,
@@ -88,6 +105,19 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
             cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l,
             dedup=dedup, front_end=front_end))
         idx_key = "indices"
+        if degraded_variants:
+            def dlrm_step(**kw):
+                return jax.jit(dlrm_mod.make_serve_step(
+                    cfg, engine, mesh, mode=mode, impl=impl,
+                    block_l=block_l, **kw))
+            hot_only = dlrm_step(dedup="off", front_end="split",
+                                 tiers="hot_only")
+            steps = {
+                "split_fe": dlrm_step(dedup=dedup, front_end="split"),
+                "no_dedup": dlrm_step(dedup="off", front_end="split"),
+                "hot_only": hot_only,
+                "shed": hot_only,
+            }
     elif isinstance(cfg, RecConfig):
         engine, offs = rec_mod.build_engine(cfg, mesh,
                                             hot_fraction=hot_fraction,
@@ -97,10 +127,18 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
             cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l,
             dedup=dedup))
         idx_key = None     # field ids are table-local; profiler stays off
+        if degraded_variants:
+            no_dedup = jax.jit(rec_mod.make_serve_step(
+                cfg, engine, offs, mesh, mode=mode, impl=impl,
+                block_l=block_l, dedup="off"))
+            steps = {"split_fe": step, "no_dedup": no_dedup,
+                     "hot_only": no_dedup, "shed": no_dedup}
     else:
         raise TypeError(f"unsupported serving config {type(cfg)}")
     state = engine.init_state(k_state)
-    return ServeBinding(engine, state, params, step, idx_key=idx_key)
+    return ServeBinding(engine, state, params, step, idx_key=idx_key,
+                        steps=steps, validate_ids=validate_ids,
+                        scrub_scores=scrub_scores)
 
 
 def make_padder(cfg) -> Callable[[Sequence[Request], Bucket], dict]:
@@ -274,10 +312,12 @@ def prime_dedup_auto(binding: ServeBinding, requests: Sequence[Request],
         # the engine's lookup plans are built while *tracing* the outer
         # jitted serve step — once that step is compiled, the engine layer
         # is bypassed entirely, so its cleared registry would never
-        # repopulate: drop the outer executable too, forcing the re-warmup
-        # to re-trace through engine.lookup against the primed histogram
-        if hasattr(binding.step, "clear_cache"):
-            binding.step.clear_cache()
+        # repopulate: drop the outer executables too (every ladder-rung
+        # variant, not just the active one), forcing the re-warmup to
+        # re-trace through engine.lookup against the primed histogram
+        for s in {id(v): v for v in binding.steps.values()}.values():
+            if hasattr(s, "clear_cache"):
+                s.clear_cache()
         binding.dedup_stats.clear()
     return seen
 

@@ -27,8 +27,14 @@ class LatencyHistogram:
                                     n_bins + 1)
         self.counts = np.zeros(n_bins, dtype=np.int64)
         self._raw_ms: List[float] = []
+        self.nonfinite = 0
 
     def record(self, seconds: float) -> None:
+        if not np.isfinite(seconds):
+            # NaN/Inf samples (a request that never started, a poisoned
+            # clock) must not poison the percentiles — count, don't record
+            self.nonfinite += 1
+            return
         ms = seconds * 1e3
         self._raw_ms.append(ms)
         b = int(np.searchsorted(self.edges_ms, ms, side="right") - 1)
@@ -83,6 +89,10 @@ class ServingMetrics:
         self.served = 0
         self.slo_violations = 0
         self.dropped = 0
+        self.failed = 0            # retry budget exhausted / breaker open
+        self.failed_fast = 0       # subset of failed: rejected by open breaker
+        self.retries = 0           # extra run_batch attempts that succeeded
+                                   # a request (set by the runtime)
         self.maintenance_s: Dict[str, float] = {}
         self.maintenance_calls: Dict[str, int] = {}
         self.first_arrival_s: Optional[float] = None
@@ -107,14 +117,36 @@ class ServingMetrics:
     def record_drop(self, req: Request) -> None:
         self.dropped += 1
 
+    def record_failure(self, req: Request, fast: bool = False) -> None:
+        """A request whose retry budget was exhausted (or that an open
+        circuit breaker failed fast).  Counted exactly once: failed
+        requests never pass through ``record_request``, they contribute
+        one SLO violation here, and availability/goodput treat them as
+        unserved."""
+        self.failed += 1
+        if fast:
+            self.failed_fast += 1
+        self.slo_violations += 1
+        if self.first_arrival_s is None or req.arrival_s < self.first_arrival_s:
+            self.first_arrival_s = req.arrival_s
+        if np.isfinite(req.finish_s):
+            self.last_finish_s = max(self.last_finish_s, req.finish_s)
+
     def record_maintenance(self, kind: str, seconds: float) -> None:
         self.maintenance_s[kind] = self.maintenance_s.get(kind, 0.0) + seconds
         self.maintenance_calls[kind] = self.maintenance_calls.get(kind, 0) + 1
 
     # ------------------------------------------------------------- summary
     def summary(self) -> Dict[str, object]:
-        makespan = (self.last_finish_s - (self.first_arrival_s or 0.0)
-                    ) or float("nan")
+        # guard the degenerate windows the fault bench hits: an all-shed
+        # regime serves nothing (no first arrival, zero duration) and a
+        # fail-everything regime can finish at its only arrival instant —
+        # every rate below must stay finite (0.0), never divide by zero
+        makespan = self.last_finish_s - (self.first_arrival_s or 0.0)
+        if not np.isfinite(makespan) or makespan <= 0.0:
+            makespan = float("nan")
+        completed = self.served + self.failed     # everything not shed
+        good = completed - self.slo_violations    # served inside SLO
         occ = [b.occupancy for b in self.batches]
         depth = [b.queue_depth for b in self.batches]
         bucket_mix: Dict[str, int] = {}
@@ -124,10 +156,15 @@ class ServingMetrics:
         out: Dict[str, object] = {
             "served": self.served,
             "dropped": self.dropped,
+            "failed": self.failed,
+            "failed_fast": self.failed_fast,
+            "retries": self.retries,
             "batches": len(self.batches),
             "qps": self.served / makespan if makespan == makespan else 0.0,
-            "slo_violation_rate": (self.slo_violations / self.served
-                                   if self.served else 0.0),
+            "goodput_qps": (good / makespan if makespan == makespan else 0.0),
+            "availability": (self.served / completed if completed else 1.0),
+            "slo_violation_rate": (self.slo_violations / completed
+                                   if completed else 0.0),
             "batch_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             "queue_depth_mean": float(np.mean(depth)) if depth else 0.0,
             "queue_depth_max": int(np.max(depth)) if depth else 0,

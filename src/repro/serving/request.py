@@ -35,6 +35,7 @@ class Request:
     user: int = -1                    # closed-loop: issuing virtual user
     start_s: float = math.nan         # set by the runtime at flush
     finish_s: float = math.nan        # set by the runtime at batch completion
+    failed: bool = False              # retry budget exhausted / breaker open
 
     @property
     def latency_s(self) -> float:
@@ -46,7 +47,7 @@ class Request:
 
     @property
     def slo_ok(self) -> bool:
-        return self.finish_s <= self.deadline_s
+        return not self.failed and self.finish_s <= self.deadline_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +126,15 @@ class AdmissionQueue:
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def set_capacity(self, capacity: int) -> None:
+        """Resize the bound (the brown-out ladder's shed rung tightens it).
+
+        Already-admitted requests are never evicted — shrinking only
+        affects future ``offer`` calls, so accounting stays monotonic."""
+        if capacity <= 0:
+            raise ValueError("queue capacity must be positive")
+        self.capacity = capacity
 
     def offer(self, req: Request) -> bool:
         self.offered += 1

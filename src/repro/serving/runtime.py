@@ -155,7 +155,8 @@ class ServingRuntime:
     def __init__(self, executor, batcher,
                  padder: Callable[[Sequence[Request], Bucket], dict],
                  cfg: RuntimeConfig = RuntimeConfig(),
-                 service_model: Optional[ServiceModel] = None):
+                 service_model: Optional[ServiceModel] = None,
+                 controller=None):
         self.executor = executor
         self.batcher = batcher
         self.padder = padder
@@ -163,6 +164,10 @@ class ServingRuntime:
         self.service_model = service_model or ServiceModel()
         self.metrics = ServingMetrics()
         self.n_batches = 0
+        # optional repro.serving.degradation.DegradationController: retry /
+        # circuit-breaker / brown-out policy around every executor call
+        self.controller = controller
+        self.failed_batches = 0
 
     # ----------------------------------------------------------- warmup
     def warmup(self, request_factory: Callable[[int, int], Request],
@@ -189,10 +194,51 @@ class ServingRuntime:
             self.executor.replan()
         return times
 
+    # ----------------------------------------------------- fault policy
+    def _attempt(self, bucket, batch, now: float):
+        """One micro-batch under the controller's retry policy.
+
+        Returns ``(service_s, backoff_delay_s)``; ``service_s`` is None
+        when the retry budget is exhausted.  Backoff consumes *virtual*
+        time (it lands in the requests' latency, not in the service
+        model's estimate)."""
+        ctrl = self.controller
+        if ctrl is None:
+            return self.executor.run_batch(bucket, batch), 0.0
+        delay, failures = 0.0, 0
+        while True:
+            try:
+                return self.executor.run_batch(bucket, batch), delay
+            except ctrl.retryable:
+                failures += 1
+                ctrl.on_attempt_failure(now + delay)
+                if failures >= ctrl.retry.max_attempts:
+                    return None, delay
+                self.metrics.retries += 1
+                delay += ctrl.retry.backoff(failures)
+
+    def _fail_batch(self, reqs, start: float, finish: float, source, heap,
+                    seq, fast: bool) -> None:
+        """Mark a whole micro-batch failed (retry-exhausted or breaker
+        fail-fast): each request is counted exactly once in SLO metrics,
+        and closed-loop users are released so load generation survives."""
+        self.failed_batches += 1
+        for r in reqs:
+            r.start_s = start
+            r.finish_s = finish
+            r.failed = True
+            self.metrics.record_failure(r, fast=fast)
+        for r in reqs:
+            for nr in source.on_complete(r, finish):
+                heapq.heappush(heap, (nr.arrival_s, next(seq), nr))
+
     # -------------------------------------------------------------- run
     def run(self, source) -> Dict[str, object]:
         cfg = self.cfg
+        ctrl = self.controller
         queue = AdmissionQueue(cfg.queue_capacity)
+        if ctrl is not None:
+            ctrl.bind_queue(queue)
         seq = itertools.count()
         heap: List = []
         for r in source.initial():
@@ -227,9 +273,23 @@ class ServingRuntime:
             assert isinstance(decision, Flush)
             reqs = queue.pop_n(decision.count)
             batch = self.padder(reqs, decision.bucket)
-            svc = self.executor.run_batch(decision.bucket, batch)
+            if ctrl is not None and not ctrl.allow_execute(now):
+                # breaker open: fail fast without touching the executor —
+                # the clock re-advances via the arrival stream
+                self._fail_batch(reqs, now, now, source, heap, seq,
+                                 fast=True)
+                ctrl.on_batch_done(now, ok=False)
+                continue
+            svc, delay = self._attempt(decision.bucket, batch, now)
+            if svc is None:                      # retry budget exhausted
+                finish = now + delay
+                self._fail_batch(reqs, now, finish, source, heap, seq,
+                                 fast=False)
+                ctrl.on_batch_done(finish, ok=False)
+                now = finish
+                continue
             self.service_model.update(decision.bucket, svc)
-            finish = now + svc
+            finish = now + delay + svc
             self.n_batches += 1
             if cfg.observe_every and self.n_batches % cfg.observe_every == 0:
                 dt = self.executor.observe(batch)
@@ -251,6 +311,20 @@ class ServingRuntime:
                 for nr in source.on_complete(r, finish):
                     heapq.heappush(heap, (nr.arrival_s, next(seq), nr))
             now = finish
+            if ctrl is not None:
+                poisoned = (ctrl.binding.last_poisoned
+                            if ctrl.binding is not None else 0)
+                ctrl.on_batch_done(finish, ok=True, poisoned=poisoned)
+                if ctrl.wants_restore:
+                    # corrupted store: heal between micro-batches on the
+                    # maintenance seam (checkpoint reload, no retrace)
+                    t0 = time.perf_counter()
+                    ctrl.binding.restore()
+                    dt = time.perf_counter() - t0
+                    self.metrics.record_maintenance("restore", dt)
+                    ctrl.note_restored()
+                    if cfg.account_maintenance:
+                        now += dt
             if self.n_batches >= cfg.max_batches:
                 break
 
@@ -260,4 +334,7 @@ class ServingRuntime:
         # summary()'s depth stats are post-pop snapshots at flush time; the
         # queue itself tracks the true admission-time peak
         s["queue_depth_max"] = queue.peak_depth
+        s["failed_batches"] = self.failed_batches
+        if ctrl is not None:
+            s["degradation"] = ctrl.report()
         return s

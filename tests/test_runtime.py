@@ -56,6 +56,20 @@ def test_checkpoint_ignores_partial_tmp(tmp_path):
     ck.restore(_state())  # must not raise
 
 
+def test_checkpoint_bitflip_corruption_detected_on_restore(tmp_path):
+    # flip one byte in a leaf's data region (past the .npy header, so
+    # shape/dtype still parse): the per-leaf CRC must catch it loudly
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    leaf = tmp_path / "step_000000000001" / "leaf_000000.npy"
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="checksum mismatch"):
+        ck.restore(_state())
+    ck.restore(_state(), validate=False)  # explicit opt-out still loads
+
+
 def test_checkpoint_structure_mismatch_raises(tmp_path):
     ck = Checkpointer(str(tmp_path))
     ck.save(1, _state(), blocking=True)
