@@ -33,7 +33,18 @@ controller with gates on availability, zero steady-state retraces, and
 recorded degradation/recovery transitions (EXPERIMENTS.md §Serving fault
 tolerance).
 
-Writes ``BENCH_serve.json`` (schema 3); schema documented in
+``--updates`` switches to the streaming-embedding-update regime: the same
+offered load served twice — once clean, once with a WAL-logged trainer
+delta stream drained between micro-batches on the background-maintenance
+seam (same accounting model as observe/replan).  Hard gates: updates
+never blow the service tail (measured p99 regression < 10 % vs the clean
+run at equal offered load), every drain's wall cost fits inside one SLO
+budget, zero steady-state retraces in both runs, staleness p99 bounded,
+and a mid-serving corrupt -> restore -> WAL-replay probe whose state AND
+lookups are bit-identical to the pre-corruption engine (EXPERIMENTS.md
+§Online embedding updates).
+
+Writes ``BENCH_serve.json`` (schema 4); schema documented in
 EXPERIMENTS.md §Serving.
 
 Service times are real measured device executions (interpret-mode caveat
@@ -58,6 +69,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
+from repro.checkpoint.wal import WriteAheadLog  # noqa: E402
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.distributed.sharding import make_mesh  # noqa: E402
 from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
@@ -67,14 +79,16 @@ from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
                            FaultInjectingExecutor, FixedBatcher,
                            LadderConfig, LoadConfig, OpenLoopSource,
                            RuntimeConfig, ServiceModel, ServingRuntime,
-                           bind_model, corrupt_store, dummy_request_factory,
-                           make_padder, prime_dedup_auto, request_stream)
+                           StreamingUpdater, UpdateConfig, bind_model,
+                           corrupt_store, dummy_request_factory,
+                           make_padder, prime_dedup_auto, request_stream,
+                           update_stream)
 
 
-def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
+def run_policy(binding, cfg, batcher, load, runtime_cfg, updater=None) -> dict:
     """One (policy, arrival-stream) serving run over a warmed binding."""
     runtime = ServingRuntime(BindingExecutor(binding), batcher,
-                             make_padder(cfg), runtime_cfg)
+                             make_padder(cfg), runtime_cfg, updater=updater)
     runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
     # ^ no-op cost once plans warm
     reqs = request_stream(cfg, load)
@@ -82,6 +96,8 @@ def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
         # 'auto' freezes per bucket at plan build — rebuild the buckets
         # against a histogram primed with the live stream's prefix
         runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
+    if updater is not None:
+        updater.warmup()   # compile the apply plan before steady state
     binding.reset_plan_stats()
     warm_replans = binding.replans
     binding.dedup_stats.clear()
@@ -96,7 +112,7 @@ def run_policy(binding, cfg, batcher, load, runtime_cfg) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# Fault regimes (--faults): chaos-hardened serving, schema 3
+# Fault regimes (--faults): chaos-hardened serving
 # ---------------------------------------------------------------------------
 
 # one regime per injected fault class (ISSUE: straggler, transient executor
@@ -233,6 +249,164 @@ def run_fault_section(binding, cfg, bat_cfg, runtime_cfg, svc_model,
     return runs
 
 
+# ---------------------------------------------------------------------------
+# Streaming-update regime (--updates): serving-concurrent embedding updates
+# ---------------------------------------------------------------------------
+
+
+def _state_leaves(binding):
+    st = binding.state
+    return [np.asarray(jax.device_get(x))
+            for x in (st.cold, st.hot, st.page_scales,
+                      st.page_to_shard, st.page_to_slot)]
+
+
+def run_update_section(binding, cfg, bat_cfg, runtime_cfg, n_requests,
+                       capacity_qps, slo_ms, svc_max, storage, dedup,
+                       update_batch, ckpt_dir) -> dict:
+    """Clean run vs updates run at the same offered load, then the
+    mid-serving recovery probe.
+
+    Updates drain on the maintenance seam under the same background-
+    stream model as observe/replan (``account_maintenance=False``, the
+    bench-wide convention — on CPU containers the ~ms jit-dispatch floor
+    of a single apply would otherwise swamp the virtual-clock tail).
+    The cost is still gated twice: the measured service p99 of the
+    updates run must stay within 10 % of the clean run at equal offered
+    load (dispatch interference is real wall time in both runs), and
+    every drain's wall cost must fit inside one SLO budget — the slack a
+    real deployment has between micro-batches."""
+    rt_cfg = runtime_cfg
+    arrival = ArrivalConfig(rate_qps=0.3 * capacity_qps, process="poisson",
+                            seed=7)
+    load = LoadConfig(n_requests=n_requests, arrival=arrival, slo_ms=slo_ms,
+                      seed=7, storage=storage, dedup=dedup)
+    base = run_policy(binding, cfg, DynamicBatcher(bat_cfg), load, rt_cfg)
+
+    # trainer stream: one update_batch roughly every two service times —
+    # a stiff but sub-saturating delta rate relative to engine capacity
+    update_qps = 0.5 * update_batch / svc_max
+    upd_load = dataclasses.replace(load, update_qps=update_qps,
+                                   update_batch=update_batch)
+    wal = WriteAheadLog(os.path.join(ckpt_dir, "updates.wal"))
+    ucfg = UpdateConfig(capacity=2 * update_batch, drift_threshold=0.0,
+                        max_demotions=4)
+    updater = StreamingUpdater(binding, update_stream(cfg, upd_load), ucfg,
+                               wal=wal)
+    if binding.checkpointer is None:
+        binding.attach_checkpointer(Checkpointer(ckpt_dir), save_now=True)
+    upd = run_policy(binding, cfg, DynamicBatcher(bat_cfg), upd_load, rt_cfg,
+                     updater=updater)
+    upd["updates"] = updater.report()
+
+    print(f"[updates   ] base   p99={base['p99_ms']:8.2f} "
+          f"qps={base['qps']:8.1f} steady_traces={base['steady_traces']}")
+    st = upd.get("staleness", {})
+    print(f"[updates   ] stream p99={upd['p99_ms']:8.2f} "
+          f"qps={upd['qps']:8.1f} steady_traces={upd['steady_traces']} "
+          f"applied={upd['updates']['applied_batches']}/"
+          f"{upd['updates']['generated_batches']} batches "
+          f"stale_rows_p99={st.get('rows_behind_p99', 0.0):.1f} "
+          f"stale_s_p99={st.get('seconds_behind_p99', 0.0):.4f}")
+
+    # ---- gates: the update stream must be invisible to the service tail
+    for name, r in (("base", base), ("updates", upd)):
+        if r["steady_traces"]:
+            raise AssertionError(
+                f"plan cache failed under updates: steady-state retrace "
+                f"in the {name} run")
+    if not upd["updates"]["applied_batches"]:
+        raise AssertionError("update regime applied no delta batches")
+    p99_gate = 1.10 * base["p99_ms"]
+    if upd["p99_ms"] >= p99_gate:
+        raise AssertionError(
+            f"updates blew the service tail: p99 {upd['p99_ms']:.2f} ms "
+            f">= 1.10 x clean-run p99 ({base['p99_ms']:.2f} ms) at equal "
+            f"offered load")
+    # per-drain cost must fit in one SLO budget (the inter-batch slack a
+    # real deployment hides background maintenance in)
+    drain_s = upd["maintenance_s"].get("updates", 0.0)
+    drain_calls = upd["maintenance_calls"].get("updates", 0)
+    drain_mean_s = drain_s / drain_calls if drain_calls else 0.0
+    if drain_mean_s >= slo_ms * 1e-3:
+        raise AssertionError(
+            f"update drains do not fit the maintenance slack: mean "
+            f"{drain_mean_s * 1e3:.2f} ms per drain >= slo {slo_ms:.1f} ms")
+    # staleness SLO: the stream must never fall more than ~4 SLO budgets
+    # behind (seconds), nor hold more unapplied rows than the stream can
+    # emit in that window (+2 batches of draining slack)
+    slo_s = slo_ms * 1e-3
+    if not st:
+        raise AssertionError("update run recorded no staleness samples")
+    if st["seconds_behind_p99"] > 4.0 * slo_s:
+        raise AssertionError(
+            f"staleness SLO failed: seconds_behind_p99 "
+            f"{st['seconds_behind_p99']:.4f} > {4.0 * slo_s:.4f}")
+    rows_bound = update_qps * 4.0 * slo_s + 2.0 * update_batch
+    if st["rows_behind_p99"] > rows_bound:
+        raise AssertionError(
+            f"staleness SLO failed: rows_behind_p99 "
+            f"{st['rows_behind_p99']:.1f} > {rows_bound:.1f}")
+
+    # ---- recovery probe: drain the tail of the stream, force one
+    # requant-demote scan (drift_threshold=0 guarantees candidates exist
+    # when any traffic-cold hot page drifted; the demote fences itself
+    # with a WAL-truncating snapshot), apply what remains, then corrupt
+    # the store and restore: snapshot + WAL replay must reproduce the
+    # live state bit-for-bit, lookups included
+    updater.drain()
+    demoted = updater.requant_demote()
+    # the demote fenced with a snapshot (truncating the WAL) — land one
+    # more logged delta batch past it, so restore must actually *replay*
+    # rather than just reload the snapshot
+    rng = np.random.default_rng(11)
+    tail_rows = rng.integers(0, binding.engine.cfg.total_rows,
+                             size=update_batch).astype(np.int64)
+    tail_deltas = (1e-3 * rng.standard_normal(
+        (update_batch, binding.engine.cfg.dim))).astype(np.float32)
+    binding.apply_deltas(tail_rows, tail_deltas)
+    if not len(wal):
+        raise AssertionError("recovery probe expected a non-empty WAL")
+    factory = dummy_request_factory(cfg, storage=storage)
+    probe_bucket = Bucket(bat_cfg.batch_sizes[-1], bat_cfg.poolings[-1])
+    probe = make_padder(cfg)(
+        [factory(i, probe_bucket.pooling)
+         for i in range(probe_bucket.batch)], probe_bucket)
+    before_scores = np.asarray(jax.device_get(binding.execute(probe)))
+    before_leaves = _state_leaves(binding)
+    corrupt_store(binding, frac=0.5, seed=5)
+    binding.restore()
+    after_leaves = _state_leaves(binding)
+    after_scores = np.asarray(jax.device_get(binding.execute(probe)))
+    leaves_ok = all(a.dtype == b.dtype and (a == b).all()
+                    for a, b in zip(before_leaves, after_leaves))
+    scores_ok = (before_scores == after_scores).all()
+    print(f"[updates   ] recovery demoted={demoted} "
+          f"wal_replayed_state_identical={bool(leaves_ok)} "
+          f"lookups_identical={bool(scores_ok)}")
+    if not leaves_ok:
+        raise AssertionError(
+            "mid-serving restore + WAL replay did not reproduce the "
+            "engine state bit-for-bit")
+    if not scores_ok:
+        raise AssertionError(
+            "mid-serving restore + WAL replay changed lookup results")
+
+    return {
+        "offered_qps": 0.3 * capacity_qps,
+        "update_qps": update_qps,
+        "update_batch": update_batch,
+        "p99_gate_ms": p99_gate,
+        "drain_mean_ms": drain_mean_s * 1e3,
+        "staleness_rows_bound": rows_bound,
+        "staleness_seconds_bound": 4.0 * slo_s,
+        "demoted_pages_post_run": demoted,
+        "recovery_bit_identical": bool(leaves_ok and scores_ok),
+        "base": base,
+        "updates": upd,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -261,7 +435,16 @@ def main() -> None:
                     help="run the fault-injection regimes (straggler, "
                          "transient, corrupt data/store, forced brown-out) "
                          "instead of the policy-comparison regimes")
+    ap.add_argument("--updates", action="store_true",
+                    help="run the streaming-embedding-update regime (clean "
+                         "vs update-stream runs at equal offered load, "
+                         "staleness SLOs, WAL-replay recovery probe) "
+                         "instead of the policy-comparison regimes")
+    ap.add_argument("--update-batch", type=int, default=32,
+                    help="rows per trainer-emitted delta batch (--updates)")
     args = ap.parse_args()
+    if args.faults and args.updates:
+        ap.error("--faults and --updates are mutually exclusive sections")
 
     cfg = reduced(get_config(args.arch))
     mesh = make_mesh((2, 4), ("data", "model"))
@@ -353,7 +536,7 @@ def main() -> None:
                 tempfile.mkdtemp(prefix="serve_bench_ckpt_"))
             out = {
                 "bench": "serve",
-                "schema": 3,
+                "schema": 4,
                 "section": "faults",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -368,6 +551,38 @@ def main() -> None:
                 "fault_runs": {k: {kk: vv for kk, vv in v.items()
                                    if kk != "latency_hist"}
                                for k, v in runs.items()},
+            }
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"\nwrote {args.out}")
+            return
+
+        if args.updates:
+            import tempfile
+            bat_cfg_u = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
+            section = run_update_section(
+                binding, cfg, bat_cfg_u, runtime_cfg, n_requests,
+                capacity_qps, slo_ms, svc_max, args.storage, args.dedup,
+                args.update_batch,
+                tempfile.mkdtemp(prefix="serve_bench_upd_"))
+            for leg in ("base", "updates"):
+                section[leg] = {k: v for k, v in section[leg].items()
+                                if k != "latency_hist"}
+            out = {
+                "bench": "serve",
+                "schema": 4,
+                "section": "updates",
+                "backend": jax.default_backend(),
+                "interpret_mode": jax.default_backend() != "tpu",
+                "jax_version": jax.__version__,
+                "platform": platform.platform(),
+                "mesh": {"data": 2, "model": 4},
+                "arch": args.arch, "mode": args.mode, "impl": args.impl,
+                "block_l": args.block_l, "storage": args.storage,
+                "dedup": args.dedup,
+                "capacity_qps": capacity_qps, "slo_ms": slo_ms,
+                "n_requests": n_requests,
+                "update_run": section,
             }
             with open(args.out, "w") as f:
                 json.dump(out, f, indent=2)
@@ -426,7 +641,7 @@ def main() -> None:
 
     out = {
         "bench": "serve",
-        "schema": 3,
+        "schema": 4,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,

@@ -66,12 +66,17 @@ class Checkpointer:
         self._lock = threading.Lock()
 
     # ----------------------------------------------------------------- save
-    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
-        """Snapshot now, write in background (or synchronously)."""
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot now, write in background (or synchronously).
+
+        ``extra`` is a small JSON-serializable dict stored in the manifest
+        (e.g. the serving WAL's last-applied update sequence number, the
+        cut point replay resumes from)."""
         flat = {k: np.asarray(jax.device_get(v))
                 for k, v in _flatten(tree).items()}
         self.wait()  # one outstanding write at a time
-        t = threading.Thread(target=self._write, args=(step, flat),
+        t = threading.Thread(target=self._write, args=(step, flat, extra),
                              daemon=True)
         t.start()
         self._pending = t
@@ -83,13 +88,15 @@ class Checkpointer:
             self._pending.join()
             self._pending = None
 
-    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               extra: Optional[Dict[str, Any]] = None) -> None:
         tmp = os.path.join(self.dir, f"step_{step:012d}.tmp")
         final = os.path.join(self.dir, f"step_{step:012d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "leaves": {}, "time": time.time()}
+        manifest = {"step": step, "leaves": {}, "time": time.time(),
+                    "extra": dict(extra or {})}
         for i, (key, arr) in enumerate(sorted(flat.items())):
             fname = f"leaf_{i:06d}.npy"
             np.save(os.path.join(tmp, fname), arr)
@@ -127,6 +134,16 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def extra(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The ``extra`` metadata dict of a committed checkpoint (latest by
+        default).  Pre-``extra`` manifests read as ``{}``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return dict(json.load(f).get("extra", {}))
 
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None, validate: bool = True) -> Any:

@@ -909,7 +909,8 @@ class PIFSEmbeddingEngine:
         new_state = self.migrate(state, new_table)
         return new_state, stats
 
-    def migrate(self, state: EngineState, new_table: PageTable) -> EngineState:
+    def migrate(self, state: EngineState, new_table: PageTable,
+                count_decay: float = 0.5) -> EngineState:
         """Execute a placement change: cache-line-granular gather (IV-B4).
 
         ``storage='int8'`` uses a typed gather: cold->cold moves int8 codes
@@ -919,6 +920,12 @@ class PIFSEmbeddingEngine:
         — which recovers the original codes bit-for-bit when the hot values
         came from an earlier promotion, so lookups are placement-invariant
         exactly in the quantized domain (property-tested).
+
+        ``count_decay`` scales the access histogram after the move (the
+        planner's EWMA).  Maintenance migrations that are not replans —
+        the update subsystem's requant-demotions — pass 1.0 so demoting a
+        drifted page never perturbs the hotness ranking the next real
+        replan sees.
         """
         c = self.cfg
         cold_src, hot_src = placement_gather_indices(
@@ -958,7 +965,7 @@ class PIFSEmbeddingEngine:
             cold=new_cold, hot=new_hot, page_scales=state.page_scales,
             page_to_shard=jnp.asarray(np.asarray(new_table.page_to_shard), jnp.int32),
             page_to_slot=jnp.asarray(np.asarray(new_table.page_to_slot), jnp.int32),
-            counts=state.counts * 0.5)  # decay after replan (EWMA)
+            counts=state.counts * count_decay)  # decay after replan (EWMA)
 
     def _migrate_quantized(self, state: EngineState, new_table: PageTable,
                            cold_src: np.ndarray, hot_src: np.ndarray):
@@ -1019,6 +1026,167 @@ class PIFSEmbeddingEngine:
 
         return self._migrate_plan(state.cold, state.hot, state.page_scales,
                                   *args)
+
+    # ------------------------------------------------------ streaming updates
+    def apply_deltas(self, state: EngineState, rows: jax.Array,
+                     deltas: jax.Array) -> EngineState:
+        """Apply a batch of per-row additive deltas to the live tables.
+
+        ``rows``: (U,) int32 global row ids, ``repro.core.updates.PAD_ROW``
+        (= -1) for pad entries; rows must be *unique* (callers coalesce
+        duplicates host-side — scatter-add ordering over duplicate targets
+        is unspecified, and WAL replay must be bit-identical).  ``deltas``:
+        (U, D) float32.
+
+        Tier semantics: a row resident in the replicated hot tier gets an
+        exact fp32 add; an fp32 cold row likewise; an int8 cold row is
+        updated *in the quantized domain* — dequantize with the page's
+        carried scale, add, re-quantize with the same scale — so the code
+        stays on the page's grid and a later migration still moves it
+        verbatim.  (Hot rows updated in fp32 drift off their page's grid;
+        that drift is what the requant-demote scheduler tracks.)  Pad
+        entries and rows gathered by non-owning shards are routed to an
+        out-of-bounds scatter target and dropped, so every device mutates
+        exactly the rows it owns and replicas stay identical — no
+        ``x + 0.0`` writes that could flip a ``-0.0``.
+
+        One compiled plan per (storage, U) signature, through the same
+        traced-counter wrapper as lookups: steady-state streaming updates
+        cause zero retraces and the retrace gates cover them.
+        """
+        if rows.ndim != 1 or deltas.ndim != 2 or deltas.shape[0] != rows.shape[0]:
+            raise ValueError(
+                f"rows must be (U,), deltas (U, D); got {rows.shape} / "
+                f"{deltas.shape}")
+        if deltas.shape[1] != self.cfg.dim:
+            raise ValueError(f"delta dim {deltas.shape[1]} != table dim "
+                             f"{self.cfg.dim}")
+        if not isinstance(rows, jax.core.Tracer):
+            r = np.asarray(rows)
+            if (r >= self.cfg.padded_rows).any():
+                bad = int(r[r >= self.cfg.padded_rows][0])
+                raise ValueError(
+                    f"apply_deltas: row id {bad} outside the padded address "
+                    f"space [0, {self.cfg.padded_rows})")
+        key = ("update", self.cfg.storage, int(rows.shape[0]),
+               jnp.dtype(rows.dtype).name, jnp.dtype(deltas.dtype).name)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._build_update_plan()
+            self._plans[key] = plan
+        self._plan_calls += 1
+        new_cold, new_hot = plan(state.cold, state.hot, state.page_scales,
+                                 state.page_to_shard, state.page_to_slot,
+                                 rows, deltas)
+        return dataclasses.replace(state, cold=new_cold, hot=new_hot)
+
+    def _build_update_plan(self):
+        """shard_map + jit closure for one apply_deltas signature."""
+        axes, mesh = self.axes, self.mesh
+        tp = axes.tp
+        c = self.cfg
+
+        def block(cold, hot, scales, p2s, p2slot, rows, deltas):
+            ps = c.page_size
+            valid = rows >= 0
+            r = jnp.where(valid, rows, 0)
+            page = r // ps
+            offset = r % ps
+            shard = p2s[page]
+            local = p2slot[page] * ps + offset                  # (U,)
+            my = jax.lax.axis_index(tp)
+            is_hot = valid & (shard == HOT_SHARD)
+            owned = valid & (shard == my)
+            # hot tier is replicated: every device applies the identical
+            # scatter-add; non-hot entries target row hot_rows (OOB, drop)
+            hot_tgt = jnp.where(is_hot, local, hot.shape[0])
+            new_hot = hot.at[hot_tgt].add(deltas.astype(hot.dtype),
+                                          mode="drop")
+            cold_tgt = jnp.where(owned, local, cold.shape[0])
+            if self.quantized:
+                # quantized-domain read-modify-write with the carried
+                # scale: gathered codes for unowned entries are garbage
+                # but their scatter target is OOB, so they drop out
+                scale = scales[page][:, None]                   # (U, 1)
+                q_old = jnp.take(cold, jnp.minimum(local, cold.shape[0] - 1),
+                                 axis=0)
+                v = quant.dequantize_rows(q_old, scale) + deltas
+                new_cold = cold.at[cold_tgt].set(
+                    quant.quantize_rows(v, scale), mode="drop")
+            else:
+                new_cold = cold.at[cold_tgt].add(
+                    deltas.astype(cold.dtype), mode="drop")
+            return new_cold, new_hot
+
+        f = shard_map(block, mesh=mesh,
+                      in_specs=(P(tp), P(), P(), P(), P(), P(), P()),
+                      out_specs=(P(tp), P()), check_vma=False)
+
+        def traced(*args):
+            self._trace_count += 1
+            return f(*args)
+
+        return jax.jit(traced)
+
+    def requant_hot_pages(self, state: EngineState, pages: jax.Array
+                          ) -> EngineState:
+        """Snap listed hot-resident pages back onto their carried-scale
+        quantized grid, in place (no migration).
+
+        ``pages``: (K,) int32 global page ids, -1 for pads.  Each listed
+        page's hot rows are replaced by ``dequantize(quantize(x, s), s)``
+        with the page's carried scale — exactly the value a demote-then-
+        promote round trip through the int8 cold tier would produce, in
+        one replicated scatter.  This is the "fused" form of requant-
+        demote for pages that should *stay* hot: after a snap, a later
+        planner demotion is bit-exact again (the idempotency property),
+        no matter how much the page drifted under streaming updates.
+
+        No-op for fp32 storage (there is no quantized domain to snap to).
+        Entries for pages not currently hot-resident are dropped.  One
+        compiled plan per K, through the traced counter."""
+        if not self.quantized:
+            return state
+        if pages.ndim != 1:
+            raise ValueError(f"pages must be (K,); got {pages.shape}")
+        key = ("requant", int(pages.shape[0]),
+               jnp.dtype(pages.dtype).name)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._build_requant_plan()
+            self._plans[key] = plan
+        self._plan_calls += 1
+        new_hot = plan(state.hot, state.page_scales, state.page_to_shard,
+                       state.page_to_slot, pages)
+        return dataclasses.replace(state, hot=new_hot)
+
+    def _build_requant_plan(self):
+        c = self.cfg
+
+        def block(hot, scales, p2s, p2slot, pages):
+            ps = c.page_size
+            valid = pages >= 0
+            pg = jnp.where(valid, pages, 0)
+            is_hot = valid & (p2s[pg] == HOT_SHARD)
+            rows = (p2slot[pg][:, None] * ps
+                    + jnp.arange(ps, dtype=pages.dtype)[None, :])   # (K, ps)
+            rows_flat = rows.reshape(-1)
+            take = jnp.take(hot, jnp.minimum(rows_flat, hot.shape[0] - 1),
+                            axis=0)                                 # (K*ps, D)
+            s = jnp.repeat(scales[pg], ps)[:, None]
+            snapped = quant.dequantize_rows(quant.quantize_rows(take, s), s)
+            tgt = jnp.where(jnp.repeat(is_hot, ps), rows_flat, hot.shape[0])
+            return hot.at[tgt].set(snapped, mode="drop")
+
+        f = shard_map(block, mesh=self.mesh,
+                      in_specs=(P(), P(), P(), P(), P()),
+                      out_specs=P(), check_vma=False)
+
+        def traced(*args):
+            self._trace_count += 1
+            return f(*args)
+
+        return jax.jit(traced)
 
 
 class ServeBinding:
@@ -1090,6 +1258,15 @@ class ServeBinding:
         self.checkpointer = None
         self.ckpt_step = 0
         self.restores = 0
+        # streaming updates: write-ahead log + fixed apply capacity (one
+        # plan signature) + applied-batch sequence number.  The WAL is the
+        # delta counterpart of the checkpointer: every applied batch is
+        # logged *before* it touches the device, snapshots record the
+        # sequence point and truncate, and restore() replays the suffix.
+        self.wal = None
+        self.update_capacity = 256
+        self.update_seq = 0          # seq of the last applied delta batch
+        self.updates_applied = 0     # total unique rows applied
 
     # ------------------------------------------------------------ variants
     def modes(self) -> tuple:
@@ -1138,11 +1315,19 @@ class ServeBinding:
 
     def snapshot(self) -> None:
         """Commit the current EngineState (blocking — callers sit on the
-        maintenance path, never the timed service path)."""
+        maintenance path, never the timed service path).
+
+        With a WAL attached the snapshot manifest records the last applied
+        update sequence number, then the WAL truncates: every logged delta
+        is already inside the committed state, so the log restarts empty
+        and restore-time replay never double-applies."""
         if self.checkpointer is None:
             raise RuntimeError("no checkpointer attached")
         self.ckpt_step += 1
-        self.checkpointer.save(self.ckpt_step, self.state, blocking=True)
+        self.checkpointer.save(self.ckpt_step, self.state, blocking=True,
+                               extra={"update_seq": self.update_seq})
+        if self.wal is not None:
+            self.wal.truncate()
 
     def restore(self) -> None:
         """Reload EngineState from the latest committed checkpoint (the
@@ -1150,12 +1335,76 @@ class ServeBinding:
         observe/replan seam).  Restored leaves have identical shapes,
         dtypes, and shardings, so no serve-step plan ever retraces; the
         checkpointer's per-leaf CRC check makes an on-disk corruption fail
-        loudly here rather than serve garbage."""
+        loudly here rather than serve garbage.
+
+        With a WAL attached, every delta batch logged *after* the
+        restored snapshot's sequence point is replayed through the same
+        coalesce + fixed-capacity apply path that ran live, so the healed
+        state is bit-identical to the uninterrupted one — a mid-serving
+        restore loses no updates."""
         if self.checkpointer is None:
             raise RuntimeError("no checkpointer attached")
         self.state = self.checkpointer.restore(
             self.state, shardings=self.engine.state_shardings())
         self.restores += 1
+        if self.wal is not None:
+            snap_seq = int(self.checkpointer.extra().get("update_seq", 0))
+            self.update_seq = snap_seq
+            self.replay_wal(after_seq=snap_seq)
+
+    # ----------------------------------------------------- streaming updates
+    def attach_wal(self, wal) -> None:
+        """Wire a ``repro.checkpoint.WriteAheadLog``: every delta batch
+        applied through :meth:`apply_deltas` is appended (write-ahead)
+        before it touches the device, :meth:`snapshot` truncates, and
+        :meth:`restore` replays the suffix past the snapshot's sequence
+        point."""
+        self.wal = wal
+
+    def apply_deltas(self, rows, deltas, log: bool = True) -> int:
+        """Apply one streaming delta batch to the live EngineState.
+
+        Maintenance-path call (between micro-batches, like observe/replan):
+        blocks until the device is done so the wall time is charged where
+        the runtime measures it.  Host-side the batch is coalesced
+        (duplicate rows summed deterministically), logged to the WAL if
+        one is attached, then applied in fixed-``update_capacity`` chunks
+        so the engine sees exactly one plan signature.  Returns the number
+        of unique rows applied."""
+        from repro.core import updates as upd
+        rows, deltas = upd.coalesce_deltas(rows, deltas)
+        if rows.size == 0:
+            return 0
+        if log:
+            self.update_seq += 1
+            if self.wal is not None:
+                self.wal.append(self.update_seq, rows, deltas)
+        for r_chunk, d_chunk in upd.chunk_delta_batch(
+                rows, deltas, self.update_capacity):
+            new = self.engine.apply_deltas(
+                self.state, jnp.asarray(r_chunk), jnp.asarray(d_chunk))
+            jax.block_until_ready((new.cold, new.hot))
+            self.state = new
+        self.updates_applied += int(rows.size)
+        return int(rows.size)
+
+    def replay_wal(self, after_seq: int = 0) -> int:
+        """Re-apply WAL records with seq > ``after_seq`` (restore path).
+
+        Replayed batches are not re-logged; they go through the identical
+        coalesce/chunk/apply path as the live stream, so the replayed
+        state matches the live one bit-for-bit.  Returns the number of
+        batches replayed."""
+        if self.wal is None:
+            raise RuntimeError("no WAL attached")
+        n = 0
+        for seq, rows, deltas in self.wal.replay():
+            if seq <= after_seq:
+                continue
+            self.apply_deltas(rows, deltas, log=False)
+            self.update_seq = max(self.update_seq, int(seq))
+            n += 1
+        return n
 
     def observe(self, batch: dict) -> None:
         if self.idx_key and self.idx_key in batch:

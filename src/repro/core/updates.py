@@ -1,0 +1,204 @@
+"""Host-side control plane for streaming embedding updates.
+
+Production recommenders never stop training: embedding rows drift while
+the same tables serve inference (UpDLRM treats update bandwidth as a
+first-class cost; the Intel CPU-cluster DLRM work shows the sparse-update
+path dominating when it is not batched).  This module is the *host* half
+of the repo's serving-concurrent update subsystem:
+
+  * :func:`coalesce_deltas` — deterministic duplicate-row summing, so the
+    device scatter sees unique rows (scatter-add order would otherwise be
+    unspecified) and WAL replay is bit-identical to the live application.
+  * :func:`chunk_delta_batch` — fixed-``capacity`` padding/chunking, so
+    the engine's ``apply_deltas`` plan has exactly one input signature
+    and steady-state updates cause zero retraces.
+  * :class:`DriftTracker` — per-page accumulated |delta| mass.  Applied
+    deltas pull hot fp32 rows off the quantized grid their carried scale
+    defines; the tracker tells the requant-demote scheduler which hot
+    pages have drifted enough to be worth re-quantizing, and the
+    observe-phase access histogram tells it which of those are
+    traffic-cold enough to demote without hurting the hot tier.
+  * :func:`demote_table` — a new PageTable with the chosen pages moved
+    into the least-loaded cold shards' free slots (the planner's LPT slot
+    discipline), executed by the engine's ordinary typed ``migrate``.
+
+The device half (the ``apply_deltas`` / ``requant_hot_pages`` plans)
+lives in ``repro.core.pifs`` with the other shard_map plan builders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core.paging import HOT_SHARD, PageTable, PagingConfig
+from repro.core.planner import shard_loads
+
+PAD_ROW = -1   # pad sentinel in a fixed-capacity delta batch's row ids
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateConfig:
+    """Knobs for the streaming-update subsystem.
+
+    capacity        — rows per device apply (fixed shape: one plan
+                      signature, zero steady-state retraces; larger
+                      batches are chunked, smaller ones padded).
+    apply_every     — micro-batches between drains of the pending update
+                      queue (1 = drain at every batch boundary).
+    demote_every    — applied batches between requant-demote scans
+                      (0 = never demote).
+    drift_threshold — accumulated |delta| mass at which a hot page
+                      becomes a demotion candidate.
+    max_demotions   — cap on pages demoted per scan (bounds the migrate
+                      gather's maintenance cost per cycle).
+    hotness_guard   — fraction of hot-resident pages (by access count)
+                      that are never demoted no matter their drift: the
+                      top of the hot tier is what the tier is *for*.
+    snapshot_every  — applied batches between checkpoint snapshots
+                      (each snapshot truncates the WAL; 0 = only the
+                      snapshots the caller takes explicitly).
+    """
+    capacity: int = 256
+    apply_every: int = 1
+    demote_every: int = 0
+    drift_threshold: float = 1.0
+    max_demotions: int = 8
+    hotness_guard: float = 0.5
+    snapshot_every: int = 0
+
+
+def coalesce_deltas(rows, deltas) -> Tuple[np.ndarray, np.ndarray]:
+    """Sum duplicate-row deltas into one delta per unique row.
+
+    Returns ``(rows (U,) int32 sorted unique, deltas (U, D) float32)``.
+    Negative row ids (pads) are dropped.  Deterministic: ``np.unique`` is
+    stable and ``np.add.at`` accumulates sequentially, so replaying the
+    same input (e.g. from the WAL) reproduces the output bit-for-bit —
+    and re-coalescing an already-coalesced batch is the identity, which
+    is what makes WAL replay through the same code path exact.
+    """
+    rows = np.asarray(rows).reshape(-1).astype(np.int64)
+    deltas = np.asarray(deltas, dtype=np.float32)
+    deltas = deltas.reshape(rows.size, -1)
+    keep = rows >= 0
+    rows, deltas = rows[keep], deltas[keep]
+    uniq, inv = np.unique(rows, return_inverse=True)
+    out = np.zeros((uniq.size, deltas.shape[1]), dtype=np.float32)
+    np.add.at(out, inv, deltas)
+    return uniq.astype(np.int32), out
+
+
+def chunk_delta_batch(rows: np.ndarray, deltas: np.ndarray, capacity: int,
+                      ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Split a coalesced delta batch into fixed-``capacity`` device chunks.
+
+    Every yielded chunk is exactly ``(capacity,)`` int32 rows (``PAD_ROW``
+    padded) + ``(capacity, D)`` float32 deltas, so the engine's apply plan
+    sees a single input signature regardless of live batch sizes."""
+    if capacity <= 0:
+        raise ValueError(f"capacity must be positive; got {capacity}")
+    rows = np.asarray(rows, dtype=np.int32).reshape(-1)
+    deltas = np.asarray(deltas, dtype=np.float32)
+    d = deltas.shape[-1]
+    for lo in range(0, max(rows.size, 1), capacity):
+        sl_rows = rows[lo:lo + capacity]
+        sl_d = deltas[lo:lo + capacity]
+        if sl_rows.size == 0 and lo > 0:
+            break
+        pad = capacity - sl_rows.size
+        out_rows = np.concatenate(
+            [sl_rows, np.full(pad, PAD_ROW, dtype=np.int32)])
+        out_d = np.concatenate(
+            [sl_d, np.zeros((pad, d), dtype=np.float32)], axis=0)
+        yield out_rows, out_d
+
+
+class DriftTracker:
+    """Per-page accumulated update mass, feeding requant-demote scans.
+
+    ``drift[p]`` is the summed |delta| applied to page ``p`` since it was
+    last re-quantized (demoted or snapped onto its carried-scale grid).
+    Pure host bookkeeping — the device state never sees it."""
+
+    def __init__(self, cfg: PagingConfig):
+        self.cfg = cfg
+        self.drift = np.zeros(cfg.num_pages, dtype=np.float64)
+        self.rows_touched = np.zeros(cfg.num_pages, dtype=np.int64)
+
+    def update(self, rows, deltas) -> None:
+        rows = np.asarray(rows).reshape(-1)
+        deltas = np.asarray(deltas, dtype=np.float64)
+        deltas = deltas.reshape(rows.size, -1)
+        keep = rows >= 0
+        rows, deltas = rows[keep], deltas[keep]
+        page = rows // self.cfg.page_size
+        np.add.at(self.drift, page, np.abs(deltas).sum(axis=1))
+        np.add.at(self.rows_touched, page, 1)
+
+    def note_requantized(self, pages) -> None:
+        """Pages whose values were put back on the quantized grid (demoted
+        or snapped) carry no drift against their scale any more."""
+        pages = np.asarray(pages).reshape(-1)
+        pages = pages[pages >= 0]
+        self.drift[pages] = 0.0
+
+    def demote_candidates(self, table: PageTable, counts: np.ndarray,
+                          ucfg: UpdateConfig) -> np.ndarray:
+        """Hot-resident pages drifted past the threshold, excluding the
+        hottest ``hotness_guard`` fraction of the hot tier by access
+        count.  Returns up to ``max_demotions`` page ids, most-drifted
+        first (deterministic tie-break by page id)."""
+        shard = np.asarray(table.page_to_shard)
+        counts = np.asarray(counts, dtype=np.float64)
+        hot = np.nonzero(shard == HOT_SHARD)[0]
+        if hot.size == 0 or ucfg.max_demotions <= 0:
+            return np.empty(0, dtype=np.int64)
+        n_guard = int(np.ceil(hot.size * ucfg.hotness_guard))
+        if n_guard > 0:
+            # the guard protects by *traffic* rank among hot residents
+            guard_order = hot[np.argsort(-counts[hot], kind="stable")]
+            guarded = set(guard_order[:n_guard].tolist())
+        else:
+            guarded = set()
+        cand = [p for p in hot.tolist()
+                if p not in guarded
+                and self.drift[p] >= ucfg.drift_threshold]
+        cand.sort(key=lambda p: (-self.drift[p], p))
+        return np.asarray(cand[: ucfg.max_demotions], dtype=np.int64)
+
+
+def demote_table(cfg: PagingConfig, table: PageTable, counts: np.ndarray,
+                 pages) -> PageTable:
+    """New PageTable with ``pages`` (hot-resident) demoted to cold shards.
+
+    Every other page keeps its placement, so the migration this table
+    drives moves exactly the demoted pages.  Destination shards follow
+    the planner's discipline — least loaded first, bounded by each
+    shard's slot capacity — and each demoted page takes the smallest free
+    slot on its shard (deterministic, hole-filling).  Raises if the cold
+    tier has no free slot anywhere (headroom exhausted)."""
+    pages = np.asarray(pages).reshape(-1).astype(np.int64)
+    shard = np.asarray(table.page_to_shard).copy()
+    slot = np.asarray(table.page_to_slot).copy()
+    counts = np.asarray(counts, dtype=np.float64)
+    loads = shard_loads(cfg, table, counts)
+    cap = cfg.pages_per_shard
+    used = [set(slot[shard == s].tolist()) for s in range(cfg.n_shards)]
+    for p in pages:
+        if shard[p] != HOT_SHARD:
+            raise ValueError(f"page {int(p)} is not hot-resident "
+                             f"(shard {int(shard[p])})")
+        cands = [s for s in range(cfg.n_shards) if len(used[s]) < cap]
+        if not cands:
+            raise RuntimeError("cold tier has no free slot for demotion "
+                               "(headroom exhausted)")
+        s = min(cands, key=lambda s: (loads[s], s))
+        free = min(set(range(cap)) - used[s])
+        shard[p] = s
+        slot[p] = free
+        used[s].add(free)
+        loads[s] += counts[p]
+    return PageTable(page_to_shard=shard.astype(np.int32),
+                     page_to_slot=slot.astype(np.int32))

@@ -15,18 +15,20 @@ placement-invariant lookups, so no query ever blocks on page management.
 from __future__ import annotations
 
 import argparse
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 
 from repro.configs import get_config, reduced
-from repro.launch.mesh import make_test_mesh
 from repro.serving import (BatcherConfig, BindingExecutor, ClosedLoopSource,
                            DynamicBatcher, FixedBatcher, LoadConfig,
                            OpenLoopSource, RuntimeConfig, ServingRuntime,
-                           bind_model, closed_loop_factory,
-                           dummy_request_factory, make_padder,
-                           prime_dedup_auto, request_stream)
+                           StreamingUpdater, UpdateConfig, bind_model,
+                           closed_loop_factory, dummy_request_factory,
+                           make_padder, prime_dedup_auto, request_stream,
+                           update_stream)
+from repro.checkpoint.wal import WriteAheadLog
+from repro.launch.mesh import make_test_mesh
 from repro.serving.request import ArrivalConfig
 
 
@@ -71,13 +73,22 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                        runtime_cfg: RuntimeConfig = RuntimeConfig(),
                        closed_loop_users: int = 0,
                        validate_ids: bool = False,
+                       update_cfg: Optional[UpdateConfig] = None,
+                       wal_path: Optional[str] = None,
                        ) -> Dict[str, object]:
     """End-to-end: bind, warm every bucket, serve the stream, and report
     metrics + the steady-state retrace count (must be 0).  The engine's
     cold-tier storage format rides in ``load.storage`` (the DLRM request
     streams need it for table-offset page rounding), the duplicate-
     coalescing knob in ``load.dedup``; the summary carries the measured
-    per-bucket dedup factor so serving-side bytes wins are attributable."""
+    per-bucket dedup factor so serving-side bytes wins are attributable.
+
+    ``load.update_qps > 0`` arms the streaming-update subsystem: a
+    trainer-side delta stream on the same virtual clock, drained between
+    micro-batches by a ``StreamingUpdater`` (warmed *before* plan stats
+    reset, so steady state stays retrace-free), with staleness p50/p99 in
+    the summary and, when ``wal_path`` is given, every applied batch
+    write-ahead-logged for mid-serving replay."""
     runtime, binding = build_serving(
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
@@ -96,6 +107,14 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
             # profiler with a prefix of the live stream, then rebuild the
             # buckets against the primed histogram (still pre-steady-state)
             runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
+        updater = None
+        if load.update_qps > 0:
+            ucfg = update_cfg or UpdateConfig()
+            wal = WriteAheadLog(wal_path) if wal_path else None
+            updater = StreamingUpdater(binding, update_stream(cfg, load),
+                                       ucfg, wal=wal)
+            updater.warmup()              # compile the apply plan now
+            runtime.updater = updater
         binding.reset_plan_stats()        # steady state begins here
         binding.dedup_stats.clear()       # drop warmup-dummy observations
         warm_replans = binding.replans
@@ -112,6 +131,8 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
     summary["plans"] = stats["plans"]
     summary["replans"] = binding.replans - warm_replans
     summary["dedup_factors"] = binding.dedup_report()
+    if updater is not None:
+        summary["updates"] = updater.report()
     return summary
 
 
@@ -154,6 +175,15 @@ def main() -> None:
                     help="strict mode: raise host-side on out-of-range "
                          "embedding ids instead of letting the device "
                          "gather clamp them silently")
+    ap.add_argument("--update-qps", type=float, default=0.0,
+                    help="> 0 arms the streaming embedding-update stream "
+                         "(delta rows/second on the virtual clock), drained "
+                         "between micro-batches")
+    ap.add_argument("--update-batch", type=int, default=64,
+                    help="rows per trainer-emitted delta batch")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="write-ahead-log applied update batches to PATH "
+                         "(mid-serving restore replays it)")
     ap.add_argument("--observe-every", type=int, default=4)
     ap.add_argument("--replan-every", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
@@ -170,7 +200,8 @@ def main() -> None:
         arrival=ArrivalConfig(rate_qps=args.qps, process=args.arrival,
                               seed=args.seed),
         slo_ms=args.slo_ms, seed=args.seed, storage=args.storage,
-        dedup=args.dedup, front_end=args.front_end)
+        dedup=args.dedup, front_end=args.front_end,
+        update_qps=args.update_qps, update_batch=args.update_batch)
     out = serve_offered_load(
         cfg, mesh, load, mode=args.mode, impl=args.impl,
         block_l=args.block_l, batcher=args.batcher,
@@ -178,11 +209,25 @@ def main() -> None:
         runtime_cfg=RuntimeConfig(observe_every=args.observe_every,
                                   replan_every=args.replan_every),
         closed_loop_users=args.closed_loop_users,
-        validate_ids=args.validate_ids)
+        validate_ids=args.validate_ids, wal_path=args.wal)
     out.pop("latency_hist", None)
     dedup_factors = out.pop("dedup_factors", {})
+    staleness = out.pop("staleness", None)
+    updates = out.pop("updates", None)
     for k, v in out.items():
         print(f"  {k:24s} {v}")
+    if updates is not None:
+        print("  -- streaming updates --")
+        for k, v in updates.items():
+            print(f"  {k:24s} {v}")
+    if staleness is not None:
+        print("  -- staleness (rows / seconds behind) --")
+        print(f"  rows_behind   p50={staleness['rows_behind_p50']:.1f} "
+              f"p99={staleness['rows_behind_p99']:.1f} "
+              f"max={staleness['rows_behind_max']:.1f}")
+        print(f"  seconds_behind p50={staleness['seconds_behind_p50']:.4f} "
+              f"p99={staleness['seconds_behind_p99']:.4f} "
+              f"max={staleness['seconds_behind_max']:.4f}")
     for bucket, rec in dedup_factors.items():
         print(f"  dedup[{bucket}]  factor={rec['factor']:.2f} "
               f"({rec['entries']} entries -> {rec['unique_rows']} unique "

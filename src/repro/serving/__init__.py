@@ -12,6 +12,8 @@ engine's compiled-lookup plan cache:
   loadgen.py     — model bindings, padders, request streams (open/closed)
   faults.py      — deterministic fault injection around any executor
   degradation.py — retry / circuit breaker / brown-out ladder controller
+  updates.py     — streaming embedding updates between micro-batches
+                   (WAL-logged delta apply, staleness SLOs, requant-demote)
 
 The engine-facing seam is ``repro.core.pifs.ServeBinding``.
 """
@@ -24,16 +26,19 @@ from repro.serving.degradation import (RUNGS, BreakerConfig, CircuitBreaker,
                                        RetryPolicy)
 from repro.serving.faults import (FaultConfig, FaultInjectingExecutor,
                                   TransientServingFailure, corrupt_store)
+from repro.core.updates import UpdateConfig
 from repro.serving.loadgen import (LoadConfig, bind_model,
                                    closed_loop_factory,
                                    dummy_request_factory, make_padder,
-                                   prime_dedup_auto, request_stream)
+                                   prime_dedup_auto, request_stream,
+                                   update_stream)
 from repro.serving.metrics import LatencyHistogram, ServingMetrics
 from repro.serving.request import (AdmissionQueue, ArrivalConfig, Request,
                                    arrival_times)
 from repro.serving.runtime import (BindingExecutor, ClosedLoopSource,
                                    OpenLoopSource, RuntimeConfig,
                                    ServingRuntime, SimulatedExecutor)
+from repro.serving.updates import StreamingUpdater, UpdateBatch
 
 __all__ = [
     "AdmissionQueue", "ArrivalConfig", "BatcherConfig", "BindingExecutor",
@@ -43,8 +48,9 @@ __all__ = [
     "LadderConfig", "LatencyHistogram", "LoadConfig", "OpenLoopSource",
     "RUNGS", "Request", "RetryPolicy", "RuntimeConfig", "ServiceModel",
     "ServingMetrics", "ServingRuntime", "SimulatedExecutor",
-    "TransientServingFailure", "Wait", "arrival_times", "bind_model",
+    "StreamingUpdater", "TransientServingFailure", "UpdateBatch",
+    "UpdateConfig", "Wait", "arrival_times", "bind_model",
     "closed_loop_factory", "corrupt_store", "dummy_request_factory",
     "make_padder", "pad_pooled_indices", "prime_dedup_auto",
-    "request_stream", "stack_feature",
+    "request_stream", "stack_feature", "update_stream",
 ]

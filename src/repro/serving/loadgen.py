@@ -31,9 +31,11 @@ from repro.models import params as prm
 from repro.models import recsys as rec_mod
 from repro.serving.batcher import (Bucket, pad_pooled_indices, stack_feature)
 from repro.serving.request import ArrivalConfig, Request, arrival_times
+from repro.serving.updates import UpdateBatch
 
 _DENSE_TAG = 0xD0
 _FIELD_TAG = 0xF1
+_DELTA_TAG = 0xDE17A
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +57,10 @@ class LoadConfig:
     #                                      'fused' keeps pooled features in
     #                                      VMEM through the interaction (tp-
     #                                      sharded configs resolve to split)
+    update_qps: float = 0.0              # streaming embedding updates: delta
+    #                                      rows/second on the virtual clock
+    #                                      (0 = no update stream)
+    update_batch: int = 64               # rows per trainer-emitted delta batch
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +74,8 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                dedup: str = "off", front_end: str = "split",
                degraded_variants: bool = False,
                validate_ids: bool = False,
-               scrub_scores: bool = False) -> ServeBinding:
+               scrub_scores: bool = False,
+               update_capacity: int = 0) -> ServeBinding:
     """Build engine + params + jitted serve step for a DLRM or Rec config.
 
     ``storage`` selects the engine's cold-tier format (fp32 passthrough or
@@ -93,6 +100,9 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
     end or tiers knob, so split_fe aliases full and hot_only/shed alias
     no_dedup.  ``validate_ids``/``scrub_scores`` arm the binding's
     host-side guardrails (OOB-id raise, NaN/Inf score scrub).
+    ``update_capacity`` (> 0) sets the binding's fixed streaming-update
+    apply width (rows per device chunk — one plan signature, zero
+    steady-state retraces; see ``repro.serving.updates``).
     """
     k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
     steps = None
@@ -136,9 +146,12 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
     else:
         raise TypeError(f"unsupported serving config {type(cfg)}")
     state = engine.init_state(k_state)
-    return ServeBinding(engine, state, params, step, idx_key=idx_key,
-                        steps=steps, validate_ids=validate_ids,
-                        scrub_scores=scrub_scores)
+    binding = ServeBinding(engine, state, params, step, idx_key=idx_key,
+                           steps=steps, validate_ids=validate_ids,
+                           scrub_scores=scrub_scores)
+    if update_capacity > 0:
+        binding.update_capacity = int(update_capacity)
+    return binding
 
 
 def make_padder(cfg) -> Callable[[Sequence[Request], Bucket], dict]:
@@ -257,6 +270,50 @@ def closed_loop_factory(cfg, load: LoadConfig
                        features=_rec_features(cfg, rid, load.seed),
                        pooling=1, user=user)
     return make_rec
+
+
+def update_stream(cfg, load: LoadConfig, scale: float = 1e-3
+                  ) -> List[UpdateBatch]:
+    """Materialise the trainer-side delta stream for an offered load.
+
+    Batches of ``load.update_batch`` rows arrive at ``load.update_qps``
+    delta rows/second on the same virtual clock as the request stream,
+    covering the request horizon (last arrival).  Rows follow the load's
+    trace distribution — an independent TraceGenerator with its own
+    popularity drift, so the update stream skews hot exactly like real
+    trainer output (hot rows train most) and stresses the requant-demote
+    path.  Deltas are small gaussians (``scale``), keyed deterministically
+    per batch.
+
+    Only DLRM configs carry the global row-id space the engine's
+    ``apply_deltas`` addresses; Rec families keep table-local ids inside
+    the model, so an update stream for them is a config error."""
+    if load.update_qps <= 0:
+        return []
+    if not isinstance(cfg, DLRMConfig):
+        raise TypeError(
+            "update streams address engine-global row ids; only DLRM "
+            f"configs are supported (got {type(cfg).__name__})")
+    times = arrival_times(load.arrival, load.n_requests)
+    horizon = float(times[-1]) if len(times) else 0.0
+    interval = load.update_batch / load.update_qps
+    n_batches = max(1, int(horizon / interval) + 1)
+    per_table = -(-load.update_batch // cfg.n_tables)
+    gen = TraceGenerator(TraceConfig(
+        n_rows=cfg.emb_num, n_tables=cfg.n_tables, pooling=per_table,
+        batch=1, distribution=load.distribution, seed=load.seed + 1))
+    offs = (np.arange(cfg.n_tables, dtype=np.int64)
+            * _padded_rows(cfg, storage=load.storage))[:, None]
+    out: List[UpdateBatch] = []
+    for k in range(n_batches):
+        ids = gen.next_batch()[0] + offs             # (T, per_table)
+        rows = ids.reshape(-1)[: load.update_batch].astype(np.int64)
+        rng = np.random.default_rng([load.seed, _DELTA_TAG, k])
+        deltas = (rng.normal(size=(rows.size, cfg.emb_dim)) * scale
+                  ).astype(np.float32)
+        out.append(UpdateBatch(seq=k + 1, t_gen=(k + 1) * interval,
+                               rows=rows, deltas=deltas))
+    return out
 
 
 def prime_dedup_auto(binding: ServeBinding, requests: Sequence[Request],

@@ -97,6 +97,11 @@ class ServingMetrics:
         self.maintenance_calls: Dict[str, int] = {}
         self.first_arrival_s: Optional[float] = None
         self.last_finish_s: float = 0.0
+        # streaming-update staleness samples, one per micro-batch boundary
+        # (recorded by the updater *before* it drains): how far serving
+        # lags the trainer's delta stream
+        self.staleness_rows: List[float] = []
+        self.staleness_s: List[float] = []
 
     # ------------------------------------------------------------ recording
     def record_request(self, req: Request) -> None:
@@ -135,6 +140,13 @@ class ServingMetrics:
     def record_maintenance(self, kind: str, seconds: float) -> None:
         self.maintenance_s[kind] = self.maintenance_s.get(kind, 0.0) + seconds
         self.maintenance_calls[kind] = self.maintenance_calls.get(kind, 0) + 1
+
+    def record_staleness(self, rows_behind: float, seconds_behind: float
+                         ) -> None:
+        """One update-lag sample: rows generated-but-unapplied at a
+        micro-batch boundary, and the age of the oldest pending batch."""
+        self.staleness_rows.append(float(rows_behind))
+        self.staleness_s.append(float(seconds_behind))
 
     # ------------------------------------------------------------- summary
     def summary(self) -> Dict[str, object]:
@@ -177,5 +189,19 @@ class ServingMetrics:
         qw = self.queue_wait.percentiles_ms()
         out["queue_wait_p50_ms"] = qw["p50_ms"]
         out["queue_wait_p99_ms"] = qw["p99_ms"]
+        # present only when an update stream ran: runs without one keep
+        # the exact legacy summary shape
+        if self.staleness_rows:
+            rows = np.asarray(self.staleness_rows)
+            secs = np.asarray(self.staleness_s)
+            out["staleness"] = {
+                "samples": int(rows.size),
+                "rows_behind_p50": float(np.percentile(rows, 50.0)),
+                "rows_behind_p99": float(np.percentile(rows, 99.0)),
+                "rows_behind_max": float(rows.max()),
+                "seconds_behind_p50": float(np.percentile(secs, 50.0)),
+                "seconds_behind_p99": float(np.percentile(secs, 99.0)),
+                "seconds_behind_max": float(secs.max()),
+            }
         out["latency_hist"] = self.latency.export()
         return out

@@ -156,7 +156,7 @@ class ServingRuntime:
                  padder: Callable[[Sequence[Request], Bucket], dict],
                  cfg: RuntimeConfig = RuntimeConfig(),
                  service_model: Optional[ServiceModel] = None,
-                 controller=None):
+                 controller=None, updater=None):
         self.executor = executor
         self.batcher = batcher
         self.padder = padder
@@ -168,6 +168,10 @@ class ServingRuntime:
         # circuit-breaker / brown-out policy around every executor call
         self.controller = controller
         self.failed_batches = 0
+        # optional repro.serving.updates.StreamingUpdater: drains the
+        # trainer's delta stream between micro-batches on the maintenance
+        # seam (same accounting as observe/replan)
+        self.updater = updater
 
     # ----------------------------------------------------------- warmup
     def warmup(self, request_factory: Callable[[int, int], Request],
@@ -301,6 +305,15 @@ class ServingRuntime:
                 self.metrics.record_maintenance("replan", dt)
                 if cfg.account_maintenance:
                     finish += dt
+            if self.updater is not None:
+                # streaming embedding updates: drain due delta batches on
+                # the maintenance seam; the updater samples staleness into
+                # the metrics every boundary, drained or not
+                dt = self.updater.on_batch(finish, self.metrics)
+                if dt:
+                    self.metrics.record_maintenance("updates", dt)
+                    if cfg.account_maintenance:
+                        finish += dt
             for r in reqs:
                 r.start_s = now
                 r.finish_s = finish

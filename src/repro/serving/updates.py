@@ -1,0 +1,188 @@
+"""Streaming embedding updates under live traffic (the serving half).
+
+The trainer side of a production recommender emits a continuous stream of
+embedding-row deltas; the serving side must fold them into the live
+tables without blowing the service tail.  This module drives the engine's
+``apply_deltas`` path through the same maintenance seam that observe/
+replan/restore already use: pending delta batches are drained *between*
+micro-batches, never inside the timed service path, and the wall time is
+recorded (and optionally charged to the virtual clock) exactly like every
+other maintenance kind.
+
+Three concerns ride the same cadence:
+
+  * **Apply** — due batches (virtual ``t_gen`` <= now) are coalesced,
+    write-ahead-logged, and applied in fixed-capacity chunks (zero
+    steady-state retraces; see ``repro.core.updates``).
+  * **Staleness accounting** — at every micro-batch boundary, *before*
+    draining, the updater samples how far serving lags the update stream:
+    ``rows_behind`` (rows generated-but-unapplied) and ``seconds_behind``
+    (age of the oldest due batch).  p50/p99 land in the metrics summary —
+    the serving-side SLO of the update subsystem.
+  * **Requant-demote** — applied deltas pull hot fp32 rows off their
+    carried-scale grid; on a configurable cadence the updater demotes
+    drifted, traffic-cold hot pages back into the int8 cold tier (the
+    planner's placement discipline, the engine's typed migrate), and
+    takes WAL-truncating snapshots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.updates import (PAD_ROW, DriftTracker, UpdateConfig,
+                                demote_table)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateBatch:
+    """One trainer-emitted delta batch on the virtual clock."""
+    seq: int
+    t_gen: float            # virtual generation time (seconds)
+    rows: np.ndarray        # (n,) global row ids
+    deltas: np.ndarray      # (n, D) float32
+
+
+class StreamingUpdater:
+    """Drains an update stream through a ServeBinding between micro-batches.
+
+    Plugs into ``ServingRuntime`` as ``runtime.updater``: the event loop
+    calls :meth:`on_batch` after each micro-batch's own maintenance, and
+    treats the returned wall seconds like any other maintenance cost.
+    """
+
+    def __init__(self, binding, batches: Sequence[UpdateBatch],
+                 cfg: UpdateConfig = UpdateConfig(), wal=None):
+        self.binding = binding
+        self.cfg = cfg
+        binding.update_capacity = cfg.capacity
+        if wal is not None:
+            binding.attach_wal(wal)
+        self.pending = deque(
+            sorted(batches, key=lambda b: (b.t_gen, b.seq)))
+        self.generated_batches = len(self.pending)
+        self.generated_rows = int(sum(len(b.rows) for b in self.pending))
+        self.tracker = DriftTracker(binding.engine.cfg)
+        self.applied_batches = 0
+        self.applied_rows = 0
+        self.demoted_pages = 0
+        self.snapshots = 0
+        self._mb = 0            # micro-batches seen
+
+    # ----------------------------------------------------------- warmup
+    def warmup(self) -> None:
+        """Compile the apply plan before steady state (an all-pad batch —
+        every scatter target is dropped, so state is untouched bit-for-bit
+        while the (storage, capacity) signature traces).  Counted traces
+        land before the caller resets plan stats, preserving the
+        zero-steady-retrace contract once live updates flow."""
+        eng = self.binding.engine
+        rows = jnp.asarray(np.full(self.cfg.capacity, PAD_ROW, np.int32))
+        deltas = jnp.asarray(
+            np.zeros((self.cfg.capacity, eng.cfg.dim), np.float32))
+        new = eng.apply_deltas(self.binding.state, rows, deltas)
+        jax.block_until_ready((new.cold, new.hot))
+        self.binding.state = new
+
+    # ------------------------------------------------------- event hook
+    def on_batch(self, now: float, metrics=None) -> float:
+        """One maintenance turn at virtual time ``now``.
+
+        Samples staleness (pre-drain — the lag the serving loop actually
+        exposed), then applies every due batch unless this turn is
+        skipped by ``apply_every``.  Returns wall seconds spent applying
+        (0.0 when nothing was due)."""
+        self._mb += 1
+        due_rows = 0
+        oldest: Optional[float] = None
+        for b in self.pending:
+            if b.t_gen > now:
+                break
+            if oldest is None:
+                oldest = b.t_gen
+            due_rows += len(b.rows)
+        if metrics is not None:
+            metrics.record_staleness(
+                due_rows, (now - oldest) if oldest is not None else 0.0)
+        if self.cfg.apply_every > 1 and self._mb % self.cfg.apply_every:
+            return 0.0
+        if due_rows == 0:
+            return 0.0
+        t0 = time.perf_counter()
+        self._drain_due(now)
+        return time.perf_counter() - t0
+
+    def _drain_due(self, now: float) -> None:
+        cfg = self.cfg
+        while self.pending and self.pending[0].t_gen <= now:
+            b = self.pending.popleft()
+            n = self.binding.apply_deltas(b.rows, b.deltas)
+            self.tracker.update(b.rows, b.deltas)
+            self.applied_batches += 1
+            self.applied_rows += n
+            if cfg.demote_every and \
+                    self.applied_batches % cfg.demote_every == 0:
+                self.requant_demote()
+            if cfg.snapshot_every and \
+                    self.applied_batches % cfg.snapshot_every == 0:
+                self.binding.snapshot()
+                self.snapshots += 1
+
+    def drain(self) -> int:
+        """Apply *everything* still pending (end-of-run flush; not timed).
+        Returns the number of batches applied."""
+        n = len(self.pending)
+        self._drain_due(float("inf"))
+        return n
+
+    # -------------------------------------------------- requant-demote
+    def requant_demote(self) -> int:
+        """One demote scan: pick drifted, traffic-cold hot pages (the
+        tracker's drift mass vs the observe-phase access histogram) and
+        migrate them into the cold tier.  For int8 storage the typed
+        migrate re-quantizes with each page's carried scale; counts are
+        *not* decayed (this is not a replan).  Returns pages demoted."""
+        binding = self.binding
+        eng = binding.engine
+        state = binding.state
+        counts = np.asarray(jax.device_get(state.counts))
+        table = state.page_table
+        pages = self.tracker.demote_candidates(table, counts, self.cfg)
+        if pages.size == 0:
+            return 0
+        new_table = demote_table(eng.cfg, table, counts, pages)
+        new = eng.migrate(state, new_table, count_decay=1.0)
+        jax.block_until_ready((new.cold, new.hot))
+        binding.state = new
+        self.tracker.note_requantized(pages)
+        self.demoted_pages += int(pages.size)
+        # Demotions move rows between tiers and are NOT WAL-logged (the
+        # WAL holds deltas only), so a post-snapshot demote would make
+        # replay diverge.  Fence it: a demote forces a WAL-truncating
+        # snapshot, keeping mid-serving restore bit-exact unconditionally.
+        if binding.checkpointer is not None:
+            binding.snapshot()
+            self.snapshots += 1
+        return int(pages.size)
+
+    # ----------------------------------------------------------- report
+    def report(self) -> dict:
+        out = {
+            "generated_batches": self.generated_batches,
+            "generated_rows": self.generated_rows,
+            "applied_batches": self.applied_batches,
+            "applied_rows": self.applied_rows,
+            "pending_batches": len(self.pending),
+            "demoted_pages": self.demoted_pages,
+            "snapshots": self.snapshots,
+            "update_seq": self.binding.update_seq,
+        }
+        if self.binding.wal is not None:
+            out["wal_records"] = len(self.binding.wal)
+        return out

@@ -382,6 +382,42 @@ def test_scrub_and_checkpoint_restore_heal_corrupted_store(mesh, rmc1,
     assert binding.engine.plan_stats()["traces"] == 0   # no retrace
 
 
+def test_heal_replays_wal_for_post_snapshot_updates(mesh, rmc1, tmp_path):
+    """The heal scenario above, extended with streaming updates: deltas
+    applied AFTER the snapshot exist only in the write-ahead log, so a
+    checkpoint reload alone would serve stale rows.  restore() must chase
+    the snapshot with a WAL replay and land bit-exactly on the
+    post-update scores — still without retracing the serve step."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.checkpoint.wal import WriteAheadLog
+    from repro.serving import bind_model
+    binding = bind_model(rmc1, mesh, storage="int8")
+    batch = _dlrm_batch(rmc1)
+    rng = np.random.default_rng(8)
+    total = int(binding.engine.cfg.total_rows)
+    with mesh:
+        binding.observe(batch)
+        binding.replan()
+        binding.attach_wal(WriteAheadLog(str(tmp_path / "u.wal")))
+        binding.attach_checkpointer(Checkpointer(str(tmp_path / "ck")),
+                                    save_now=True)
+        stale = np.asarray(binding.execute(batch))  # pre-update scores
+        for _ in range(2):
+            binding.apply_deltas(
+                rng.integers(0, total, 32),
+                rng.normal(size=(32, rmc1.emb_dim)).astype(np.float32))
+        fresh = np.asarray(binding.execute(batch))  # post-update scores
+        assert not np.array_equal(stale, fresh)     # updates visible
+        binding.reset_plan_stats()
+        assert corrupt_store(binding, frac=1.0, seed=4) > 0
+        binding.restore()
+        healed = np.asarray(binding.execute(batch))
+    assert binding.restores == 1
+    np.testing.assert_array_equal(healed, fresh)    # not the stale snapshot
+    assert binding.update_seq == 2
+    assert binding.engine.plan_stats()["traces"] == 0
+
+
 def test_fault_injected_serving_run_end_to_end(mesh, rmc1):
     """Transient chaos + controller over a real binding: every request is
     accounted, availability holds, retries happen, and the plan cache

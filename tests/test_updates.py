@@ -1,0 +1,526 @@
+"""Streaming embedding updates: coalesce/chunk determinism, WAL
+durability, delta application vs a dense reference, requant-demote
+exactness, and the serving-runtime integration (staleness accounting,
+zero steady-state retraces)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.wal import WriteAheadLog
+from repro.core.paging import HOT_SHARD
+from repro.core.pifs import engine_for_tables
+from repro.core.updates import (PAD_ROW, DriftTracker, UpdateConfig,
+                                chunk_delta_batch, coalesce_deltas,
+                                demote_table)
+from repro.serving import (ArrivalConfig, BindingExecutor, DynamicBatcher,
+                           BatcherConfig, LoadConfig, OpenLoopSource,
+                           RuntimeConfig, ServingRuntime, StreamingUpdater,
+                           UpdateBatch, bind_model, corrupt_store,
+                           dummy_request_factory, make_padder,
+                           request_stream, update_stream)
+
+
+# ---------------------------------------------------------------------------
+# Host control plane: coalesce, chunk, drift tracking, demote placement
+# ---------------------------------------------------------------------------
+
+
+def test_coalesce_sums_duplicates_drops_pads_and_is_idempotent():
+    rows = np.array([5, 2, 5, PAD_ROW, 2, 9], np.int64)
+    d = np.arange(6 * 3, dtype=np.float32).reshape(6, 3)
+    r, out = coalesce_deltas(rows, d)
+    np.testing.assert_array_equal(r, [2, 5, 9])
+    np.testing.assert_array_equal(out[0], d[1] + d[4])
+    np.testing.assert_array_equal(out[1], d[0] + d[2])
+    np.testing.assert_array_equal(out[2], d[5])
+    # re-coalescing a coalesced batch is the identity — the property WAL
+    # replay leans on (live path and replay path see identical arrays)
+    r2, out2 = coalesce_deltas(r, out)
+    np.testing.assert_array_equal(r, r2)
+    np.testing.assert_array_equal(out, out2)
+    assert r.dtype == np.int32 and out.dtype == np.float32
+
+
+def test_chunk_delta_batch_fixed_shape_and_lossless():
+    rows = np.arange(10, dtype=np.int32)
+    d = np.random.default_rng(0).normal(size=(10, 4)).astype(np.float32)
+    chunks = list(chunk_delta_batch(rows, d, capacity=4))
+    assert len(chunks) == 3
+    for cr, cd in chunks:
+        assert cr.shape == (4,) and cd.shape == (4, 4)
+        assert cr.dtype == np.int32 and cd.dtype == np.float32
+    got_rows = np.concatenate([c[0] for c in chunks])
+    got_d = np.concatenate([c[1] for c in chunks])
+    real = got_rows != PAD_ROW
+    np.testing.assert_array_equal(got_rows[real], rows)
+    np.testing.assert_array_equal(got_d[real], d)
+    assert (got_d[~real] == 0).all()
+    # empty batch still yields exactly one all-pad chunk (the warmup shape)
+    empty = list(chunk_delta_batch(np.empty(0, np.int32),
+                                   np.empty((0, 4), np.float32), 4))
+    assert len(empty) == 1 and (empty[0][0] == PAD_ROW).all()
+    with pytest.raises(ValueError):
+        list(chunk_delta_batch(rows, d, 0))
+
+
+def _paging_cfg():
+    from repro.core.paging import PagingConfig
+    return PagingConfig(total_rows=256, dim=8, n_shards=4, page_bytes=256,
+                        hot_fraction=0.25)
+
+
+def test_drift_tracker_guard_threshold_and_cap():
+    from repro.core.paging import initial_page_table
+    cfg = _paging_cfg()
+    table = initial_page_table(cfg)
+    shard = np.asarray(table.page_to_shard).copy()
+    shard[:8] = HOT_SHARD                       # pages 0..7 hot-resident
+    table = dataclasses.replace(table, page_to_shard=shard)
+    tr = DriftTracker(cfg)
+    ps = cfg.page_size
+    # page p gets drift mass ~ p (page 0 none, page 7 most)
+    for p in range(1, 8):
+        tr.update(np.full(p, p * ps), np.ones((p, cfg.dim), np.float32))
+    counts = np.zeros(cfg.num_pages)
+    counts[6] = 100.0                            # page 6 is traffic-hot
+    counts[7] = 90.0                             # page 7 second-hottest
+    ucfg = UpdateConfig(drift_threshold=cfg.dim * 2.0, max_demotions=2,
+                        hotness_guard=0.25)      # guards top 2 of 8
+    cand = tr.demote_candidates(table, counts, ucfg)
+    # 6 and 7 are guarded despite max drift; 5 and 4 lead the rest;
+    # pages 0-1 sit below the (inclusive) threshold; cap keeps it to two
+    np.testing.assert_array_equal(cand, [5, 4])
+    tr.note_requantized(cand)
+    assert tr.demote_candidates(table, counts, ucfg).tolist() == [3, 2]
+    assert tr.demote_candidates(
+        table, counts, dataclasses.replace(ucfg, max_demotions=0)).size == 0
+
+
+def test_demote_table_deterministic_least_loaded_and_validates():
+    from repro.core.paging import initial_page_table
+    cfg = _paging_cfg()
+    table = initial_page_table(cfg)
+    shard = np.asarray(table.page_to_shard).copy()
+    hot_pages = np.nonzero(shard == HOT_SHARD)[0]
+    if hot_pages.size < 2:
+        shard[:2] = HOT_SHARD
+        table = dataclasses.replace(table, page_to_shard=shard)
+        hot_pages = np.asarray([0, 1])
+    counts = np.ones(cfg.num_pages)
+    a = demote_table(cfg, table, counts, hot_pages[:2])
+    b = demote_table(cfg, table, counts, hot_pages[:2])
+    np.testing.assert_array_equal(np.asarray(a.page_to_shard),
+                                  np.asarray(b.page_to_shard))
+    np.testing.assert_array_equal(np.asarray(a.page_to_slot),
+                                  np.asarray(b.page_to_slot))
+    sh = np.asarray(a.page_to_shard)
+    assert (sh[hot_pages[:2]] >= 0).all()
+    # untouched pages keep their placement exactly
+    others = np.setdiff1d(np.arange(cfg.num_pages), hot_pages[:2])
+    np.testing.assert_array_equal(sh[others],
+                                  np.asarray(table.page_to_shard)[others])
+    with pytest.raises(ValueError):
+        demote_table(cfg, a, counts, hot_pages[:1])   # already cold
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip_truncate_and_reopen(tmp_path):
+    path = str(tmp_path / "u.wal")
+    wal = WriteAheadLog(path)
+    assert len(wal) == 0
+    batches = []
+    rng = np.random.default_rng(3)
+    for seq in (1, 2, 3):
+        r = rng.integers(0, 100, 5).astype(np.int32)
+        d = rng.normal(size=(5, 4)).astype(np.float32)
+        wal.append(seq, r, d)
+        batches.append((seq, r, d))
+    got = list(wal.replay())
+    assert [g[0] for g in got] == [1, 2, 3]
+    for (s, r, d), (gs, gr, gd) in zip(batches, got):
+        np.testing.assert_array_equal(r, gr)
+        np.testing.assert_array_equal(d, gd)
+    # a fresh handle on the same file sees the same records
+    assert len(WriteAheadLog(path)) == 3
+    wal.truncate()
+    assert len(wal) == 0 and list(wal.replay()) == []
+    assert len(WriteAheadLog(path)) == 0
+
+
+def test_wal_torn_tail_is_silent_but_corruption_raises(tmp_path):
+    path = str(tmp_path / "u.wal")
+    wal = WriteAheadLog(path)
+    r = np.arange(4, dtype=np.int32)
+    d = np.ones((4, 2), np.float32)
+    wal.append(1, r, d)
+    wal.append(2, r, d)
+    # torn tail (crash mid-append): drop the last 7 bytes — record 2
+    # vanishes silently, record 1 survives
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 7)
+    got = list(WriteAheadLog(path).replay())
+    assert [g[0] for g in got] == [1]
+    # bit-flip inside a *complete* record: that is corruption, not a torn
+    # write — replay must refuse rather than apply garbage
+    wal2 = WriteAheadLog(str(tmp_path / "v.wal"))
+    wal2.append(1, r, d)
+    with open(wal2.path, "r+b") as f:
+        f.seek(-3, os.SEEK_END)
+        byte = f.read(1)
+        f.seek(-3, os.SEEK_END)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(IOError):
+        list(WriteAheadLog(wal2.path).replay())
+    # and a file that is not a WAL at all is rejected up front
+    bad = tmp_path / "w.wal"
+    bad.write_bytes(b"NOTAWAL!" + b"\x00" * 32)
+    with pytest.raises(IOError):
+        WriteAheadLog(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# Engine apply path vs dense reference (both storages)
+# ---------------------------------------------------------------------------
+
+
+def _promoted_engine(mesh, storage):
+    eng, offs = engine_for_tables([160, 96], dim=16, mesh=mesh,
+                                  hot_fraction=0.15, storage=storage)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    idx = jnp.tile(jnp.arange(8, dtype=jnp.int32).reshape(1, 1, 8),
+                   (8, 1, 1))
+    with mesh:
+        for _ in range(4):
+            state = eng.observe(state, idx)
+        state, stats = eng.plan_and_migrate(state)
+    assert stats["hot_pages"] > 0
+    return eng, state
+
+
+def _apply_ref(eng, state, rows, deltas):
+    """Dense host reference: hot/fp32 rows add exactly; int8 cold rows
+    round-trip the quantized domain under the page's carried scale."""
+    dense = np.asarray(eng.to_dense(state)).copy()
+    shard = np.asarray(state.page_to_shard)
+    scales = np.asarray(state.page_scales)
+    ps = eng.cfg.page_size
+    r, d = coalesce_deltas(rows, deltas)
+    for row, dd in zip(r.tolist(), d):
+        pg = row // ps
+        if eng.cfg.storage == "fp32" or shard[pg] == HOT_SHARD:
+            dense[row] = dense[row] + dd
+        else:
+            s = scales[pg]
+            q = np.clip(np.round((dense[row] + dd) / s), -127, 127)
+            dense[row] = q.astype(np.float32) * s
+    return dense
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_apply_deltas_matches_dense_reference(mesh, storage):
+    eng, state = _promoted_engine(mesh, storage)
+    rng = np.random.default_rng(1)
+    rows = rng.integers(0, 256, 48).astype(np.int64)
+    deltas = rng.normal(size=(48, 16)).astype(np.float32) * 0.1
+    want = _apply_ref(eng, state, rows, deltas)
+    r, d = coalesce_deltas(rows, deltas)
+    with mesh:
+        new = state
+        for cr, cd in chunk_delta_batch(r, d, capacity=32):
+            new = eng.apply_deltas(new, jnp.asarray(cr), jnp.asarray(cd))
+        got = np.asarray(eng.to_dense(new))
+    np.testing.assert_array_equal(got, want)      # bit-exact, both tiers
+    # untouched rows are bit-identical to the original store
+    before = np.asarray(eng.to_dense(state))
+    untouched = np.setdiff1d(np.arange(256), r)
+    np.testing.assert_array_equal(got[untouched], before[untouched])
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_apply_deltas_all_pad_is_bitwise_noop(mesh, storage):
+    eng, state = _promoted_engine(mesh, storage)
+    rows = jnp.full((32,), PAD_ROW, jnp.int32)
+    deltas = jnp.zeros((32, 16), jnp.float32)
+    with mesh:
+        new = eng.apply_deltas(state, rows, deltas)
+        for a, b in ((state.cold, new.cold), (state.hot, new.hot)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_apply_deltas_is_placement_invariant(mesh):
+    """The same deltas applied before and after a migration land on the
+    same logical rows (fp32: identical dense view regardless of tier)."""
+    eng, offs = engine_for_tables([160, 96], dim=16, mesh=mesh,
+                                  hot_fraction=0.15, storage="fp32")
+    state = eng.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    rows = jnp.asarray(rng.integers(0, 256, 24).astype(np.int32))
+    deltas = jnp.asarray(rng.normal(size=(24, 16)).astype(np.float32))
+    idx = jnp.tile(jnp.arange(8, dtype=jnp.int32).reshape(1, 1, 8), (8, 1, 1))
+    with mesh:
+        plain = eng.apply_deltas(state, rows, deltas)
+        st = eng.observe(state, idx)
+        st2, _ = eng.plan_and_migrate(st)
+        moved = eng.apply_deltas(st2, rows, deltas)
+        np.testing.assert_array_equal(np.asarray(eng.to_dense(plain)),
+                                      np.asarray(eng.to_dense(moved)))
+
+
+def test_apply_deltas_rejects_bad_shapes_and_oob_rows(mesh):
+    eng, state = _promoted_engine(mesh, "fp32")
+    with mesh:
+        with pytest.raises(ValueError):
+            eng.apply_deltas(state, jnp.zeros((4,), jnp.int32),
+                             jnp.zeros((5, 16), jnp.float32))
+        with pytest.raises(ValueError):
+            eng.apply_deltas(state, jnp.zeros((4,), jnp.int32),
+                             jnp.zeros((4, 8), jnp.float32))
+        with pytest.raises(ValueError):
+            eng.apply_deltas(
+                state, jnp.asarray([10 ** 6], jnp.int32),
+                jnp.zeros((1, 16), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Requant-demote: the snap is the demote->promote round trip, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_vs_snap(mesh, storage, deltas_seed):
+    """apply d1 -> (demote -> promote) -> apply d2 must equal
+    apply d1 -> fused snap -> apply d2, bit-for-bit on the dense view."""
+    eng, state = _promoted_engine(mesh, storage)
+    table = state.page_table
+    hot_pages = np.nonzero(
+        np.asarray(table.page_to_shard) == HOT_SHARD)[0]
+    rng = np.random.default_rng(deltas_seed)
+    ps = eng.cfg.page_size
+    # deltas aimed at the hot pages (plus some cold traffic)
+    rows = np.concatenate([
+        rng.choice(hot_pages) * ps + rng.integers(0, ps, 8)
+        for _ in range(3)] + [rng.integers(0, 256, 8)]).astype(np.int64)
+    d1 = rng.normal(size=(rows.size, 16)).astype(np.float32) * 0.2
+    d2 = rng.normal(size=(rows.size, 16)).astype(np.float32) * 0.2
+    counts = np.asarray(jax.device_get(state.counts))
+    demoted = demote_table(eng.cfg, table, counts, hot_pages)
+    jr = jnp.asarray(rows.astype(np.int32))
+    with mesh:
+        # path A: demote the hot pages to cold, then promote them back
+        a = eng.apply_deltas(state, jr, jnp.asarray(d1))
+        a = eng.migrate(a, demoted, count_decay=1.0)
+        a = eng.migrate(a, table, count_decay=1.0)
+        a = eng.apply_deltas(a, jr, jnp.asarray(d2))
+        # path B: fused in-place requant snap of the same pages
+        b = eng.apply_deltas(state, jr, jnp.asarray(d1))
+        b = eng.requant_hot_pages(b, jnp.asarray(hot_pages, jnp.int32))
+        b = eng.apply_deltas(b, jr, jnp.asarray(d2))
+        np.testing.assert_array_equal(np.asarray(a.hot), np.asarray(b.hot))
+        np.testing.assert_array_equal(np.asarray(eng.to_dense(a)),
+                                      np.asarray(eng.to_dense(b)))
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_demote_promote_roundtrip_equals_fused_snap(mesh, storage):
+    _roundtrip_vs_snap(mesh, storage, deltas_seed=7)
+
+
+def test_demote_promote_vs_snap_property(mesh):
+    """Property form of the round-trip identity (hypothesis drives the
+    delta content; the deterministic test above keeps coverage when the
+    dependency is absent locally — CI fails loudly if it is missing)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(seed=st.integers(0, 10 ** 6))
+    @settings(deadline=None, max_examples=8,
+              suppress_health_check=list(HealthCheck))
+    def prop(seed):
+        _roundtrip_vs_snap(mesh, "int8", deltas_seed=seed)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Binding + WAL + runtime integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def rmc1():
+    from repro.configs import get_config, reduced
+    return reduced(get_config("rmc1"))
+
+
+def test_binding_apply_logs_and_replay_restores_bitwise(mesh, rmc1,
+                                                        tmp_path):
+    """The ISSUE's durability contract: updates applied after a snapshot
+    live only in the WAL; corrupt_store + restore() must replay them and
+    reproduce the exact post-update EngineState and lookups."""
+    binding = bind_model(rmc1, mesh, storage="int8")
+    batch = {"dense": np.zeros((8, rmc1.n_dense), np.float32),
+             "indices": np.tile(np.arange(rmc1.pooling, dtype=np.int32),
+                                (8, rmc1.n_tables, 1))}
+    rng = np.random.default_rng(5)
+    with mesh:
+        binding.observe(batch)
+        binding.replan()
+        wal = WriteAheadLog(str(tmp_path / "u.wal"))
+        binding.attach_wal(wal)
+        binding.attach_checkpointer(Checkpointer(str(tmp_path / "ck")),
+                                    save_now=True)
+        total = int(binding.engine.cfg.total_rows)
+        for _ in range(3):
+            rows = rng.integers(0, total, 40)
+            deltas = rng.normal(size=(40, rmc1.emb_dim)
+                                ).astype(np.float32) * 0.05
+            binding.apply_deltas(rows, deltas)
+        assert binding.update_seq == 3 and len(wal) == 3
+        end = binding.execute(batch)
+        end_scores = np.asarray(end)
+        leaves = [np.asarray(jax.device_get(x)) for x in
+                  (binding.state.cold, binding.state.hot,
+                   binding.state.page_scales)]
+        binding.engine.reset_plan_stats()
+        corrupt_store(binding, frac=1.0, seed=2)
+        binding.restore()                       # checkpoint + WAL replay
+        healed = [np.asarray(jax.device_get(x)) for x in
+                  (binding.state.cold, binding.state.hot,
+                   binding.state.page_scales)]
+        healed_scores = np.asarray(binding.execute(batch))
+    for a, b in zip(leaves, healed):
+        np.testing.assert_array_equal(a, b)     # bit-identical state
+    np.testing.assert_array_equal(end_scores, healed_scores)
+    assert binding.update_seq == 3              # replay restored the seq
+    # replay reuses the compiled apply plan: no retrace on the heal path
+    assert binding.engine.plan_stats()["traces"] == 0
+
+
+def test_snapshot_truncates_wal_and_replay_skips_committed(mesh, rmc1,
+                                                          tmp_path):
+    binding = bind_model(rmc1, mesh, storage="fp32")
+    rng = np.random.default_rng(9)
+    total = int(binding.engine.cfg.total_rows)
+    with mesh:
+        wal = WriteAheadLog(str(tmp_path / "u.wal"))
+        binding.attach_wal(wal)
+        binding.attach_checkpointer(Checkpointer(str(tmp_path / "ck")),
+                                    save_now=True)
+        binding.apply_deltas(rng.integers(0, total, 8),
+                             rng.normal(size=(8, rmc1.emb_dim)
+                                        ).astype(np.float32))
+        assert len(wal) == 1
+        binding.snapshot()                      # commits seq 1, truncates
+        assert len(wal) == 0
+        binding.apply_deltas(rng.integers(0, total, 8),
+                             rng.normal(size=(8, rmc1.emb_dim)
+                                        ).astype(np.float32))
+        want = np.asarray(jax.device_get(binding.state.cold))
+        corrupt_store(binding, frac=1.0, seed=1)
+        binding.restore()
+        got = np.asarray(jax.device_get(binding.state.cold))
+    np.testing.assert_array_equal(want, got)
+    assert binding.update_seq == 2
+
+
+def test_update_stream_is_deterministic_and_respects_offsets(rmc1):
+    load = LoadConfig(n_requests=64,
+                      arrival=ArrivalConfig(rate_qps=500.0), seed=4,
+                      update_qps=1000.0, update_batch=16)
+    a = update_stream(rmc1, load)
+    b = update_stream(rmc1, load)
+    assert len(a) == len(b) > 0
+    for x, y in zip(a, b):
+        assert x.seq == y.seq and x.t_gen == y.t_gen
+        np.testing.assert_array_equal(x.rows, y.rows)
+        np.testing.assert_array_equal(x.deltas, y.deltas)
+    assert all(x.rows.shape == (16,) for x in a)
+    assert all((x.rows >= 0).all() for x in a)
+    ts = [x.t_gen for x in a]
+    assert ts == sorted(ts) and ts[0] > 0
+    # zero-rate stream is empty, not an error
+    assert update_stream(rmc1, dataclasses.replace(load,
+                                                   update_qps=0.0)) == []
+
+
+def test_streaming_updater_runtime_integration(mesh, rmc1, tmp_path):
+    """Full loop: open-loop serving + concurrent update stream.  Applied
+    between micro-batches, staleness sampled every boundary, maintenance
+    recorded, zero steady-state retraces (apply plan warmed up front)."""
+    binding = bind_model(rmc1, mesh, storage="int8")
+    load = LoadConfig(n_requests=48,
+                      arrival=ArrivalConfig(rate_qps=400.0, seed=2),
+                      slo_ms=200.0, seed=2, storage="int8",
+                      update_qps=600.0, update_batch=16)
+    bat = BatcherConfig(batch_sizes=(8, 16), poolings=(rmc1.pooling,))
+    rt = ServingRuntime(BindingExecutor(binding), DynamicBatcher(bat),
+                        make_padder(rmc1),
+                        RuntimeConfig(observe_every=4, replan_every=8))
+    wal = WriteAheadLog(str(tmp_path / "u.wal"))
+    updater = StreamingUpdater(
+        binding, update_stream(rmc1, load),
+        UpdateConfig(capacity=32), wal=wal)
+    rt.updater = updater
+    with mesh:
+        rt.warmup(dummy_request_factory(rmc1, storage="int8"))
+        updater.warmup()
+        binding.reset_plan_stats()
+        s = rt.run(OpenLoopSource(request_stream(rmc1, load)))
+    rep = updater.report()
+    assert rep["applied_batches"] > 0
+    assert rep["applied_batches"] + rep["pending_batches"] == \
+        rep["generated_batches"]
+    assert rep["wal_records"] == rep["applied_batches"]
+    assert s["maintenance_calls"].get("updates", 0) >= 1
+    assert s["staleness"]["samples"] == s["batches"]
+    assert s["staleness"]["rows_behind_p99"] >= 0.0
+    assert binding.plan_stats()["traces"] == 0  # the contract under test
+    assert s["served"] == 48
+
+
+def test_staleness_summary_shape_and_legacy_absence():
+    from repro.serving import ServingMetrics
+    m = ServingMetrics()
+    assert "staleness" not in m.summary()       # legacy summary untouched
+    m.record_staleness(10.0, 0.5)
+    m.record_staleness(0.0, 0.0)
+    st = m.summary()["staleness"]
+    assert st["samples"] == 2
+    assert st["rows_behind_max"] == 10.0
+    assert st["seconds_behind_p99"] == pytest.approx(
+        np.percentile([0.5, 0.0], 99))
+
+
+def test_updater_drain_and_apply_every_gate(mesh, rmc1):
+    binding = bind_model(rmc1, mesh, storage="fp32")
+    rng = np.random.default_rng(0)
+    total = int(binding.engine.cfg.total_rows)
+    batches = [UpdateBatch(seq=i + 1, t_gen=0.1 * (i + 1),
+                           rows=rng.integers(0, total, 8),
+                           deltas=rng.normal(size=(8, rmc1.emb_dim)
+                                             ).astype(np.float32))
+               for i in range(4)]
+    upd = StreamingUpdater(binding, batches,
+                           UpdateConfig(capacity=16, apply_every=2))
+    with mesh:
+        upd.warmup()
+        from repro.serving import ServingMetrics
+        m = ServingMetrics()
+        assert upd.on_batch(0.15, m) == 0.0     # gated boundary: no drain
+        assert upd.applied_batches == 0
+        assert len(m.staleness_rows) == 1       # but staleness sampled
+        assert m.staleness_rows[0] == 8.0
+        dt = upd.on_batch(0.25, m)              # 2nd boundary: drains 1-2
+        assert dt > 0.0 and upd.applied_batches == 2
+        assert upd.drain() == 2                 # flush the not-yet-due tail
+    assert upd.applied_batches == 4 and len(upd.pending) == 0
