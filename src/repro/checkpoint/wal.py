@@ -22,6 +22,10 @@ Durability semantics (standard WAL):
   * ``replay`` stops cleanly at a torn tail (a partial record from a
     crash mid-append is not data loss — the batch was never applied),
     but a CRC mismatch on a *complete* record is corruption and raises.
+  * *opening* an existing log truncates any torn tail first, so
+    post-recovery appends always start on a valid record boundary —
+    without the cut they would land behind the garbage bytes and replay
+    would silently stop before them.
   * ``truncate`` resets the log after a snapshot commits: every logged
     batch is inside the checkpoint, so replay must not see it again
     (the snapshot manifest's ``update_seq`` guards the race where
@@ -43,8 +47,9 @@ _HEADER = struct.Struct("<qiiI")
 class WriteAheadLog:
     """Append-only delta-batch log (see module docstring for the format).
 
-    Opening an existing log keeps its records (append continues after
-    them); ``records`` counts complete records currently on disk."""
+    Opening an existing log keeps its complete records (append continues
+    after them) and truncates a torn tail from a crash mid-append;
+    ``records`` counts complete records currently on disk."""
 
     def __init__(self, path: str):
         self.path = path
@@ -52,7 +57,46 @@ class WriteAheadLog:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             with open(path, "wb") as f:
                 f.write(MAGIC)
-        self.records = sum(1 for _ in self.replay())
+        self.records = self._recover()
+
+    def _recover(self) -> int:
+        """Walk to the end of the last complete record (the same walk
+        ``replay`` does) and cut anything after it.  ``append`` opens the
+        file with mode 'ab': without this cut, a record appended after a
+        crash mid-append would start inside the partial record's garbage
+        bytes, and a later replay would either stop at the torn point
+        (silently dropping every post-recovery record) or mis-parse and
+        raise.  Returns the number of complete records kept; raises on
+        bad magic or a checksum mismatch in a complete record, exactly
+        like ``replay``."""
+        records = 0
+        with open(self.path, "r+b") as f:
+            head = f.read(len(MAGIC))
+            if head != MAGIC:
+                raise IOError(f"{self.path}: bad WAL magic {head!r}")
+            end = f.tell()
+            while True:
+                hdr = f.read(_HEADER.size)
+                if len(hdr) < _HEADER.size:
+                    break                           # torn/absent header
+                seq, n, d, crc = _HEADER.unpack(hdr)
+                if n < 0 or d <= 0:
+                    raise IOError(f"{self.path}: corrupt WAL header "
+                                  f"(n_rows={n}, dim={d})")
+                payload = f.read(n * 4 + n * d * 4)
+                if len(payload) < n * 4 + n * d * 4:
+                    break                           # torn payload
+                if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+                    raise IOError(f"{self.path}: WAL record seq={seq} "
+                                  "checksum mismatch")
+                records += 1
+                end = f.tell()
+            f.seek(0, os.SEEK_END)
+            if f.tell() > end:
+                f.truncate(end)
+                f.flush()
+                os.fsync(f.fileno())
+        return records
 
     def append(self, seq: int, rows, deltas) -> None:
         """Log one coalesced delta batch (rows (U,) ids, deltas (U, D))."""

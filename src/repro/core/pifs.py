@@ -1111,8 +1111,15 @@ class PIFSEmbeddingEngine:
                 q_old = jnp.take(cold, jnp.minimum(local, cold.shape[0] - 1),
                                  axis=0)
                 v = quant.dequantize_rows(q_old, scale) + deltas
-                new_cold = cold.at[cold_tgt].set(
-                    quant.quantize_rows(v, scale), mode="drop")
+                # a zero carried scale (never emitted by quant.page_scales,
+                # but representable in a hand-built or restored state) has
+                # no quantized domain to write into: dividing by it would
+                # turn the codes into ±127 or NaN casts — keep the old
+                # codes instead
+                safe = jnp.where(scale > 0, scale, 1.0)
+                q_new = jnp.where(scale > 0,
+                                  quant.quantize_rows(v, safe), q_old)
+                new_cold = cold.at[cold_tgt].set(q_new, mode="drop")
             else:
                 new_cold = cold.at[cold_tgt].add(
                     deltas.astype(cold.dtype), mode="drop")

@@ -96,17 +96,18 @@ def chunk_delta_batch(rows: np.ndarray, deltas: np.ndarray, capacity: int,
 
     Every yielded chunk is exactly ``(capacity,)`` int32 rows (``PAD_ROW``
     padded) + ``(capacity, D)`` float32 deltas, so the engine's apply plan
-    sees a single input signature regardless of live batch sizes."""
+    sees a single input signature regardless of live batch sizes.  An
+    empty batch yields nothing — a caller that wants an all-pad batch
+    (the warmup path) builds its own rather than paying a pointless
+    device apply here."""
     if capacity <= 0:
         raise ValueError(f"capacity must be positive; got {capacity}")
     rows = np.asarray(rows, dtype=np.int32).reshape(-1)
     deltas = np.asarray(deltas, dtype=np.float32)
     d = deltas.shape[-1]
-    for lo in range(0, max(rows.size, 1), capacity):
+    for lo in range(0, rows.size, capacity):
         sl_rows = rows[lo:lo + capacity]
         sl_d = deltas[lo:lo + capacity]
-        if sl_rows.size == 0 and lo > 0:
-            break
         pad = capacity - sl_rows.size
         out_rows = np.concatenate(
             [sl_rows, np.full(pad, PAD_ROW, dtype=np.int32)])

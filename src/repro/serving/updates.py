@@ -149,6 +149,12 @@ class StreamingUpdater:
         migrate re-quantizes with each page's carried scale; counts are
         *not* decayed (this is not a replan).  Returns pages demoted."""
         binding = self.binding
+        if binding.wal is not None and binding.checkpointer is None:
+            raise RuntimeError(
+                "requant-demote with a WAL attached requires a "
+                "checkpointer: demotions are not WAL-representable, so "
+                "every demote must fence with a WAL-truncating snapshot "
+                "or a later restore's replay diverges from the live run")
         eng = binding.engine
         state = binding.state
         counts = np.asarray(jax.device_get(state.counts))
@@ -165,7 +171,8 @@ class StreamingUpdater:
         # Demotions move rows between tiers and are NOT WAL-logged (the
         # WAL holds deltas only), so a post-snapshot demote would make
         # replay diverge.  Fence it: a demote forces a WAL-truncating
-        # snapshot, keeping mid-serving restore bit-exact unconditionally.
+        # snapshot, keeping mid-serving restore bit-exact unconditionally
+        # (the WAL-without-checkpointer case raised at entry above).
         if binding.checkpointer is not None:
             binding.snapshot()
             self.snapshots += 1

@@ -60,10 +60,11 @@ def test_chunk_delta_batch_fixed_shape_and_lossless():
     np.testing.assert_array_equal(got_rows[real], rows)
     np.testing.assert_array_equal(got_d[real], d)
     assert (got_d[~real] == 0).all()
-    # empty batch still yields exactly one all-pad chunk (the warmup shape)
+    # empty batch yields nothing — no caller pays a pointless device
+    # apply (the warmup path builds its own all-pad batch)
     empty = list(chunk_delta_batch(np.empty(0, np.int32),
                                    np.empty((0, 4), np.float32), 4))
-    assert len(empty) == 1 and (empty[0][0] == PAD_ROW).all()
+    assert empty == []
     with pytest.raises(ValueError):
         list(chunk_delta_batch(rows, d, 0))
 
@@ -188,6 +189,28 @@ def test_wal_torn_tail_is_silent_but_corruption_raises(tmp_path):
         WriteAheadLog(str(bad))
 
 
+def test_wal_reopen_truncates_torn_tail_so_recovery_appends_survive(
+        tmp_path):
+    """The crash-recovery scenario the WAL exists for: a torn tail must
+    be cut on reopen, or records appended after recovery land behind the
+    garbage bytes and replay silently drops them."""
+    path = str(tmp_path / "u.wal")
+    wal = WriteAheadLog(path)
+    r = np.arange(4, dtype=np.int32)
+    d = np.ones((4, 2), np.float32)
+    wal.append(1, r, d)
+    wal.append(2, r, d)
+    with open(path, "r+b") as f:                 # crash mid-append of 2
+        f.truncate(os.path.getsize(path) - 7)
+    recovered = WriteAheadLog(path)
+    assert len(recovered) == 1                   # record 2 was torn away
+    recovered.append(5, r + 10, d * 2.0)         # post-recovery append
+    got = list(WriteAheadLog(path).replay())
+    assert [g[0] for g in got] == [1, 5]         # nothing silently lost
+    np.testing.assert_array_equal(got[1][1], r + 10)
+    np.testing.assert_array_equal(got[1][2], d * 2.0)
+
+
 # ---------------------------------------------------------------------------
 # Engine apply path vs dense reference (both storages)
 # ---------------------------------------------------------------------------
@@ -255,6 +278,26 @@ def test_apply_deltas_all_pad_is_bitwise_noop(mesh, storage):
         new = eng.apply_deltas(state, rows, deltas)
         for a, b in ((state.cold, new.cold), (state.hot, new.hot)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_apply_deltas_zero_scale_page_keeps_codes(mesh):
+    """A zero carried scale (representable in a hand-built or restored
+    state, never emitted by quant.page_scales) must not divide: the
+    page's codes stay untouched instead of collapsing to ±127/NaN."""
+    eng, state = _promoted_engine(mesh, "int8")
+    shard = np.asarray(state.page_to_shard)
+    cold_pages = np.nonzero(shard != HOT_SHARD)[0]
+    pg = int(cold_pages[0])
+    scales = np.asarray(state.page_scales).copy()
+    scales[pg] = 0.0
+    state0 = dataclasses.replace(state, page_scales=jnp.asarray(scales))
+    ps = eng.cfg.page_size
+    rows = jnp.asarray([pg * ps], jnp.int32)
+    deltas = jnp.ones((1, 16), jnp.float32)
+    with mesh:
+        new = eng.apply_deltas(state0, rows, deltas)
+        np.testing.assert_array_equal(np.asarray(state0.cold),
+                                      np.asarray(new.cold))
 
 
 def test_apply_deltas_is_placement_invariant(mesh):
@@ -499,6 +542,19 @@ def test_staleness_summary_shape_and_legacy_absence():
     assert st["rows_behind_max"] == 10.0
     assert st["seconds_behind_p99"] == pytest.approx(
         np.percentile([0.5, 0.0], 99))
+
+
+def test_requant_demote_refuses_wal_without_checkpointer(mesh, rmc1,
+                                                         tmp_path):
+    """Demotions are not WAL-representable, so every demote must fence
+    with a WAL-truncating snapshot — running one with a WAL attached but
+    no checkpointer to snapshot into would leave un-fenced pre-demote
+    deltas in the log, and must refuse loudly."""
+    binding = bind_model(rmc1, mesh, storage="int8")
+    wal = WriteAheadLog(str(tmp_path / "u.wal"))
+    upd = StreamingUpdater(binding, [], UpdateConfig(capacity=8), wal=wal)
+    with pytest.raises(RuntimeError, match="checkpointer"):
+        upd.requant_demote()
 
 
 def test_updater_drain_and_apply_every_gate(mesh, rmc1):
