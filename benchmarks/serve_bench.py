@@ -44,7 +44,15 @@ and a mid-serving corrupt -> restore -> WAL-replay probe whose state AND
 lookups are bit-identical to the pre-corruption engine (EXPERIMENTS.md
 §Online embedding updates).
 
-Writes ``BENCH_serve.json`` (schema 4); schema documented in
+The policy-comparison section also runs a fused front-end leg on a
+(4, 2) dp x tp mesh (DLRM archs): ``front_end='fused'`` — resolved
+``fused_tp`` by the engine (partial-pool per shard, psum the (B, F, d)
+cold tile, resume; asserted via ``plan_stats()['front_end']``) — served
+against the ``front_end='split'`` control on the same arrival stream,
+gated on zero steady-state retraces in both runs and probe-batch scores
+bit-equal between the bindings.
+
+Writes ``BENCH_serve.json`` (schema 5); schema documented in
 EXPERIMENTS.md §Serving.
 
 Service times are real measured device executions (interpret-mode caveat
@@ -407,6 +415,77 @@ def run_update_section(binding, cfg, bat_cfg, runtime_cfg, n_requests,
     }
 
 
+def run_front_end_leg(cfg, args, bat_cfg, runtime_cfg, offered_qps, slo_ms,
+                      max_wait_ms, n_requests, batch_sizes, poolings) -> dict:
+    """Fused front end under tensor parallelism, end to end.
+
+    Serves the same offered-load stream through two bindings on a (4, 2)
+    dp x tp mesh — ``front_end='fused'`` (which the engine resolves
+    ``fused_tp``: partial-pool per shard, psum the (B, F, d) cold tile,
+    resume) and the ``front_end='split'`` control.  Hard gates: the fused
+    binding's plans actually resolved ``fused_tp`` (a silent fallback to
+    split would time the wrong datapath), zero steady-state retraces in
+    both runs, and probe-batch scores bit-equal between the bindings."""
+    mesh = make_mesh((4, 2), ("data", "model"))
+    leg = {"mesh": {"data": 4, "model": 2}}
+    with mesh:
+        bindings = {
+            fe: bind_model(cfg, mesh, mode=args.mode, impl=args.impl,
+                           block_l=args.block_l, storage=args.storage,
+                           dedup=args.dedup, front_end=fe)
+            for fe in ("split", "fused")}
+        # bit-equality probe: identical padded batches through both steps
+        factory = dummy_request_factory(cfg, storage=args.storage)
+        padder = make_padder(cfg)
+        for bucket in (Bucket(batch_sizes[0], poolings[0]),
+                       Bucket(batch_sizes[-1], poolings[-1])):
+            batch = padder([factory(i, bucket.pooling)
+                            for i in range(bucket.batch)], bucket)
+            a = np.asarray(bindings["split"].execute(batch))
+            b = np.asarray(bindings["fused"].execute(batch))
+            if not np.array_equal(a, b):
+                raise AssertionError(
+                    f"fused_tp scores diverge from the split control on "
+                    f"bucket {bucket}")
+        for fe, binding in bindings.items():
+            load = LoadConfig(
+                n_requests=n_requests,
+                arrival=ArrivalConfig(rate_qps=offered_qps,
+                                      process="poisson", seed=11),
+                slo_ms=slo_ms, poolings=(), seed=11,
+                storage=args.storage, dedup=args.dedup, front_end=fe)
+            dyn_cfg = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
+            r = run_policy(binding, cfg, DynamicBatcher(dyn_cfg), load,
+                           runtime_cfg)
+            if r["steady_traces"]:
+                raise AssertionError(
+                    f"plan cache failed: steady-state retrace in the "
+                    f"front-end leg (front_end={fe})")
+            recs = [rec for rec in
+                    binding.engine.plan_stats().get("front_end", {}).values()
+                    if rec["requested"] == fe]
+            want = "fused_tp" if fe == "fused" else "split"
+            if fe == "fused" and (
+                    not recs
+                    or any(rec["resolved"] != want for rec in recs)):
+                # the split control composes lookup + interaction as
+                # separate ops (no lookup_interact plan, no record); the
+                # fused binding must have resolved every plan fused_tp
+                raise AssertionError(
+                    f"front-end leg resolution: requested={fe} expected "
+                    f"{want!r}, got {[rec['resolved'] for rec in recs]}")
+            r.pop("latency_hist", None)
+            r.pop("dedup_factors", None)
+            r["resolved"] = want
+            leg[fe] = r
+            print(f"[front-end] {fe:5s} -> {want:8s} "
+                  f"qps={r['qps']:8.1f} p50={r['p50_ms']:7.2f} "
+                  f"p99={r['p99_ms']:8.2f} "
+                  f"steady_traces={r['steady_traces']}")
+    leg["scores_bit_equal"] = True
+    return leg
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -536,7 +615,7 @@ def main() -> None:
                 tempfile.mkdtemp(prefix="serve_bench_ckpt_"))
             out = {
                 "bench": "serve",
-                "schema": 4,
+                "schema": 5,
                 "section": "faults",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -570,7 +649,7 @@ def main() -> None:
                                 if k != "latency_hist"}
             out = {
                 "bench": "serve",
-                "schema": 4,
+                "schema": 5,
                 "section": "updates",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -639,9 +718,17 @@ def main() -> None:
                            "gate_qps": regime["gate_qps"],
                            "dynamic": dyn, "fixed": fix}
 
+    # fused front end under tp (DLRM only: Rec configs have no
+    # dot-interaction stage, so the knob is a no-op for them)
+    front_end_leg = None
+    if hasattr(cfg, "n_tables"):
+        front_end_leg = run_front_end_leg(
+            cfg, args, bat_cfg, runtime_cfg, 0.3 * capacity_qps, slo_ms,
+            max_wait_ms, min(n_requests, 120), batch_sizes, poolings)
+
     out = {
         "bench": "serve",
-        "schema": 4,
+        "schema": 5,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,
@@ -661,6 +748,7 @@ def main() -> None:
         "max_wait_ms": max_wait_ms,
         "n_requests": n_requests,
         "runs": runs,
+        "front_end_leg": front_end_leg,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

@@ -61,20 +61,29 @@ stored bytes crossing the memory interface are the cost that matters):
     recorded, not gated (interpret-mode caveat below: the sort-unique adds
     interpreter work that TPU hardware amortizes against the DMA savings).
 
-Fused front end (schema 4, ``--front-end sweep``, the default): a separate
+Fused front end (schema 5, ``--front-end sweep``, the default): a separate
 section on the *default DLRM shape* (8 tables x pooling 8, D=64) over a
 dp-only (8, 1) mesh — the replicated/dp-sharded serving config where
 ``front_end='fused'`` resolves fused — gating (a) fused == split bit-for-bit
 per {impl, storage, dedup}, (b) the front-end bytes ledger
 (``front_end_bytes``: gather + pooled/features HBM round trips for split,
-gather only for fused) at ``fused <= 0.72x split``, (c) zero steady-state
-retraces, and (d) the tp-sharded control resolving the knob back to split
-(checked via ``plan_stats()['front_end']`` — excluded from the gate, never
-silently counted).  An ``e2e`` block times the full DLRM serve step
-(bottom MLP -> lookup -> interaction -> top MLP as one jitted step) for
-both pipelines and pins their scores bit-equal.
+gather only for fused) at ``fused <= 0.72x split``, and (c) zero
+steady-state retraces.  A tp-sharded (4, 2) subsection exercises the
+``fused_tp`` resolution (partial-pool the owned rows per shard, psum only
+the small (B, F, D) cold tile between the kernel halves, resume the
+interaction on the reduced tile — checked via
+``plan_stats()['front_end']``, never silently counted): fused_tp == split
+bit-for-bit per {impl, storage, dedup}, zero steady-state retraces across
+observe/replan cycles, and the tp bytes ledger — split under tp
+materializes cold-partial / psum-output / hot / pooled (B, G, D) round
+trips plus the (B, F, D) features round trip, fused_tp only the three
+(B, F, D) tiles — gated ``fused_tp <= 0.8x split`` on int8 configs (the
+fp32 rows are recorded ungated: the row gather dominates there and the
+analytic ratio is marginal).  An ``e2e`` block times the full DLRM serve
+step (bottom MLP -> lookup -> interaction -> top MLP as one jitted step)
+for both pipelines on both meshes and pins scores bit-equal per mesh.
 
-Writes ``BENCH_sls.json`` (schema 4); documented in EXPERIMENTS.md §Perf,
+Writes ``BENCH_sls.json`` (schema 5); documented in EXPERIMENTS.md §Perf,
 §Quantized cold-tier storage, §Duplicate-access coalescing and §Fused
 front end.
 
@@ -123,13 +132,18 @@ BW_IMPROVEMENT_GATE = 2.0  # bytes-moved-basis effective-bandwidth gain
 DEDUP_BYTES_GATE = 0.5     # dedup=on gathered bytes vs off (zipfian gate)
 DEDUP_GATE_MIN_ENTRIES = 2048  # pooled entries below which the gate is off
 
-# ---- fused front end (schema 4) ----
+# ---- fused front end (schema 5) ----
 # Default DLRM shape (paper evaluation setup: 8 tables x pooling 8, D=64 —
 # the RMC1/2/3 embedding dim), dp-only mesh (8, 1): the replicated/
 # dp-sharded serving config where the fused front end resolves fused.
+# The tp subsection reruns the sweep on a (4, 2) mesh where it resolves
+# fused_tp (partial-pool -> psum the (B, F, D) cold tile -> resume).
 FE_SHAPE = dict(B=16, G=8, L=8, D=64)
 FE_VOCAB = 2048            # rows per table (page-aligned for both storages)
 FE_BYTES_GATE = 0.72       # fused front-end bytes must be <= 0.72x split
+FE_TP_MESH = (4, 2)        # dp x tp mesh for the fused_tp subsection
+FE_TP_BYTES_GATE = 0.8     # fused_tp bytes vs split-under-tp, int8 configs
+#                            (fp32 is gather-dominated: recorded, not gated)
 
 
 class CompileEventCounter:
@@ -181,22 +195,41 @@ def bytes_moved_per_lookup(B: int, L: int, D: int, storage: str,
 
 
 def front_end_bytes(B: int, Gt: int, L: int, D: int, storage: str,
-                    front_end: str, dedup_info=None) -> int:
+                    front_end: str, dedup_info=None, tp: int = 1) -> int:
     """Total bytes the DLRM front end (SLS gather -> pooled features ->
     dot-interaction) moves per lookup.
 
     Both pipelines pay the same row-gather traffic (``bytes_moved_per_
-    lookup``, dedup-aware), the (B, D) bottom-MLP read and the (B, P)
-    packed-triangle write.  The *split* pipeline additionally round-trips
-    the pooled features through HBM twice: the SLS writes (B, G, D) pooled
-    and the concat reads it back (one round trip), then the concat writes
-    the (B, F, D) features tensor and the interaction kernel reads it back
+    lookup``, dedup-aware — each row lives on exactly one shard under any
+    mesh), the (B, D) bottom-MLP read and the (B, P) packed-triangle
+    write.  The *split* pipeline additionally round-trips the pooled
+    features through HBM twice: the SLS writes (B, G, D) pooled and the
+    concat reads it back (one round trip), then the concat writes the
+    (B, F, D) features tensor and the interaction kernel reads it back
     (the second) — the ``2 + 2`` x ``B*F*D*4`` traffic the fused kernel's
-    persistent VMEM staging eliminates (kernels/sls.py phase 2/3)."""
+    persistent VMEM staging eliminates (kernels/sls.py phase 2/3).
+
+    Under tensor parallelism (``tp > 1``) both pipelines must cross a
+    psum, so the ledger counts what each materializes around it.  Split
+    stages four (B, G, D) tensors through HBM — the per-shard cold
+    partial (write + psum read), the psum output (write + hot-add read),
+    the hot contribution (write + add read) and the pooled result (write
+    + concat read), ``8 * B*G*D*4`` — plus the same (B, F, D) features
+    round trip, ``2 * B*F*D*4``.  fused_tp stages exactly three (B, F, D)
+    tiles: the partial cold tile (kernel write + psum read), the reduced
+    tile (psum write + resume read) and the hot tile (kernel write +
+    resume read), ``6 * B*F*D*4`` — the psum ships a *pooled* tile whose
+    size is independent of L, never raw rows (reduce-then-communicate,
+    paper §IV-B)."""
     F = Gt + 1
     Pp = F * (F - 1) // 2
     gather = bytes_moved_per_lookup(B, L, D, storage, dedup_info, g=Gt)
     stage = B * D * 4 + B * Pp * 4              # x in + packed triangle out
+    unit = B * D * 4
+    if tp > 1:
+        if front_end == "fused_tp":
+            return gather + stage + 6 * F * unit
+        return gather + stage + (8 * Gt + 2 * F) * unit
     if front_end == "fused":
         return gather + stage
     pooled_rt = 2 * B * Gt * D * 4              # pooled write + concat read
@@ -293,18 +326,23 @@ def fe_make_indices(B: int, Gt: int, L: int, distribution: str, alpha
 
 
 def run_front_end_section(args, events, storages) -> dict:
-    """Schema-4 front-end sweep: fused vs split on the default DLRM shape.
+    """Schema-5 front-end sweep: fused vs split on the default DLRM shape.
 
     Engine-level rows (dp-only (8, 1) mesh, where fusion resolves fused):
     bitwise equality fused == split per {impl, storage, dedup}, p50/p90
     per (front_end, impl), zero steady-state retraces, and the front-end
     bytes ledger gated ``fused <= FE_BYTES_GATE x split``.  A tp-sharded
-    (2, 4) control config demonstrates the documented fallback: the knob
-    resolves back to split (checked via ``plan_stats()['front_end']``)
-    and the row is excluded from the gate rather than silently counted.
-    An end-to-end ``e2e`` block times the full DLRM serve step (bottom
-    MLP -> lookup -> interaction -> top MLP, one jitted step) for both
-    pipelines.
+    ``FE_TP_MESH`` subsection reruns the sweep where the knob resolves
+    ``fused_tp`` (asserted via ``plan_stats()['front_end']`` — a silent
+    fallback to split would fake the bytes win): fused_tp == split
+    bit-for-bit per {impl, storage, dedup}, zero steady-state retraces
+    across observe/replan cycles, a pond partial-pool row (bitwise equal
+    to the fixed-l-order split composition), and the tp bytes ledger
+    gated ``fused_tp <= FE_TP_BYTES_GATE x split`` on int8 configs (fp32
+    rows recorded ungated — the row gather dominates them).  An
+    end-to-end ``e2e`` block times the full DLRM serve step (bottom MLP
+    -> lookup -> interaction -> top MLP, one jitted step) for both
+    pipelines on both meshes.
     """
     from repro.configs import get_config
     from repro.models import dlrm as dlrm_mod
@@ -441,79 +479,202 @@ def run_front_end_section(args, events, storages) -> dict:
                         f"storage={storage} dedup={dedup}: "
                         f"{comp['bytes_ratio']:.3f} > {FE_BYTES_GATE}")
 
-    # ---- tp-sharded control: the knob must resolve back to split ----
-    mesh_tp = make_mesh((2, 4), ("data", "model"))
-    eng_tp, _ = engine_for_tables([FE_VOCAB] * Gt, dim=D, mesh=mesh_tp,
-                                  hot_fraction=0.05)
-    st_tp = eng_tp.init_state(jax.random.PRNGKey(0))
-    idx = fe_make_indices(B, Gt, L, "uniform", None)
-    with mesh_tp:
-        a = np.asarray(eng_tp.lookup_interact(st_tp, idx, x, impl="pallas",
-                                              front_end="fused"))
-        b = np.asarray(eng_tp.lookup_interact(st_tp, idx, x, impl="pallas",
-                                              front_end="split"))
-    rec = [r for r in eng_tp.plan_stats()["front_end"].values()
-           if r["requested"] == "fused"][0]
-    if rec["resolved"] != "split":
-        raise AssertionError("tp-sharded config must resolve fused -> split")
-    if not np.array_equal(a, b):
-        raise AssertionError("tp fallback changed numerics")
-    tp_control = {"mesh": {"data": 2, "model": 4}, "requested": "fused",
-                  "resolved": rec["resolved"], "reason": rec["reason"],
-                  "gated": False}
-    print(f"FE tp control: fused resolves -> {rec['resolved']} "
-          f"(excluded from the bytes gate)")
+    # ---- tp-sharded subsection: partial-pool -> psum -> resume ----
+    mesh_tp = make_mesh(FE_TP_MESH, ("data", "model"))
+    tp = FE_TP_MESH[1]
+    tp_results, tp_comparisons = [], []
+    tp_dists = [("zipfian", 1.1)] if args.quick else dists
+    for storage in storages:
+        eng_tp, _ = engine_for_tables([FE_VOCAB] * Gt, dim=D, mesh=mesh_tp,
+                                      hot_fraction=0.05, storage=storage)
+        st_tp = eng_tp.init_state(jax.random.PRNGKey(0))
+        for dist, alpha in tp_dists:
+            idx = fe_make_indices(B, Gt, L, dist, alpha)
+            dlabel = dist if alpha is None else f"{dist}(a={alpha})"
+            dup = eng_tp.dedup_factor(st_tp, idx)
+            dedups = ("off",) if dist == "uniform" or args.dedup == "off" \
+                else ("off", "on")
+            for dedup in dedups:
+                # ---- correctness gate: fused_tp == split bit-for-bit ----
+                with mesh_tp:
+                    outs = {}
+                    for impl in IMPLS:
+                        for fe in ("split", "fused"):
+                            outs[(impl, fe)] = np.asarray(
+                                eng_tp.lookup_interact(
+                                    st_tp, idx, x, impl=impl, dedup=dedup,
+                                    front_end=fe))
+                    base = outs[("jnp", "split")]
+                    for k, v in outs.items():
+                        if not np.array_equal(base, v):
+                            raise AssertionError(
+                                f"fused_tp not bit-exact for {k} "
+                                f"(storage={storage} dedup={dedup})")
+                    # pond partial-pool row: pools cold partials before the
+                    # hot/cold add — bitwise equal to the fixed-l-order
+                    # split composition above
+                    pond = np.asarray(eng_tp.lookup_interact(
+                        st_tp, idx, x, impl="pallas", dedup=dedup,
+                        mode="pond", front_end="fused"))
+                    if not np.array_equal(base, pond):
+                        raise AssertionError(
+                            f"pond fused_tp diverged from the fixed-l-order "
+                            f"composition (storage={storage} dedup={dedup})")
+                # ---- timing + resolution + retrace probes ----
+                p50 = {}
+                for impl in IMPLS:
+                    for fe in ("split", "fused"):
+                        eng_tp.reset_plan_stats(clear_plans=True)
+                        events.take()
+                        with mesh_tp:
+                            for _ in range(2):
+                                jax.block_until_ready(eng_tp.lookup_interact(
+                                    st_tp, idx, x, impl=impl, dedup=dedup,
+                                    front_end=fe))
+                            warm_traces = eng_tp.plan_stats()["traces"]
+                            lat = []
+                            for _ in range(reps):
+                                t0 = time.perf_counter()
+                                jax.block_until_ready(eng_tp.lookup_interact(
+                                    st_tp, idx, x, impl=impl, dedup=dedup,
+                                    front_end=fe))
+                                lat.append(time.perf_counter() - t0)
+                            # steady state must survive the serving cadence:
+                            # observe + replan between micro-batches
+                            st2 = eng_tp.observe(st_tp, idx)
+                            st2, _ = eng_tp.plan_and_migrate(st2)
+                            jax.block_until_ready(eng_tp.lookup_interact(
+                                st2, idx, x, impl=impl, dedup=dedup,
+                                front_end=fe))
+                        stats = eng_tp.plan_stats()
+                        steady = stats["traces"] - warm_traces
+                        if steady:
+                            raise AssertionError(
+                                f"fused_tp steady-state retrace: impl={impl} "
+                                f"fe={fe} storage={storage} dedup={dedup}")
+                        fe_recs = [r for r in stats["front_end"].values()
+                                   if r["requested"] == fe]
+                        resolved = fe_recs[0]["resolved"]
+                        if fe == "fused" and resolved != "fused_tp":
+                            raise AssertionError(
+                                f"tp-sharded fused plan resolved "
+                                f"{resolved!r}, not 'fused_tp' "
+                                f"(storage={storage}): the bytes ledger "
+                                "would claim unrealized wins")
+                        if fe == "fused" and fe_recs[0]["tp"] != tp:
+                            raise AssertionError(
+                                f"front_end record tp={fe_recs[0]['tp']} "
+                                f"!= mesh tp={tp}")
+                        info = dup if dedup == "on" else None
+                        fe_name = "fused_tp" if fe == "fused" else fe
+                        nbytes = front_end_bytes(B, Gt, L, D, storage,
+                                                 fe_name, info, tp=tp)
+                        r = {"B": B, "G": Gt, "L": L, "D": D,
+                             "storage": storage, "impl": impl,
+                             "front_end": fe, "resolved": resolved,
+                             "dedup": dedup, "distribution": dist,
+                             "alpha": alpha,
+                             "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                             "p90_ms": float(np.percentile(lat, 90) * 1e3),
+                             "steady_traces": steady,
+                             "bytes_moved_per_lookup": nbytes,
+                             "dup_factor": dup["factor"]}
+                        tp_results.append(r)
+                        p50[(impl, fe)] = r["p50_ms"]
+                        print(f"FE-tp {dlabel:16s} storage={storage:5s} "
+                              f"dedup={dedup:3s} impl={impl:6s} "
+                              f"fe={fe_name:8s} p50={r['p50_ms']:8.2f}ms "
+                              f"bytes/lookup={nbytes:8d}")
+                # ---- tp bytes gate (int8; fp32 gather-dominated) ----
+                info = dup if dedup == "on" else None
+                b_split = front_end_bytes(B, Gt, L, D, storage, "split",
+                                          info, tp=tp)
+                b_fused = front_end_bytes(B, Gt, L, D, storage, "fused_tp",
+                                          info, tp=tp)
+                gated = storage == "int8"
+                comp = {"B": B, "G": Gt, "L": L, "D": D, "storage": storage,
+                        "dedup": dedup, "distribution": dist, "alpha": alpha,
+                        "bytes_split": b_split, "bytes_fused_tp": b_fused,
+                        "bytes_ratio": b_fused / b_split,
+                        "resolved": "fused_tp", "gated": gated,
+                        "p50_ratio_jnp": (p50[("jnp", "fused")]
+                                          / p50[("jnp", "split")]),
+                        "p50_ratio_pallas": (p50[("pallas", "fused")]
+                                             / p50[("pallas", "split")])}
+                tp_comparisons.append(comp)
+                print(f"FE-tp fused_tp vs split @ {dlabel} {storage} "
+                      f"dedup={dedup}: bytes {comp['bytes_ratio']:.3f}x "
+                      f"(gated={gated}), p50 jnp "
+                      f"{comp['p50_ratio_jnp']:.2f}x / pallas "
+                      f"{comp['p50_ratio_pallas']:.2f}x")
+                if gated and comp["bytes_ratio"] > FE_TP_BYTES_GATE:
+                    raise AssertionError(
+                        f"fused_tp bytes gate failed at {dlabel} "
+                        f"storage={storage} dedup={dedup}: "
+                        f"{comp['bytes_ratio']:.3f} > {FE_TP_BYTES_GATE}")
 
     # ---- e2e: bottom MLP -> lookup -> interaction -> top MLP, one step ----
     cfg = dataclasses.replace(get_config("rmc1"), emb_num=FE_VOCAB)
     e2e = []
-    eng, _ = dlrm_mod.build_engine(cfg, mesh)
-    state = eng.init_state(jax.random.PRNGKey(0))
-    params = prm.initialize(dlrm_mod.model_specs(cfg, mesh),
-                            jax.random.PRNGKey(1))
     from repro.data.synth import dlrm_batches
     batch = next(dlrm_batches(cfg, batch=B, n_batches=1))
     jb = {"dense": jnp.asarray(batch["dense"]),
           "indices": jnp.asarray(batch["indices"])}
     e2e_reps = max(3, reps)
-    outs = {}
-    for fe in ("split", "fused"):
-        for impl in IMPLS:
-            step = jax.jit(dlrm_mod.make_serve_step(
-                cfg, eng, mesh, impl=impl, interaction_impl=impl,
-                front_end=fe))
-            eng.reset_plan_stats(clear_plans=True)
-            with mesh:
-                for _ in range(2):
-                    jax.block_until_ready(step(params, state, jb))
-                warm = eng.plan_stats()["traces"]
-                lat = []
-                for _ in range(e2e_reps):
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(step(params, state, jb))
-                    lat.append(time.perf_counter() - t0)
-                outs[(fe, impl)] = np.asarray(step(params, state, jb))
-            steady = eng.plan_stats()["traces"] - warm
-            if steady:
+    for dims, m in (((8, 1), mesh), (FE_TP_MESH, mesh_tp)):
+        eng, _ = dlrm_mod.build_engine(cfg, m)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        params = prm.initialize(dlrm_mod.model_specs(cfg, m),
+                                jax.random.PRNGKey(1))
+        outs = {}
+        for fe in ("split", "fused"):
+            for impl in IMPLS:
+                step = jax.jit(dlrm_mod.make_serve_step(
+                    cfg, eng, m, impl=impl, interaction_impl=impl,
+                    front_end=fe))
+                eng.reset_plan_stats(clear_plans=True)
+                with m:
+                    for _ in range(2):
+                        jax.block_until_ready(step(params, state, jb))
+                    warm = eng.plan_stats()["traces"]
+                    lat = []
+                    for _ in range(e2e_reps):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(step(params, state, jb))
+                        lat.append(time.perf_counter() - t0)
+                    outs[(fe, impl)] = np.asarray(step(params, state, jb))
+                steady = eng.plan_stats()["traces"] - warm
+                if steady:
+                    raise AssertionError(
+                        f"e2e steady-state retrace: mesh={dims} fe={fe} "
+                        f"impl={impl}")
+                r = {"arch": cfg.name, "B": B, "front_end": fe,
+                     "impl": impl,
+                     "mesh": {"data": dims[0], "model": dims[1]},
+                     "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                     "p90_ms": float(np.percentile(lat, 90) * 1e3),
+                     "steady_traces": steady}
+                e2e.append(r)
+                print(f"FE e2e {cfg.name} mesh={dims} fe={fe:5s} "
+                      f"impl={impl:6s} p50={r['p50_ms']:8.2f}ms")
+        # scores pin within a mesh only: per-shard fixed l-order differs
+        # across placements, so cross-mesh equality is not a contract
+        base = outs[("split", "jnp")]
+        for k, v in outs.items():
+            if not np.array_equal(base, v):
                 raise AssertionError(
-                    f"e2e steady-state retrace: fe={fe} impl={impl}")
-            r = {"arch": cfg.name, "B": B, "front_end": fe, "impl": impl,
-                 "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                 "p90_ms": float(np.percentile(lat, 90) * 1e3),
-                 "steady_traces": steady}
-            e2e.append(r)
-            print(f"FE e2e {cfg.name} fe={fe:5s} impl={impl:6s} "
-                  f"p50={r['p50_ms']:8.2f}ms")
-    base = outs[("split", "jnp")]
-    for k, v in outs.items():
-        if not np.array_equal(base, v):
-            raise AssertionError(f"e2e scores not bit-exact for {k}")
+                    f"e2e scores not bit-exact for {k} on mesh={dims}")
 
     return {"shape": dict(FE_SHAPE, vocab=FE_VOCAB),
             "mesh": {"data": 8, "model": 1},
             "bytes_gate": FE_BYTES_GATE,
             "results": results, "fused_vs_split": comparisons,
-            "tp_control": tp_control, "e2e": e2e}
+            "tp": {"mesh": {"data": FE_TP_MESH[0], "model": FE_TP_MESH[1]},
+                   "bytes_gate": FE_TP_BYTES_GATE,
+                   "gated_storages": ["int8"],
+                   "results": tp_results,
+                   "fused_tp_vs_split": tp_comparisons},
+            "e2e": e2e}
 
 
 def main() -> None:
@@ -540,10 +701,13 @@ def main() -> None:
                          "1.1 ~ Meta-trace-like)")
     ap.add_argument("--front-end", dest="front_end", default="sweep",
                     choices=["sweep", "off"],
-                    help="schema-4 fused-front-end section: fused vs split "
-                         "on the default DLRM shape (dp-only mesh), bytes "
-                         "gate, tp-fallback control, and the end-to-end "
-                         "lookup->interaction->top-MLP step timing")
+                    help="schema-5 fused-front-end section: fused vs split "
+                         "on the default DLRM shape (dp-only mesh, bytes "
+                         "gate), the tp-sharded fused_tp subsection "
+                         "(partial-pool -> psum -> resume, its own bytes "
+                         "gate on int8), and the end-to-end "
+                         "lookup->interaction->top-MLP step timing on both "
+                         "meshes")
     args = ap.parse_args()
 
     mesh = make_mesh((2, 4), ("data", "model"))
@@ -707,7 +871,7 @@ def main() -> None:
 
     out = {
         "bench": "sls_lookup",
-        "schema": 4,
+        "schema": 5,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,

@@ -368,14 +368,22 @@ class PIFSEmbeddingEngine:
         front_end: 'split' materializes the pooled features and runs the
         interaction as a separate op (the seed pipeline); 'fused' keeps
         them in VMEM from the SLS accumulate through the interaction
-        matmul (impl='pallas'; see ``kernels/sls.py``).  Fusion is scoped
-        to the replicated/dp-sharded serving config: with tp-sharded cold
-        partials (tp > 1) the interaction needs a cross-shard psum between
-        SLS and interaction, and ``mode='pond'`` ships raw rows, so those
-        configs resolve the knob back to 'split' **exactly** — same
-        numerics, recorded in ``plan_stats()['front_end']`` (the dedup
-        resolution pattern).  Bit-for-bit equal across
-        {front_end, impl, storage, dedup} in fp32.
+        matmul (impl='pallas'; see ``kernels/sls.py``).  On the
+        replicated/dp-sharded config (tp == 1, pifs/beacon) the knob
+        resolves ``'fused'`` — the single three-phase kernel.  With
+        tp-sharded cold partials (tp > 1), or in ``mode='pond'``, it
+        resolves ``'fused_tp'``: each shard runs phases 1-2 on its owned
+        rows (dedup staging stays per-shard), the small partial-pooled
+        (B, F, D) cold tile is psum'd across shards instead of raw rows,
+        and phase 3 resumes on the reduced tile — features stay
+        VMEM-resident on both sides of the collective.  For pond this
+        means the cold partials are pooled *before* the hot/cold add (the
+        reduce-near-data datapath), so pond-fused matches the fixed
+        l-order split composition bitwise, not pond-split's segment-sum
+        order.  The resolution is recorded in
+        ``plan_stats()['front_end']`` (the dedup resolution pattern).
+        Bit-for-bit equal across {front_end, impl, storage, dedup} in
+        fp32 for pifs/beacon on any mesh.
 
         ``combine`` only names the pooled-lookup collective for plan-cache
         symmetry with :meth:`lookup`: the interaction consumes every bag of
@@ -410,14 +418,14 @@ class PIFSEmbeddingEngine:
                else (tuple(weights.shape), jnp.dtype(weights.dtype).name))
         plan = self._plans.get(key)
         if plan is None:
-            fused = self._resolve_front_end(key, front_end, mode)
+            fe = self._resolve_front_end(key, front_end, mode)
             dedup_on = self._resolve_dedup(
                 key, dedup, state, indices, dp_shard=dp_shard,
-                fused_blocks=int(block_b) if fused else None)
+                fused_blocks=int(block_b) if fe != "split" else None)
             plan = self._build_interact_plan(
                 mode=mode, dp_shard=dp_shard, impl=impl, block_l=block_l,
                 block_b=block_b, has_weights=weights is not None,
-                dedup=dedup_on, fused=fused)
+                dedup=dedup_on, front_end_resolved=fe)
             self._plans[key] = plan
         self._plan_calls += 1
         args = (state.cold, state.hot, state.page_scales,
@@ -427,42 +435,53 @@ class PIFSEmbeddingEngine:
             args = args + (weights,)
         return plan(*args)
 
-    def _resolve_front_end(self, key, front_end: str, mode: str) -> bool:
+    def _resolve_front_end(self, key, front_end: str, mode: str) -> str:
         """Freeze the front-end fusion decision for one interact plan.
 
         Host-side, once per signature at plan build (the dedup pattern).
-        'fused' resolves fused only for the replicated/dp-sharded config:
-        ``tp == 1`` and a reduce-near-data mode (pifs/beacon).  tp-sharded
-        cold partials are *masked partials* — the interaction is nonlinear
-        in the pooled features, so a cross-shard psum must land between
-        SLS and interaction and the fusion window closes; pond ships raw
-        rows (no pooling near the data at all).  Those configs resolve
-        back to 'split' exactly — identical numerics, just without the
-        VMEM-residency bytes win — and the resolution is recorded for
-        ``plan_stats()['front_end']``."""
+        Returns the resolved datapath, one of
+
+          * ``'split'`` — requested split: pooled features materialize and
+            the interaction runs as a separate op,
+          * ``'fused'`` — the replicated/dp-sharded config (tp == 1,
+            pifs/beacon): the single three-phase kernel,
+          * ``'fused_tp'`` — tp-sharded cold partials (tp > 1) or pond:
+            the partial-pool kernel emits per-tier (B, F, D) feature
+            tiles, the cold tile is psum'd across tp shards (the pooled
+            tile crosses the fabric, never raw rows), and the resume
+            kernel runs phase 3 on the reduced tile.  Pond requesting
+            fusion opts into pooling its cold partials before the
+            hot/cold add — the reduce-near-data datapath.
+
+        The resolution (requested/resolved/reason/tp) is recorded for
+        ``plan_stats()['front_end']`` so benches can assert the datapath
+        they are timing."""
         tp = self.axes.tp_size(self.mesh)
         if front_end == "split":
-            resolved, reason = False, "requested"
-        elif mode == "pond":
-            resolved, reason = False, (
-                "pond ships raw rows across shards; no per-shard pooled "
-                "partial exists to fuse the interaction onto")
+            resolved, reason = "split", "requested"
         elif tp > 1:
-            resolved, reason = False, (
-                f"tp-sharded masked partials (tp={tp}) need a cross-shard "
-                "psum between SLS and interaction")
+            resolved, reason = "fused_tp", (
+                f"tp-sharded masked partials (tp={tp}): each shard pools "
+                "its partial (B, F, D) cold tile; the cross-shard psum "
+                "lands between the partial-pool and resume kernels")
+        elif mode == "pond":
+            resolved, reason = "fused_tp", (
+                "pond requesting fusion pools cold partials before the "
+                "hot/cold add (partial-pool -> psum -> resume) instead of "
+                "shipping raw rows")
         else:
-            resolved, reason = True, "replicated/dp-sharded config"
+            resolved, reason = "fused", "replicated/dp-sharded config"
         self._fe_plans[key] = {
             "requested": front_end,
-            "resolved": "fused" if resolved else "split",
+            "resolved": resolved,
             "reason": reason,
+            "tp": tp,
         }
         return resolved
 
     def _build_interact_plan(self, *, mode: str, dp_shard: bool, impl: str,
                              block_l: int, block_b: int, has_weights: bool,
-                             dedup: bool, fused: bool):
+                             dedup: bool, front_end_resolved: str):
         """Build the shard_map + jit closure for one interact signature."""
         axes, mesh = self.axes, self.mesh
         dp, tp = axes.dp, axes.tp
@@ -475,8 +494,13 @@ class PIFSEmbeddingEngine:
 
         def block(cold, hot, scales, p2s, p2slot, idx, x, *w):
             wloc = w[0] if w else None
-            if fused:
+            if front_end_resolved == "fused":
                 return self._interact_block_fused(
+                    cold, hot, scales, p2s, p2slot, idx, x, wloc,
+                    impl=impl, block_l=block_l, block_b=block_b,
+                    dedup=dedup)
+            if front_end_resolved == "fused_tp":
+                return self._interact_block_fused_tp(
                     cold, hot, scales, p2s, p2slot, idx, x, wloc,
                     impl=impl, block_l=block_l, block_b=block_b,
                     dedup=dedup)
@@ -521,6 +545,36 @@ class PIFSEmbeddingEngine:
             cold, hot, x, local_row, owned, is_hot, weights=weights,
             scales=scale, impl=impl, block_l=block_l, block_b=block_b,
             dedup=dedup, out_dtype=jnp.float32)
+
+    def _interact_block_fused_tp(self, cold, hot, scales, p2s, p2slot, idx,
+                                 x, weights, *, impl: str, block_l: int,
+                                 block_b: int, dedup: bool):
+        """Per-device tp-aware fused front-end block: phases 1-2 pool this
+        shard's owned rows into the per-tier (b, F, D) partial feature
+        tiles, the small *cold* tile is psum'd across tp shards (hot is
+        replicated and x must be counted once, so only cold crosses the
+        fabric — the reduce-then-communicate datapath the paper argues
+        for), and phase 3 resumes on the reduced tile.  Each shard
+        accumulates in the same fixed l-order as the split partials and
+        the psum's per-element operand order is deterministic per mesh,
+        so the composition equals ``psum(cold_part) + hot_out`` -> concat
+        -> interaction bit-for-bit in fp32."""
+        c, axes = self.cfg, self.axes
+        ps = c.page_size
+        page = idx // ps
+        offset = idx % ps
+        shard = p2s[page]
+        local_row = p2slot[page] * ps + offset                 # (b, G, L)
+        owned = shard == jax.lax.axis_index(axes.tp)
+        is_hot = shard == HOT_SHARD
+        scale = scales[page] if self.quantized else None
+        part_c, part_h = sls_ops.fused_partial_pool_dense(
+            cold, hot, x, local_row, owned, is_hot, weights=weights,
+            scales=scale, impl=impl, block_l=block_l, block_b=block_b,
+            dedup=dedup, out_dtype=jnp.float32)
+        reduced = jax.lax.psum(part_c, axes.tp)
+        return sls_ops.fused_resume_dense(reduced, part_h, impl=impl,
+                                          block_b=block_b)
 
     # ------------------------------------------------- compiled-lookup plans
     def _resolve_dedup(self, key, dedup: str, state: EngineState,

@@ -288,6 +288,96 @@ def fused_front_end_dense(cold_storage: jax.Array, hot_storage: jax.Array,
     return kernel_ref.dot_interaction_ref(feats)
 
 
+def fused_partial_pool_dense(cold_storage: jax.Array, hot_storage: jax.Array,
+                             x: jax.Array, local_rows: jax.Array,
+                             owned: jax.Array, is_hot: jax.Array,
+                             weights: Optional[jax.Array] = None,
+                             scales: Optional[jax.Array] = None,
+                             impl: str = "jnp", block_l: int = 8,
+                             block_b: int = 32,
+                             interpret: Optional[bool] = None,
+                             dedup: bool = False,
+                             out_dtype=jnp.float32):
+    """Phases 1-2 of :func:`fused_front_end_dense`, stopped at the phase-2/3
+    seam: returns the per-tier partial feature tiles ``(B, F, D)``.
+
+    ``part_c`` holds this shard's cold-tier partial pools with feature row 0
+    all-zero — the tile a tp dispatch ``psum``s across shards (row 0 must
+    not pick up ``x`` tp times).  ``part_h`` holds the hot-tier pools with
+    ``x`` in row 0 (hot is replicated, never reduced).  The jnp impl IS the
+    split composition's per-tier pieces (same
+    :func:`masked_partial_sls_dense` calls, same fixed l-order), so
+    ``fused_resume_dense(psum(part_c), part_h)`` reproduces
+    ``psum(cold_part) + hot_out`` bit-for-bit in fp32.  Dedup staging stays
+    per-shard: the plans are built on this shard's ownership and only the
+    pooled tile crosses the fabric.
+    """
+    B, G, L = local_rows.shape
+    D = cold_storage.shape[-1]
+    F = G + 1
+    if B == 0 or L == 0 or G == 0:
+        zc = jnp.zeros((B, F, D), out_dtype)
+        return zc, zc.at[:, 0, :].set(x.astype(out_dtype))
+    if hot_storage.shape[0] == 0:
+        hot_storage = jnp.zeros((1, D), hot_storage.dtype)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        plans = None
+        if dedup:
+            nb = B * G
+            cp = dedup_plan(local_rows.reshape(nb, L),
+                            owned.reshape(nb, L),
+                            None if scales is None
+                            else scales.reshape(nb, L))
+            hp = dedup_plan(local_rows.reshape(nb, L),
+                            is_hot.reshape(nb, L))
+            plans = (cp._replace(slots=cp.slots.reshape(B, G, L)),
+                     hp._replace(slots=hp.slots.reshape(B, G, L)))
+        return kernel_ops.fused_partial_pool(
+            cold_storage, hot_storage, x, local_rows, owned, is_hot,
+            weights=weights, scales=scales, dedup_plans=plans,
+            out_dtype=out_dtype, interpret=interpret, block_l=block_l,
+            block_b=block_b)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r}")
+    nb = B * G
+    flat = local_rows.reshape(nb, L)
+    w = None if weights is None else weights.reshape(nb, L)
+    cold_p = masked_partial_sls_dense(
+        cold_storage, flat, owned.reshape(nb, L), w, impl="jnp",
+        scales=None if scales is None else scales.reshape(nb, L),
+        out_dtype=out_dtype, dedup=dedup)
+    hot_p = masked_partial_sls_dense(
+        hot_storage, flat, is_hot.reshape(nb, L), w, impl="jnp",
+        out_dtype=out_dtype, dedup=dedup)
+    zero = jnp.zeros((B, 1, D), out_dtype)
+    part_c = jnp.concatenate([zero, cold_p.reshape(B, G, D)], axis=1)
+    part_h = jnp.concatenate([x[:, None, :].astype(out_dtype),
+                              hot_p.reshape(B, G, D)], axis=1)
+    return part_c, part_h
+
+
+def fused_resume_dense(part_c: jax.Array, part_h: jax.Array,
+                       impl: str = "jnp", block_b: int = 32,
+                       interpret: Optional[bool] = None,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Phase 3 of the fused front end on the psum-reduced tiles: cold/hot
+    add (the split path's ``psum(cold_part) + hot_out`` operand order),
+    dot-interaction, packed lower triangle ``(B, P)``."""
+    B, F, _ = part_c.shape
+    P = F * (F - 1) // 2
+    if B == 0 or F == 1:
+        return jnp.zeros((B, P), out_dtype)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.fused_resume(part_c, part_h, out_dtype=out_dtype,
+                                       interpret=interpret, block_b=block_b)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r}")
+    from repro.kernels import ref as kernel_ref
+    return kernel_ref.fused_resume_ref(part_c, part_h)
+
+
 def masked_gather_rows(local_storage: jax.Array, local_rows: jax.Array,
                        owned: jax.Array) -> jax.Array:
     """Pond-mode per-shard step: ship the *raw rows* (zeros where not owned).

@@ -23,6 +23,8 @@ from repro.kernels import ref
 from repro.kernels.interaction import dot_interaction_pallas
 from repro.kernels.sls import (fused_front_end_dedup_pallas,
                                fused_front_end_pallas,
+                               fused_partial_pool_dedup_pallas,
+                               fused_partial_pool_pallas, fused_resume_pallas,
                                masked_sls_dedup_pallas, masked_sls_pallas,
                                sls_pallas)
 
@@ -176,3 +178,71 @@ def fused_front_end(cold: jax.Array, hot: jax.Array, x: jax.Array,
         cold, hot, x, rows, owned, is_hot, weights, scales,
         out_dtype=out_dtype, interpret=interpret, block_l=block_l,
         block_b=block_b)
+
+
+def fused_partial_pool(cold: jax.Array, hot: jax.Array, x: jax.Array,
+                       rows: jax.Array, owned: jax.Array, is_hot: jax.Array,
+                       weights: Optional[jax.Array] = None,
+                       scales: Optional[jax.Array] = None,
+                       dedup_plans=None, out_dtype=jnp.float32,
+                       impl: str = "pallas", interpret: Optional[bool] = None,
+                       block_l: int = 8, block_b: int = 32,
+                       pad_lanes: Optional[bool] = None):
+    """Phases 1-2 of :func:`fused_front_end`, stopped at the phase-2/3 seam:
+    returns the per-tier partial feature tiles ``(B, F, D)`` — cold (row 0
+    zero, the tile a tp dispatch psums across shards) and hot (``x`` in
+    row 0; replicated, never reduced).  ``fused_resume`` finishes the
+    interaction on the reduced tile.  Lane padding is sliced back off the
+    tiles so the collective ships exactly ``B*F*D`` elements.  Oracle:
+    ``ref.fused_partial_pool_ref``.
+    """
+    if impl == "jnp":
+        if dedup_plans is not None:
+            dedup_plans = None
+        return ref.fused_partial_pool_ref(cold, hot, x, rows, owned, is_hot,
+                                          weights, scales, out_dtype)
+    if interpret is None:
+        interpret = _default_interpret()
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    D = cold.shape[-1]
+    cold = pad_to_lanes(cold, pad_lanes)
+    hot = pad_to_lanes(hot, pad_lanes)
+    x = pad_to_lanes(x, pad_lanes)
+    if dedup_plans is not None:
+        cp, hp = dedup_plans
+        part_c, part_h = fused_partial_pool_dedup_pallas(
+            cold, hot, x, cp.unique_rows, cp.slots, cp.n_slots,
+            hp.unique_rows, hp.slots, hp.n_slots, owned, is_hot,
+            weights, cp.unique_scales, out_dtype=out_dtype,
+            interpret=interpret, block_l=block_l, block_b=block_b)
+    else:
+        part_c, part_h = fused_partial_pool_pallas(
+            cold, hot, x, rows, owned, is_hot, weights, scales,
+            out_dtype=out_dtype, interpret=interpret, block_l=block_l,
+            block_b=block_b)
+    return part_c[:, :, :D], part_h[:, :, :D]
+
+
+def fused_resume(part_c: jax.Array, part_h: jax.Array,
+                 out_dtype=jnp.float32, impl: str = "pallas",
+                 interpret: Optional[bool] = None, block_b: int = 32,
+                 pad_lanes: Optional[bool] = None) -> jax.Array:
+    """Phase 3 of the fused front end on the psum-reduced ``(B, F, D)``
+    tiles: cold/hot add, dot-interaction, packed lower triangle ``(B, P)``.
+    Lane padding adds exact-zero columns to both tiles (zero lanes
+    contribute +0 to every pairwise dot — no slice-back needed on the
+    D-free output).  Oracle: ``ref.fused_resume_ref``.
+    """
+    if impl == "jnp":
+        return ref.fused_resume_ref(part_c, part_h)
+    if interpret is None:
+        interpret = _default_interpret()
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    if pad_lanes and part_c.shape[-1] % LANES:
+        pad = LANES - part_c.shape[-1] % LANES
+        part_c = jnp.pad(part_c, ((0, 0), (0, 0), (0, pad)))
+        part_h = jnp.pad(part_h, ((0, 0), (0, 0), (0, pad)))
+    return fused_resume_pallas(part_c, part_h, out_dtype=out_dtype,
+                               interpret=interpret, block_b=block_b)

@@ -110,6 +110,50 @@ def fused_front_end_ref(cold: jax.Array, hot: jax.Array, x: jax.Array,
     return dot_interaction_ref(feats)
 
 
+def fused_partial_pool_ref(cold: jax.Array, hot: jax.Array, x: jax.Array,
+                           rows: jax.Array, owned: jax.Array,
+                           is_hot: jax.Array,
+                           weights: Optional[jax.Array] = None,
+                           scales: Optional[jax.Array] = None,
+                           out_dtype=jnp.float32):
+    """Partial-pool oracle: phases 1-2 of :func:`fused_front_end_ref`,
+    stopped at the phase-2/3 seam for tensor-parallel execution.
+
+    Returns the per-tier (B, F, D) partial feature tiles:
+
+      * ``part_c`` — this shard's cold-tier fixed-l-order partial pools with
+        feature row 0 all-zero (the tile a tp dispatch ``psum``s — row 0
+        must not pick up x ``tp`` times), and
+      * ``part_h`` — the hot-tier partial pools with ``x`` in feature row 0
+        (hot is replicated across tp shards and is never reduced).
+
+    ``fused_resume_ref(psum(part_c), part_h)`` equals
+    :func:`fused_front_end_ref` of the psum'd ownership — rows 1..G are the
+    identical ``cold + hot`` adds; row 0 is ``0.0 + x`` (the same exact-zero
+    add the fused kernel's staging performs)."""
+    B, G, L = rows.shape
+    D = cold.shape[-1]
+    flat = rows.reshape(B * G, L)
+    w = None if weights is None else weights.reshape(B * G, L)
+    cold_p = _fixed_order_masked_sls(
+        cold, flat, owned.reshape(B * G, L), w,
+        None if scales is None else scales.reshape(B * G, L), out_dtype)
+    hot_p = _fixed_order_masked_sls(
+        hot, flat, is_hot.reshape(B * G, L), w, None, out_dtype)
+    zero = jnp.zeros((B, 1, D), out_dtype)
+    part_c = jnp.concatenate([zero, cold_p.reshape(B, G, D)], axis=1)
+    part_h = jnp.concatenate([x[:, None, :].astype(out_dtype),
+                              hot_p.reshape(B, G, D)], axis=1)
+    return part_c, part_h
+
+
+def fused_resume_ref(part_c: jax.Array, part_h: jax.Array) -> jax.Array:
+    """Phase-3 resume oracle: cold/hot add on the reduced (B, F, D) tiles
+    (the split path's ``psum(cold_part) + hot_out`` operand order), then
+    :func:`dot_interaction_ref`."""
+    return dot_interaction_ref(part_c + part_h)
+
+
 def masked_sls_quant_ref(table_q: jax.Array, indices: jax.Array,
                          owned: jax.Array, scales: jax.Array,
                          weights: Optional[jax.Array] = None,

@@ -310,7 +310,7 @@ def masked_sls_dedup_pallas(table: jax.Array, unique_rows: jax.Array,
 
 def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
                                  has_weights: bool, has_scales: bool,
-                                 dedup: bool):
+                                 dedup: bool, emit: str = "interact"):
     """Fused DLRM front-end kernel body: SLS -> dot-interaction, one kernel.
 
     Three phases over grid ``(B // BB, G, ceil(L / block_l))``:
@@ -330,11 +330,25 @@ def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
         dot-interaction matmul + static triangle pack of
         ``_interaction_kernel`` on the resident ``(BB, F, D)`` features.
 
+    ``emit`` selects where the pipeline stops:
+
+      * ``"interact"`` — the full three-phase kernel above; one ``(BB, P)``
+        packed-triangle output.  ``x`` lands in *cold* staging row 0.
+      * ``"tiles"`` — stop at the phase-2/3 seam for tensor-parallel
+        execution: emit the per-tier partial feature tiles ``(BB, F, D)``
+        (cold, hot) instead of interacting.  ``x`` lands in *hot* staging
+        row 0 here — the hot tier is replicated across tp shards and is
+        *not* psum'd, so ``x`` is counted exactly once; the cold tile's
+        row 0 stays zero and is safe to all-reduce.  The reduced tile
+        resumes phase 3 in :func:`fused_resume_pallas`.
+
     The pooled-features tensor never exists in HBM: the only HBM traffic is
     the row gather (phase 1/2) plus the ``(BB, D)`` x block in and the
-    ``(BB, P)`` packed triangle out.
+    ``(BB, P)`` packed triangle (or the two ``(BB, F, D)`` partial tiles)
+    out.
     """
     F = G + 1
+    interact = emit == "interact"
 
     def kernel(*refs):
         it = iter(refs)
@@ -354,11 +368,18 @@ def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
             hn_ref = next(it)       # (1,) live hot staging slots
         elif has_scales:
             s_ref = next(it)        # (B, G, L) per-entry dequant scales
-        tri_ref = next(it)          # (P,) static triangle-pack permutation
+        if interact:
+            tri_ref = next(it)      # (P,) static triangle-pack permutation
         cold_ref = next(it)         # (Vc, D) ANY/HBM — manually DMA'd
         hot_table_ref = next(it)    # (Vh, D) ANY/HBM — manually DMA'd
         x_ref = next(it)            # (BB, D) bottom-MLP block (auto-piped)
-        out_ref = next(it)          # (BB, P) packed-triangle block
+        if interact:
+            out_ref = next(it)      # (BB, P) packed-triangle block
+            acc_dtype = out_ref.dtype
+        else:
+            out_c_ref = next(it)    # (BB, F, D) cold partial feature tile
+            out_h_ref = next(it)    # (BB, F, D) hot partial feature tile
+            acc_dtype = out_c_ref.dtype
         if dedup:
             crows = next(it)        # (U, D) VMEM cold row staging (dequant'd)
             hrows = next(it)        # (U, D) VMEM hot row staging
@@ -405,9 +426,9 @@ def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
                             _dma(u + 1, (u + 1) % 2).start()
 
                         _dma(u, slot).wait()
-                        row = _land[slot].astype(out_ref.dtype)
+                        row = _land[slot].astype(acc_dtype)
                         if _sref is not None:
-                            row = row * _sref[u].astype(out_ref.dtype)
+                            row = row * _sref[u].astype(acc_dtype)
                         _staging[pl.ds(u, 1)] = row[None, :]
                         return carry
 
@@ -418,12 +439,20 @@ def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
             # per batch-tile: zero both accumulators, land the bottom-MLP
             # output in feature row 0 of the cold staging (the hot staging's
             # row 0 stays zero, so the phase-3 add reproduces the split
-            # path's `concat([x, pooled])` exactly)
-            xv = x_ref[...].astype(out_ref.dtype)               # (BB, D)
+            # path's `concat([x, pooled])` exactly).  In tiles mode x rides
+            # the *hot* staging instead: hot is replicated across tp shards
+            # while the cold tile is psum'd, so this is the placement that
+            # counts x once.
+            xv = x_ref[...].astype(acc_dtype)                   # (BB, D)
             D = xv.shape[-1]
-            init = jnp.zeros((BB, F, D), out_ref.dtype)
-            stage_c[...] = init.at[:, 0, :].set(xv).reshape(BB * F, D)
-            stage_h[...] = jnp.zeros_like(stage_h)
+            init = jnp.zeros((BB, F, D), acc_dtype)
+            with_x = init.at[:, 0, :].set(xv).reshape(BB * F, D)
+            if interact:
+                stage_c[...] = with_x
+                stage_h[...] = jnp.zeros_like(stage_h)
+            else:
+                stage_c[...] = jnp.zeros_like(stage_c)
+                stage_h[...] = with_x
 
         if not dedup:
             def entry_dma(slot, k):
@@ -466,19 +495,19 @@ def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
                 c, h = entry_dma(slot, k)
                 c.wait()
                 h.wait()
-            f = (l < L).astype(out_ref.dtype)
+            f = (l < L).astype(acc_dtype)
             if has_weights:
-                f = f * w_ref[b, g, lc].astype(out_ref.dtype)
-            fc = f * (owned_ref[b, g, lc] != 0).astype(out_ref.dtype)
-            fh = f * (hot_ref[b, g, lc] != 0).astype(out_ref.dtype)
+                f = f * w_ref[b, g, lc].astype(acc_dtype)
+            fc = f * (owned_ref[b, g, lc] != 0).astype(acc_dtype)
+            fh = f * (hot_ref[b, g, lc] != 0).astype(acc_dtype)
             if dedup:
                 row_c = crows[cslots_ref[b, g, lc]][None, :]
                 row_h = hrows[hslots_ref[b, g, lc]][None, :]
             else:
-                row_c = cland[slot][None, :].astype(out_ref.dtype)
+                row_c = cland[slot][None, :].astype(acc_dtype)
                 if has_scales:
-                    row_c = row_c * s_ref[b, g, lc].astype(out_ref.dtype)
-                row_h = hland[slot][None, :].astype(out_ref.dtype)
+                    row_c = row_c * s_ref[b, g, lc].astype(acc_dtype)
+                row_h = hland[slot][None, :].astype(acc_dtype)
             sk = i * F + g + 1
             stage_c[pl.ds(sk, 1)] = stage_c[pl.ds(sk, 1)] + fc * row_c
             stage_h[pl.ds(sk, 1)] = stage_h[pl.ds(sk, 1)] + fh * row_h
@@ -486,17 +515,29 @@ def _make_fused_front_end_kernel(L: int, block_l: int, G: int, BB: int,
 
         jax.lax.fori_loop(0, n_entries, body, 0)
 
-        @pl.when((g == G - 1) & (t == n_tl - 1))
-        def _interact():
-            # phase 3: dot-interaction on the resident features — identical
-            # op structure to kernels/interaction.py's _interaction_kernel
-            D = stage_c.shape[-1]
-            feats = (stage_c[...] + stage_h[...]).reshape(BB, F, D)
-            z = jax.lax.dot_general(
-                feats, feats, (((2,), (2,)), ((0,), (0,))),
-                preferred_element_type=out_ref.dtype)           # (BB, F, F)
-            out_ref[...] = jnp.take(z.reshape(BB, F * F), tri_ref[...],
-                                    axis=1)
+        if interact:
+            @pl.when((g == G - 1) & (t == n_tl - 1))
+            def _interact():
+                # phase 3: dot-interaction on the resident features —
+                # identical op structure to kernels/interaction.py's
+                # _interaction_kernel
+                D = stage_c.shape[-1]
+                feats = (stage_c[...] + stage_h[...]).reshape(BB, F, D)
+                z = jax.lax.dot_general(
+                    feats, feats, (((2,), (2,)), ((0,), (0,))),
+                    preferred_element_type=out_ref.dtype)       # (BB, F, F)
+                out_ref[...] = jnp.take(z.reshape(BB, F * F), tri_ref[...],
+                                        axis=1)
+        else:
+            @pl.when((g == G - 1) & (t == n_tl - 1))
+            def _emit_tiles():
+                # phase-2/3 seam: hand the per-tier partial tiles to the
+                # cross-shard psum; the cold/hot add happens after the
+                # reduction in the resume kernel, preserving the split
+                # path's `psum(cold_part) + hot_out` operand order.
+                D = stage_c.shape[-1]
+                out_c_ref[...] = stage_c[...].reshape(BB, F, D)
+                out_h_ref[...] = stage_h[...].reshape(BB, F, D)
 
     return kernel
 
@@ -644,6 +685,194 @@ def fused_front_end_dedup_pallas(cold: jax.Array, hot: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, P), out_dtype),
         interpret=interpret,
     )(*prefetch, cold, hot, x)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret",
+                                             "block_l", "block_b"))
+def fused_partial_pool_pallas(cold: jax.Array, hot: jax.Array, x: jax.Array,
+                              rows: jax.Array, owned: jax.Array,
+                              is_hot: jax.Array,
+                              weights: Optional[jax.Array] = None,
+                              scales: Optional[jax.Array] = None,
+                              out_dtype=jnp.float32,
+                              interpret: Optional[bool] = None,
+                              block_l: int = 8, block_b: int = 32):
+    """Phases 1-2 of the fused front end, stopped at the phase-2/3 seam
+    (oracle: ``kernels/ref.py:fused_partial_pool_ref``).
+
+    Returns the per-tier partial feature tiles ``(B, F, D)``:
+
+      * ``part_c`` — this shard's cold-tier partial pools, feature row 0
+        all-zero (safe to ``psum`` across tp shards), and
+      * ``part_h`` — the hot-tier pools with the bottom-MLP output ``x`` in
+        feature row 0 (hot is replicated, never reduced).
+
+    ``psum(part_c) + part_h`` reproduces the split datapath's
+    ``psum(cold_part) + hot_out`` / ``concat([x, pooled])`` features
+    bit-for-bit; :func:`fused_resume_pallas` finishes phase 3 on the
+    reduced tile.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, G, L = rows.shape
+    D = cold.shape[-1]
+    BB, block_l, _, _ = _fe_blocks(B, L, block_l, block_b, G)
+    F = G + 1
+    if B == 0 or L == 0 or G == 0:
+        zc = jnp.zeros((B, F, D), out_dtype)
+        return zc, zc.at[:, 0, :].set(x.astype(out_dtype))
+
+    prefetch = [rows.astype(jnp.int32), owned.astype(jnp.int32),
+                is_hot.astype(jnp.int32)]
+    if weights is not None:
+        prefetch.append(weights)
+    if scales is not None:
+        prefetch.append(scales.astype(jnp.float32))
+
+    tile_spec = pl.BlockSpec((BB, F, D), lambda bt, g, t, *p: (bt, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(B // BB, G, pl.cdiv(L, block_l)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # cold stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY),    # hot stays in HBM
+                  pl.BlockSpec((BB, D), lambda bt, g, t, *p: (bt, 0))],
+        out_specs=[tile_spec, tile_spec],
+        scratch_shapes=[pltpu.VMEM((BB * F, D), out_dtype),  # cold features
+                        pltpu.VMEM((BB * F, D), out_dtype),  # hot features
+                        pltpu.VMEM((2, D), cold.dtype),
+                        pltpu.VMEM((2, D), hot.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    kernel = _make_fused_front_end_kernel(
+        L, block_l, G, BB, has_weights=weights is not None,
+        has_scales=scales is not None, dedup=False, emit="tiles")
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, F, D), out_dtype),
+                   jax.ShapeDtypeStruct((B, F, D), out_dtype)],
+        interpret=interpret,
+    )(*prefetch, cold, hot, x)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret",
+                                             "block_l", "block_b"))
+def fused_partial_pool_dedup_pallas(cold: jax.Array, hot: jax.Array,
+                                    x: jax.Array,
+                                    c_unique: jax.Array, c_slots: jax.Array,
+                                    c_n: jax.Array, h_unique: jax.Array,
+                                    h_slots: jax.Array, h_n: jax.Array,
+                                    owned: jax.Array, is_hot: jax.Array,
+                                    weights: Optional[jax.Array] = None,
+                                    c_scales: Optional[jax.Array] = None,
+                                    out_dtype=jnp.float32,
+                                    interpret: Optional[bool] = None,
+                                    block_l: int = 8, block_b: int = 32):
+    """Gather-once dedup'd partial pool: phase 1 stages each unique cold/hot
+    row once per shard (dedup staging stays per-shard — only the pooled
+    tile crosses the fabric), phase 2 as :func:`fused_partial_pool_pallas`.
+    Bit-for-bit equal to the non-dedup tiles.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, G, L = c_slots.shape
+    D = cold.shape[-1]
+    BB, block_l, _, _ = _fe_blocks(B, L, block_l, block_b, G)
+    F = G + 1
+    if B == 0 or L == 0 or G == 0:
+        zc = jnp.zeros((B, F, D), out_dtype)
+        return zc, zc.at[:, 0, :].set(x.astype(out_dtype))
+    U = c_unique.shape[0]
+
+    prefetch = [c_slots.astype(jnp.int32), h_slots.astype(jnp.int32),
+                owned.astype(jnp.int32), is_hot.astype(jnp.int32)]
+    if weights is not None:
+        prefetch.append(weights)
+    prefetch.append(c_unique.astype(jnp.int32))
+    prefetch.append(c_n.astype(jnp.int32).reshape(1))
+    if c_scales is not None:
+        prefetch.append(c_scales.astype(jnp.float32))
+    prefetch.append(h_unique.astype(jnp.int32))
+    prefetch.append(h_n.astype(jnp.int32).reshape(1))
+
+    tile_spec = pl.BlockSpec((BB, F, D), lambda bt, g, t, *p: (bt, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(B // BB, G, pl.cdiv(L, block_l)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # cold stays in HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY),    # hot stays in HBM
+                  pl.BlockSpec((BB, D), lambda bt, g, t, *p: (bt, 0))],
+        out_specs=[tile_spec, tile_spec],
+        scratch_shapes=[pltpu.VMEM((U, D), out_dtype),     # cold row staging
+                        pltpu.VMEM((U, D), out_dtype),     # hot row staging
+                        pltpu.VMEM((BB * F, D), out_dtype),
+                        pltpu.VMEM((BB * F, D), out_dtype),
+                        pltpu.VMEM((2, D), cold.dtype),
+                        pltpu.VMEM((2, D), hot.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    kernel = _make_fused_front_end_kernel(
+        L, block_l, G, BB, has_weights=weights is not None,
+        has_scales=c_scales is not None, dedup=True, emit="tiles")
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, F, D), out_dtype),
+                   jax.ShapeDtypeStruct((B, F, D), out_dtype)],
+        interpret=interpret,
+    )(*prefetch, cold, hot, x)
+
+
+def _make_fused_resume_kernel(BB: int, F: int):
+    """Phase-3 resume body: cold/hot add on the *reduced* tile, then the
+    dot-interaction matmul + static triangle pack — the same op sequence
+    the ``emit='interact'`` kernel runs on its resident staging, so the
+    tp-sharded composition stays bit-for-bit against the one-shard fusion.
+    """
+
+    def kernel(tri_ref, c_ref, h_ref, out_ref):
+        D = c_ref.shape[-1]
+        feats = (c_ref[...] + h_ref[...]).reshape(BB, F, D)
+        z = jax.lax.dot_general(
+            feats, feats, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=out_ref.dtype)               # (BB, F, F)
+        out_ref[...] = jnp.take(z.reshape(BB, F * F), tri_ref[...], axis=1)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret",
+                                             "block_b"))
+def fused_resume_pallas(part_c: jax.Array, part_h: jax.Array,
+                        out_dtype=jnp.float32,
+                        interpret: Optional[bool] = None,
+                        block_b: int = 32) -> jax.Array:
+    """Resume phase 3 on the psum-reduced ``(B, F, D)`` tiles: feats =
+    part_c + part_h, dot-interaction, packed lower triangle ``(B, P)``.
+    The features stay VMEM-resident on this side of the collective too —
+    the tiles stream in as blocks, the interaction never round-trips a
+    concat'd features tensor through HBM.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F, D = part_c.shape
+    G = F - 1
+    BB, _, tri, P = _fe_blocks(B, 1, 1, block_b, G)
+    if B == 0 or G == 0:
+        return jnp.zeros((B, P), out_dtype)
+
+    tile_spec = pl.BlockSpec((BB, F, D), lambda bt, *p: (bt, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // BB,),
+        in_specs=[tile_spec, tile_spec],
+        out_specs=pl.BlockSpec((BB, P), lambda bt, *p: (bt, 0)),
+    )
+    return pl.pallas_call(
+        _make_fused_resume_kernel(BB, F), grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P), out_dtype),
+        interpret=interpret,
+    )(tri, part_c, part_h)
 
 
 @functools.partial(jax.jit,

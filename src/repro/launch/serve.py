@@ -129,6 +129,7 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
     stats = binding.plan_stats()
     summary["steady_traces"] = stats["traces"]
     summary["plans"] = stats["plans"]
+    summary["front_end"] = stats.get("front_end", {})
     summary["replans"] = binding.replans - warm_replans
     summary["dedup_factors"] = binding.dedup_report()
     if updater is not None:
@@ -162,7 +163,9 @@ def main() -> None:
                     help="DLRM lookup->interaction pipeline: 'fused' keeps "
                          "pooled features in VMEM from the SLS accumulate "
                          "through the dot-interaction matmul (bit-exact; "
-                         "tp-sharded meshes resolve back to split)")
+                         "tp-sharded meshes and pond mode resolve it to "
+                         "'fused_tp' — partial-pool, psum the (B, F, d) "
+                         "cold tile, resume)")
     ap.add_argument("--batcher", default="dynamic",
                     choices=["dynamic", "fixed"])
     ap.add_argument("--batch-sizes", type=int, nargs="+",
@@ -211,6 +214,7 @@ def main() -> None:
         closed_loop_users=args.closed_loop_users,
         validate_ids=args.validate_ids, wal_path=args.wal)
     out.pop("latency_hist", None)
+    fe_plans = out.pop("front_end", {})
     dedup_factors = out.pop("dedup_factors", {})
     staleness = out.pop("staleness", None)
     updates = out.pop("updates", None)
@@ -228,6 +232,9 @@ def main() -> None:
         print(f"  seconds_behind p50={staleness['seconds_behind_p50']:.4f} "
               f"p99={staleness['seconds_behind_p99']:.4f} "
               f"max={staleness['seconds_behind_max']:.4f}")
+    for label, rec in fe_plans.items():
+        print(f"  front_end[{label}]  requested={rec['requested']} "
+              f"resolved={rec['resolved']} (tp={rec['tp']})")
     for bucket, rec in dedup_factors.items():
         print(f"  dedup[{bucket}]  factor={rec['factor']:.2f} "
               f"({rec['entries']} entries -> {rec['unique_rows']} unique "

@@ -78,10 +78,12 @@ def forward(params: dict, engine: PIFSEmbeddingEngine, state,
     ``front_end='fused'`` routes lookup + feature stacking + dot
     interaction through the engine's fused front end
     (``engine.lookup_interact``): the pooled (B, F, d) features stay in
-    VMEM from the SLS accumulate through the interaction matmul on the
-    replicated/dp-sharded serving config; tp-sharded and pond configs
-    resolve back to the split pipeline exactly (bit-identical logits,
-    recorded in ``engine.plan_stats()['front_end']``).
+    VMEM from the SLS accumulate through the interaction matmul.  On a
+    tp-sharded mesh (and in pond mode) the engine resolves ``fused_tp``
+    — each shard partial-pools its owned rows and only the small (B, F,
+    d) cold tile is psum'd between the kernel halves (bit-identical
+    logits vs split for pifs/beacon; the resolution is recorded in
+    ``engine.plan_stats()['front_end']``).
 
     ``tiers='hot_only'`` is the brown-out rung: embedding lookups read the
     replicated hot tier only (cold contributions zero-filled, zero

@@ -55,8 +55,9 @@ class LoadConfig:
     #                                      (off/auto/on; bit-exact either way)
     front_end: str = "split"             # DLRM lookup->interaction pipeline:
     #                                      'fused' keeps pooled features in
-    #                                      VMEM through the interaction (tp-
-    #                                      sharded configs resolve to split)
+    #                                      VMEM through the interaction; tp-
+    #                                      sharded configs resolve 'fused_tp'
+    #                                      (partial-pool -> psum -> resume)
     update_qps: float = 0.0              # streaming embedding updates: delta
     #                                      rows/second on the virtual clock
     #                                      (0 = no update stream)
@@ -84,9 +85,14 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
     bit-exact either way; 'auto' resolves per shape bucket from the
     observe-phase histogram); ``front_end`` the DLRM lookup->interaction
     pipeline ('fused' keeps pooled features in VMEM through the dot
-    interaction on replicated/dp-sharded meshes; bit-exact either way —
-    Rec configs have no DLRM dot-interaction stage, so the knob is
-    DLRM-only and ignored for them).
+    interaction; tp-sharded meshes and pond mode resolve it to
+    'fused_tp' — each shard partial-pools its owned rows and only the
+    small (B, F, d) cold tile is psum'd between the kernel halves — still
+    bit-exact vs split; Rec configs have no DLRM dot-interaction stage,
+    so the knob is DLRM-only and ignored for them).  The brown-out rungs
+    stay on the split path by construction: ``split_fe``/``no_dedup``
+    pass ``front_end='split'`` and ``hot_only``/``shed`` force it (the
+    fused path is all-tiers only).
 
     ``degraded_variants`` additionally builds the brown-out ladder's
     serve-step variants (``repro.serving.degradation.RUNGS``) as separate

@@ -391,6 +391,112 @@ def test_fused_front_end_lane_padding_is_transparent():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ---------------------------------------------------------------------------
+# Tensor-parallel fused front end: partial-pool + resume kernel halves
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,G,L,D,block_l,block_b", [
+    (8, 2, 8, 16, 8, 4),       # exact tiling
+    (8, 4, 7, 32, 3, 8),       # F=5 not a multiple of the sublane tile
+    (4, 2, 5, 16, 4, 32),      # B < block_b (batch tile clamps to B)
+    (6, 3, 4, 24, 8, 4),       # odd D, B not a multiple of block_b
+    (1, 2, 1, 16, 8, 128),     # degenerate batch
+])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_fused_partial_pool_resume_bit_exact(B, G, L, D, block_l, block_b,
+                                             weighted):
+    """Splitting the fused kernel at the phase-2/3 seam must be free:
+    partial-pool -> resume equals the one-kernel fused front end (and the
+    split-composition oracle) bit-for-bit, and the tiles themselves match
+    the partial-pool oracle — cold row 0 zero, x riding the hot tile."""
+    cold, hot, x, rows, owned, is_hot, w, _ = _fe_inputs(
+        B, G, L, 128, D, weighted, quantized=False)
+    pc, ph = ops.fused_partial_pool(cold, hot, x, rows, owned, is_hot, w,
+                                    interpret=True, block_l=block_l,
+                                    block_b=block_b)
+    rc, rh = ref.fused_partial_pool_ref(cold, hot, x, rows, owned, is_hot, w)
+    F = G + 1
+    assert pc.shape == ph.shape == (B, F, D)
+    np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(ph), np.asarray(rh))
+    assert not np.asarray(pc)[:, 0, :].any()      # psum-safe cold row 0
+    out = ops.fused_resume(pc, ph, interpret=True, block_b=block_b)
+    want = ref.fused_front_end_ref(cold, hot, x, rows, owned, is_hot, w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("dedup", [False, True])
+def test_fused_partial_pool_quant_dedup_bit_exact(weighted, dedup):
+    """int8 cold tier through the partial-pool half (per-entry or
+    gather-once dequant staging): resume of the tiles matches the
+    quantized fused oracle bit-for-bit."""
+    from repro.core import sls as core_sls
+    B, G, L, V, D = 6, 2, 5, 96, 16
+    cold, hot, x, rows, owned, is_hot, w, scales = _fe_inputs(
+        B, G, L, V, D, weighted, quantized=True)
+    pc, ph = core_sls.fused_partial_pool_dense(
+        cold, hot, x, rows, owned, is_hot, w, scales=scales, impl="pallas",
+        interpret=True, block_l=3, block_b=2, dedup=dedup)
+    out = core_sls.fused_resume_dense(pc, ph, impl="pallas", interpret=True,
+                                      block_b=2)
+    want = ref.fused_front_end_ref(cold, hot, x, rows, owned, is_hot, w,
+                                   scales=scales)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_fused_partial_pool_simulated_psum_bit_exact():
+    """The tp contract, single-host: split the cold ownership across two
+    simulated shards, partial-pool each, sum the cold tiles (the psum),
+    resume — bit-identical to the same two-shard composition through the
+    oracle.  (Each shard keeps fixed l-order over *its* rows; the split
+    path under tp masks identically, which is why engine-level fused_tp
+    == split holds bitwise.)  The hot tile comes from one shard only —
+    replicated, never reduced."""
+    B, G, L, V, D = 8, 3, 6, 64, 16
+    cold, hot, x, rows, owned, is_hot, w, _ = _fe_inputs(
+        B, G, L, V, D, True, False)
+    shard0 = owned & (rows % 2 == 0)
+    shard1 = owned & (rows % 2 == 1)
+    no_hot = jnp.zeros_like(is_hot)
+    c0, h0 = ops.fused_partial_pool(cold, hot, x, rows, shard0, is_hot, w,
+                                    interpret=True)
+    c1, _ = ops.fused_partial_pool(cold, hot, x, rows, shard1, no_hot, w,
+                                   interpret=True)
+    out = ops.fused_resume(c0 + c1, h0, interpret=True)   # psum, then resume
+    rc0, rh0 = ref.fused_partial_pool_ref(cold, hot, x, rows, shard0,
+                                          is_hot, w)
+    rc1, _ = ref.fused_partial_pool_ref(cold, hot, x, rows, shard1,
+                                        no_hot, w)
+    want = ref.fused_resume_ref(rc0 + rc1, rh0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    # and the reduced tile is the full-ownership pool up to reorder only
+    full_c, _ = ref.fused_partial_pool_ref(cold, hot, x, rows, owned,
+                                           is_hot, w)
+    np.testing.assert_allclose(np.asarray(c0 + c1), np.asarray(full_c),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_partial_pool_lane_padding_is_transparent():
+    """D=24 is not lane-aligned: the partial tiles are sliced back to D
+    (the collective must ship exactly B*F*D elements) and the resume
+    re-pads — no output bit changes anywhere in the composition."""
+    B, G, L, V, D = 4, 2, 5, 64, 24
+    cold, hot, x, rows, owned, is_hot, w, _ = _fe_inputs(
+        B, G, L, V, D, True, False)
+    pc_a, ph_a = ops.fused_partial_pool(cold, hot, x, rows, owned, is_hot, w,
+                                        interpret=True, pad_lanes=True)
+    pc_b, ph_b = ops.fused_partial_pool(cold, hot, x, rows, owned, is_hot, w,
+                                        interpret=True, pad_lanes=False)
+    assert pc_a.shape == pc_b.shape == (B, G + 1, D)
+    np.testing.assert_array_equal(np.asarray(pc_a), np.asarray(pc_b))
+    np.testing.assert_array_equal(np.asarray(ph_a), np.asarray(ph_b))
+    a = ops.fused_resume(pc_a, ph_a, interpret=True, pad_lanes=True)
+    b = ops.fused_resume(pc_b, ph_b, interpret=True, pad_lanes=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_interaction_interpret_default_detects_backend():
     """dot_interaction_pallas defaulted interpret=True forever — on a CPU
     container the None default must resolve to the interpreter (and on TPU

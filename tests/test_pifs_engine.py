@@ -548,37 +548,81 @@ def test_front_end_grows_plan_cache_key(engine_dp, mesh_dp):
     assert engine_dp.plan_stats()["plans"] == 3
 
 
-def test_front_end_tp_resolves_split_and_is_recorded(engine, mesh):
-    """tp-sharded masked partials need a cross-shard psum between SLS and
-    interaction: 'fused' resolves back to 'split' exactly, with the reason
-    recorded (the dedup resolution pattern)."""
+def test_front_end_tp_resolves_fused_tp_and_is_recorded(engine, mesh):
+    """tp-sharded masked partials resolve 'fused_tp': each shard partial-
+    pools its (B, F, D) cold tile, the psum lands between the partial-pool
+    and resume kernels, and the result stays bit-exact vs split (both
+    paths psum fixed-l-order cold partials in the same mesh order).  The
+    resolution record distinguishes fused_tp from a split fallback so
+    benches can assert the datapath they time."""
     state, idx, x = _fe_args(engine)
     with mesh:
-        s = np.asarray(engine.lookup_interact(state, idx, x,
-                                              front_end="split"))
-        f = np.asarray(engine.lookup_interact(state, idx, x,
-                                              front_end="fused"))
-    np.testing.assert_array_equal(s, f)
+        for impl in ("jnp", "pallas"):
+            s = np.asarray(engine.lookup_interact(state, idx, x, impl=impl,
+                                                  front_end="split"))
+            f = np.asarray(engine.lookup_interact(state, idx, x, impl=impl,
+                                                  front_end="fused"))
+            np.testing.assert_array_equal(s, f)
     recs = [r for r in engine.plan_stats()["front_end"].values()
             if r["requested"] == "fused"]
-    assert recs and recs[0]["resolved"] == "split"
+    assert recs and all(r["resolved"] == "fused_tp" for r in recs)
     assert "psum" in recs[0]["reason"]
+    assert recs[0]["tp"] == 4
+    split_recs = [r for r in engine.plan_stats()["front_end"].values()
+                  if r["requested"] == "split"]
+    assert split_recs and all(r["resolved"] == "split" for r in split_recs)
 
 
-def test_front_end_pond_resolves_split(engine_dp, mesh_dp):
-    """pond ships raw rows — no per-shard pooled partial to fuse onto, so
-    the knob resolves to split even on the dp-only mesh (and the split
-    interact plan reproduces pond's lookup numerics)."""
+def test_front_end_pond_resolves_fused_tp(engine_dp, mesh_dp):
+    """pond requesting fusion opts into pooling its cold partials before
+    the hot/cold add (partial-pool -> psum -> resume): the knob resolves
+    'fused_tp' even on the dp-only mesh, and the result equals the fixed
+    l-order split composition (the pifs split path) bitwise — pond-split's
+    own segment-sum order only agrees to tolerance."""
     state, idx, x = _fe_args(engine_dp)
     with mesh_dp:
-        s = np.asarray(engine_dp.lookup_interact(state, idx, x, mode="pond",
-                                                 front_end="split"))
-        f = np.asarray(engine_dp.lookup_interact(state, idx, x, mode="pond",
-                                                 front_end="fused"))
-    np.testing.assert_array_equal(s, f)
+        pifs_split = np.asarray(engine_dp.lookup_interact(
+            state, idx, x, mode="pifs", front_end="split"))
+        pond_split = np.asarray(engine_dp.lookup_interact(
+            state, idx, x, mode="pond", front_end="split"))
+        pond_fused = np.asarray(engine_dp.lookup_interact(
+            state, idx, x, mode="pond", front_end="fused"))
+    np.testing.assert_array_equal(pond_fused, pifs_split)
+    np.testing.assert_allclose(pond_fused, pond_split, rtol=1e-5, atol=1e-5)
     recs = [r for r in engine_dp.plan_stats()["front_end"].values()
             if r["requested"] == "fused"]
-    assert recs and recs[0]["resolved"] == "split"
+    assert recs and recs[0]["resolved"] == "fused_tp"
+    assert "pool" in recs[0]["reason"]
+
+
+def test_front_end_tp_no_retrace_and_quantized(mesh):
+    """fused_tp on the (2, 4) mesh: int8 cold tier + dedup + weights stay
+    bit-exact vs split, and steady state holds zero retraces across
+    observe/replan cycles (the serving contract under tp)."""
+    eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
+                               hot_fraction=0.06, storage="int8")
+    state, idx, x = _fe_args(eng)
+    w = jax.random.uniform(jax.random.PRNGKey(5), (8, 2, 4))
+    with mesh:
+        for impl in ("jnp", "pallas"):
+            for dedup in ("off", "on"):
+                s = np.asarray(eng.lookup_interact(
+                    state, idx, x, weights=w, impl=impl, dedup=dedup,
+                    front_end="split"))
+                f = np.asarray(eng.lookup_interact(
+                    state, idx, x, weights=w, impl=impl, dedup=dedup,
+                    front_end="fused"))
+                np.testing.assert_array_equal(s, f)
+        warm = eng.plan_stats()["traces"]
+        for _ in range(3):
+            state = eng.observe(state, idx)
+            state, _ = eng.plan_and_migrate(state)
+            f = np.asarray(eng.lookup_interact(
+                state, idx, x, weights=w, impl="pallas", front_end="fused"))
+            s = np.asarray(eng.lookup_interact(
+                state, idx, x, weights=w, impl="pallas", front_end="split"))
+            np.testing.assert_array_equal(f, s)
+    assert eng.plan_stats()["traces"] == warm
 
 
 def test_front_end_no_retrace_across_observe_replan(engine_dp, mesh_dp):

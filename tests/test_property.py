@@ -392,31 +392,70 @@ def test_front_end_fused_equals_split_bit_exact(data, storage, impl, combine,
     assert recs and all(r["resolved"] == "fused" for r in recs)
 
 
-@given(seed=st.integers(0, 2 ** 16), impl=st.sampled_from(["jnp", "pallas"]))
-@settings(deadline=None, max_examples=10,
-          suppress_health_check=list(HealthCheck))
-def test_front_end_tp_shard_resolves_to_split_exact(mesh, seed, impl):
-    """On a tp-sharded mesh the cold partials need a cross-shard psum
-    between SLS and interaction: 'fused' must resolve back to 'split'
-    **exactly** — identical bits, resolution recorded in plan_stats()."""
-    from repro.core.pifs import engine_for_tables
-    key = ("tp", None)
+def _fe_tp_engine(mesh_shape, storage):
+    """Engine on a tp-sharded mesh — the config where ``front_end='fused'``
+    resolves fused_tp (partial-pool -> psum -> resume)."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    key = (mesh_shape, storage)
     if key not in _FE_ENGINES:
+        from repro.core.pifs import engine_for_tables
+        from repro.distributed.sharding import make_mesh
+        mesh = make_mesh(mesh_shape, ("data", "model"))
         eng, _ = engine_for_tables([500, 300], dim=16, mesh=mesh,
-                                   hot_fraction=0.06)
-        _FE_ENGINES[key] = (eng, eng.init_state(jax.random.PRNGKey(0)), mesh)
-    eng, state, _ = _FE_ENGINES[key]
+                                   hot_fraction=0.06, storage=storage)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        _FE_ENGINES[key] = (eng, state, mesh)
+    return _FE_ENGINES[key]
+
+
+@given(data=st.data(),
+       mesh_shape=st.sampled_from([(4, 2), (2, 4)]),
+       storage=st.sampled_from(["fp32", "int8"]),
+       impl=st.sampled_from(["jnp", "pallas"]),
+       combine=st.sampled_from(["psum", "psum_scatter"]),
+       dedup=st.sampled_from(["off", "on"]),
+       mode=st.sampled_from(["pifs", "pond", "beacon"]),
+       weighted=st.booleans())
+@settings(deadline=None, max_examples=20,
+          suppress_health_check=list(HealthCheck))
+def test_front_end_fused_tp_equals_split(data, mesh_shape, storage, impl,
+                                         combine, dedup, mode, weighted):
+    """On tp-sharded meshes 'fused' resolves **fused_tp**: each shard
+    partial-pools its (B, F, D) cold tile, only that small tile is psum'd
+    (never raw rows), and phase 3 resumes on the reduced tile.  For
+    pifs/beacon this must equal 'split' bit-for-bit across every
+    (storage, dedup, weighted, combine) datapath — both paths psum fixed
+    l-order cold partials in the same deterministic mesh order.  Pond
+    requesting fusion pools its cold partials *before* the hot/cold add,
+    so it equals the fixed l-order split composition (the pifs split
+    result) bitwise and its own segment-sum split to tolerance."""
+    eng, state, mesh = _fe_tp_engine(mesh_shape, storage)
     B, G, L = _FE_SHAPE
+    seed = data.draw(st.integers(0, 2 ** 16))
     rng = np.random.default_rng(seed)
     idx = jnp.asarray(rng.integers(0, 500, _FE_SHAPE).astype(np.int32))
     x = jnp.asarray(rng.normal(size=(B, eng.cfg.dim)).astype(np.float32))
+    w = (jnp.asarray(rng.random(_FE_SHAPE).astype(np.float32))
+         if weighted else None)
     with mesh:
-        split = eng.lookup_interact(state, idx, x, impl=impl,
+        split = eng.lookup_interact(state, idx, x, weights=w, impl=impl,
+                                    combine=combine, dedup=dedup, mode=mode,
                                     front_end="split")
-        fused = eng.lookup_interact(state, idx, x, impl=impl,
+        fused = eng.lookup_interact(state, idx, x, weights=w, impl=impl,
+                                    combine=combine, dedup=dedup, mode=mode,
                                     front_end="fused")
-    np.testing.assert_array_equal(np.asarray(split), np.asarray(fused))
+        if mode == "pond":
+            fixed = eng.lookup_interact(state, idx, x, weights=w, impl=impl,
+                                        combine=combine, dedup=dedup,
+                                        mode="pifs", front_end="split")
+            np.testing.assert_array_equal(np.asarray(fused),
+                                          np.asarray(fixed))
+            np.testing.assert_allclose(np.asarray(fused), np.asarray(split),
+                                       rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(split),
+                                          np.asarray(fused))
     recs = [r for r in eng.plan_stats()["front_end"].values()
             if r["requested"] == "fused"]
-    assert recs and all(r["resolved"] == "split" for r in recs)
-    assert all("psum" in r["reason"] for r in recs)
+    assert recs and all(r["resolved"] == "fused_tp" for r in recs)

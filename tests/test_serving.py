@@ -383,7 +383,8 @@ def test_end_to_end_serving_front_end_fused_matches_split():
 
 def test_bind_model_front_end_resolution(mesh):
     """bind_model threads front_end through to the DLRM serve step; on the
-    tp-sharded session mesh the engine records the split fallback."""
+    tp-sharded session mesh the engine records the fused_tp resolution
+    (partial-pool -> psum the pooled tile -> resume)."""
     from repro.configs import get_config, reduced
     from repro.serving import bind_model
     cfg = reduced(get_config("rmc1"))
@@ -398,4 +399,5 @@ def test_bind_model_front_end_resolution(mesh):
     assert scores.shape == (B,) and np.isfinite(scores).all()
     recs = [r for r in binding.plan_stats()["front_end"].values()
             if r["requested"] == "fused"]
-    assert recs and recs[0]["resolved"] == "split"   # tp=4 mesh
+    assert recs and recs[0]["resolved"] == "fused_tp"   # tp=4 mesh
+    assert recs[0]["tp"] == 4 and "psum" in recs[0]["reason"]
