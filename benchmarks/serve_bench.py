@@ -33,6 +33,23 @@ controller with gates on availability, zero steady-state retraces, and
 recorded degradation/recovery transitions (EXPERIMENTS.md §Serving fault
 tolerance).
 
+``--mesh-faults`` switches to the degraded-mesh regime: a tp shard is
+deterministically killed mid-serving (``shard_loss`` fault class); the
+degradation controller attributes the consecutive same-shard failures,
+escalates past the brown-out ladder to the ``remesh`` recovery action,
+and the runtime re-meshes the engine onto the survivors on the
+maintenance seam (quiesce -> export -> re-plan -> re-pack -> rebuild +
+re-warm the jitted serve-step variants) and re-attempts the stranded
+micro-batch.  Hard gates per config (fp32/split and int8+dedup+fused):
+exactly one recorded re-mesh, availability >= 0.99, bounded MTTR
+(recorded in the artifact; wall time is compile-dominated on CPU
+containers), zero steady-state retraces across the whole run — the
+pre-loss *and* post-recovery steady states share one gate, read before
+any probe executes — and post-recovery probe scores bit-identical to a
+fresh engine packed onto the same survivor mesh (fused configs
+additionally assert the front end re-resolved ``fused_tp`` at the new
+tp).
+
 ``--updates`` switches to the streaming-embedding-update regime: the same
 offered load served twice — once clean, once with a WAL-logged trainer
 delta stream drained between micro-batches on the background-maintenance
@@ -52,7 +69,7 @@ against the ``front_end='split'`` control on the same arrival stream,
 gated on zero steady-state retraces in both runs and probe-batch scores
 bit-equal between the bindings.
 
-Writes ``BENCH_serve.json`` (schema 5); schema documented in
+Writes ``BENCH_serve.json`` (schema 6); schema documented in
 EXPERIMENTS.md §Serving.
 
 Service times are real measured device executions (interpret-mode caveat
@@ -80,13 +97,15 @@ from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
 from repro.checkpoint.wal import WriteAheadLog  # noqa: E402
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.distributed.sharding import make_mesh  # noqa: E402
+from repro.runtime.fault_tolerance import StragglerWatchdog  # noqa: E402
 from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
                            BindingExecutor, BreakerConfig, Bucket,
                            DegradationController,
                            DynamicBatcher, FaultConfig,
                            FaultInjectingExecutor, FixedBatcher,
                            LadderConfig, LoadConfig, OpenLoopSource,
-                           RuntimeConfig, ServiceModel, ServingRuntime,
+                           RetryPolicy, RuntimeConfig, ServiceModel,
+                           ServingRuntime,
                            StreamingUpdater, UpdateConfig, bind_model,
                            corrupt_store, dummy_request_factory,
                            make_padder, prime_dedup_auto, request_stream,
@@ -181,9 +200,14 @@ def run_fault_regime(binding, cfg, bat_cfg, load, runtime_cfg, svc_model,
                             poison_restore_after=2))
     fex = FaultInjectingExecutor(BindingExecutor(binding), fault_cfg,
                                  idx_key=binding.idx_key)
+    # per-batch service-time watchdog feeding the controller: a straggling
+    # shard walks the ladder down before it ever fails outright.  The 4x
+    # threshold sits safely above shared-host jitter and safely below the
+    # 8x injected straggler factor.
+    watchdog = StragglerWatchdog(threshold=4.0)
     runtime = ServingRuntime(fex, DynamicBatcher(bat_cfg), make_padder(cfg),
                              runtime_cfg, service_model=svc_model,
-                             controller=ctrl)
+                             controller=ctrl, watchdog=watchdog)
     reqs = request_stream(cfg, load)
     if regime.get("corrupt_store"):
         # promote hot pages with the live stream's prefix (a corrupted hot
@@ -228,6 +252,7 @@ def run_fault_section(binding, cfg, bat_cfg, runtime_cfg, svc_model,
               f"failed={r['failed']} retries={r['retries']} "
               f"rung={deg['rung']} transitions={deg['n_transitions']} "
               f"trips={deg['breaker_trips']} restores={deg['restores']} "
+              f"wd_trips={r['watchdog']['trips']} "
               f"fired={r['faults_fired']} "
               f"steady_traces={r['steady_traces']}")
         # ---- gates ----
@@ -245,6 +270,10 @@ def run_fault_section(binding, cfg, bat_cfg, runtime_cfg, svc_model,
                 f"recorded {deg['transitions']}")
         if label == "transient" and not r["retries"]:
             raise AssertionError("transient regime exercised no retries")
+        if label == "straggler" and not r["watchdog"]["trips"]:
+            raise AssertionError(
+                "straggler regime: the 8x injected stragglers never "
+                "tripped the service-time watchdog")
         if label == "corrupt_data" and not r["poisoned_batches"]:
             raise AssertionError(
                 "corrupt_data regime: NaN injection never reached the "
@@ -255,6 +284,182 @@ def run_fault_section(binding, cfg, bat_cfg, runtime_cfg, svc_model,
                 "checkpoint restore")
         runs[label] = {"avail_gate": regime["avail_gate"], **r}
     return runs
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mesh regime (--mesh-faults): survive shard loss via elastic remesh
+# ---------------------------------------------------------------------------
+
+# one run per serving configuration: the plain control and the full
+# feature stack (int8 cold tier + gather-once dedup + fused front end) —
+# the re-mesh must carry quantized pages verbatim, re-prime dedup, and
+# re-resolve fused_tp at the survivor tp, all mid-serving
+MESH_FAULT_CONFIGS = [
+    dict(label="fp32_split", storage="fp32", dedup="off", front_end="split"),
+    dict(label="int8_fused", storage="int8", dedup="on", front_end="fused"),
+]
+
+
+def run_mesh_fault_config(cfg, args, conf: dict, n_requests: int,
+                          prefer_tp: int) -> dict:
+    """One shard-loss -> elastic-remesh serving run, fully gated.
+
+    Starts on a (2, 4) dp x tp mesh, kills the highest tp shard at
+    attempt 2, and requires the runtime to detect (same-shard streak),
+    re-mesh onto the survivors (tp 4 -> 2 under ``prefer_tp=2`` with the
+    bucket-granule constraint), re-warm, and finish the offered load with
+    availability intact and zero steady-state retraces.  The retrace gate
+    is read *before* the bit-exactness probe: probe batches are fresh jit
+    signatures, and sampling the counter after them would conflate probe
+    traces with steady-state ones."""
+    fe = conf["front_end"] if hasattr(cfg, "n_tables") else "split"
+    mesh = make_mesh((2, 4), ("data", "model"))
+    bat_cfg = BatcherConfig(batch_sizes=(8, 16), poolings=(cfg.pooling,))
+    runtime_cfg = RuntimeConfig(observe_every=4, replan_every=32)
+    with mesh:
+        binding = bind_model(cfg, mesh, mode=args.mode, impl=args.impl,
+                             block_l=args.block_l, storage=conf["storage"],
+                             dedup=conf["dedup"], front_end=fe,
+                             degraded_variants=True, scrub_scores=True,
+                             elastic=True, prefer_tp=prefer_tp)
+        ctrl = DegradationController(
+            binding=binding,
+            retry=RetryPolicy(max_attempts=3),
+            # trip_after > retry budget x remesh_after: the breaker must
+            # not fail-fast the stranded batch before attribution
+            # escalates to remesh
+            breaker=BreakerConfig(trip_after=6, cooldown_s=0.02),
+            ladder=LadderConfig(min_dwell_batches=4, remesh_after=3))
+        inner = BindingExecutor(binding)
+        fex = FaultInjectingExecutor(
+            inner, FaultConfig(seed=13, shard_loss_at=(2,)),
+            idx_key=binding.idx_key)
+        watchdog = StragglerWatchdog(threshold=4.0, warmup=4)
+        runtime = ServingRuntime(inner, DynamicBatcher(bat_cfg),
+                                 make_padder(cfg), runtime_cfg,
+                                 controller=ctrl, watchdog=watchdog)
+        factory = dummy_request_factory(cfg, storage=conf["storage"])
+        # warm every ladder rung over every bucket through the *clean*
+        # executor (fault schedules index live attempts only), then arm
+        # the fault wrapper
+        for rung in binding.modes():
+            binding.set_mode(rung)
+            runtime.warmup(factory)
+        binding.set_mode("full")
+        padder = make_padder(cfg)
+        big = Bucket(bat_cfg.batch_sizes[-1], bat_cfg.poolings[-1])
+        cal = padder([factory(i, big.pooling)
+                      for i in range(big.batch)], big)
+        svc = float(np.median([inner.run_batch(big, cal)
+                               for _ in range(5)]))
+        capacity_qps = big.batch / svc
+        slo_ms = args.slo_ms or 5.0 * svc * 1e3
+        runtime.executor = fex
+        binding.reset_plan_stats()
+        load = LoadConfig(
+            n_requests=n_requests,
+            arrival=ArrivalConfig(rate_qps=0.3 * capacity_qps,
+                                  process="poisson", seed=7),
+            slo_ms=slo_ms, seed=7, storage=conf["storage"],
+            dedup=conf["dedup"], front_end=fe)
+        summary = runtime.run(OpenLoopSource(request_stream(cfg, load)))
+
+        # ---- gates (retrace gate FIRST — before any probe executes) ----
+        label = conf["label"]
+        steady_traces = binding.plan_stats()["traces"]
+        if steady_traces:
+            raise AssertionError(
+                f"[{label}] plan cache failed across the re-mesh: "
+                f"{steady_traces} steady-state retraces (the carried-trace "
+                f"ledger spans both sides of the recovery)")
+        rec = summary.get("remesh")
+        if binding.remeshes != 1 or rec is None:
+            raise AssertionError(
+                f"[{label}] expected exactly one elastic re-mesh, recorded "
+                f"{binding.remeshes} (remesh record: {rec})")
+        if summary["availability"] < 0.99:
+            raise AssertionError(
+                f"[{label}] availability gate failed across shard loss: "
+                f"{summary['availability']:.4f} < 0.99")
+        # MTTR = maintenance-seam wall time of the recovery (quiesce +
+        # export/re-plan/re-pack + rebuild & re-warm every serve-step
+        # variant).  On CPU containers the re-warm recompiles dominate, so
+        # the bound is deliberately loose: generous in SLO multiples,
+        # floored at 60 s wall.
+        mttr_bound = max(100.0 * slo_ms * 1e-3, 60.0)
+        if not (0.0 < rec["mttr_s"] < mttr_bound):
+            raise AssertionError(
+                f"[{label}] MTTR unbounded: {rec['mttr_s']:.2f} s "
+                f">= {mttr_bound:.1f} s")
+        new_shape = dict(binding.engine.mesh.shape)
+        if new_shape.get("model") != 2 or rec["to_mesh"] != new_shape:
+            raise AssertionError(
+                f"[{label}] survivor mesh mismatch: engine on {new_shape}, "
+                f"record says {rec['to_mesh']} (expected model=2)")
+        if fe == "fused":
+            recs = [r for r in
+                    binding.engine.plan_stats().get("front_end", {}).values()
+                    if r["requested"] == "fused"]
+            if not recs or any(r["resolved"] != "fused_tp" or r["tp"] != 2
+                               for r in recs):
+                raise AssertionError(
+                    f"[{label}] front end did not re-resolve fused_tp at "
+                    f"the survivor tp: "
+                    f"{[(r['resolved'], r['tp']) for r in recs]}")
+
+        # ---- bit-exactness probe: recovered engine vs a fresh engine
+        # packed onto the *same* survivor mesh from the same logical
+        # (codes, values, scales) triple and the same page table
+        codes, values, scales = binding.engine.export_state(binding.state)
+        fresh = bind_model(cfg, binding.engine.mesh, mode=args.mode,
+                           impl=args.impl, block_l=args.block_l,
+                           storage=conf["storage"], dedup=conf["dedup"],
+                           front_end=fe)
+        fresh.params = binding.params
+        fresh.state = fresh.engine.pack_state(
+            codes, values, scales, table=binding.state.page_table,
+            counts=np.asarray(jax.device_get(binding.state.counts)))
+        for bucket in (Bucket(b, cfg.pooling)
+                       for b in bat_cfg.batch_sizes):
+            probe = padder([factory(i, bucket.pooling)
+                            for i in range(bucket.batch)], bucket)
+            a = np.asarray(jax.device_get(binding.execute(probe)))
+            b = np.asarray(jax.device_get(fresh.execute(probe)))
+            if not np.array_equal(a, b):
+                raise AssertionError(
+                    f"[{label}] post-recovery scores diverge from a fresh "
+                    f"engine on the degraded mesh at bucket {bucket}")
+
+    deg = summary["degradation"]
+    print(f"[{label:11s}] avail={summary['availability']:.4f} "
+          f"served={summary['served']} failed={summary['failed']} "
+          f"remeshes={binding.remeshes} "
+          f"mttr={rec['mttr_s']:.2f}s at_batch={rec['at_batch']} "
+          f"{rec['from_mesh']} -> {rec['to_mesh']} "
+          f"lost_shard={rec['lost_shard']} "
+          f"steady_traces={steady_traces} "
+          f"fired={fex.report()['shard_loss']} "
+          f"rung={deg['rung']} probe=bit-identical")
+    summary.pop("latency_hist", None)
+    summary.pop("dedup_factors", None)
+    return {
+        "label": label, "storage": conf["storage"], "dedup": conf["dedup"],
+        "front_end": fe, "prefer_tp": prefer_tp,
+        "capacity_qps": capacity_qps, "slo_ms": slo_ms,
+        "offered_qps": 0.3 * capacity_qps,
+        "steady_traces": steady_traces,
+        "mttr_bound_s": mttr_bound,
+        "faults_fired": fex.report(),
+        "probe_bit_identical": True,
+        "run": summary,
+    }
+
+
+def run_mesh_fault_section(cfg, args, n_requests: int,
+                           prefer_tp: int) -> dict:
+    return {c["label"]: run_mesh_fault_config(cfg, args, c, n_requests,
+                                              prefer_tp)
+            for c in MESH_FAULT_CONFIGS}
 
 
 # ---------------------------------------------------------------------------
@@ -521,11 +726,50 @@ def main() -> None:
                          "instead of the policy-comparison regimes")
     ap.add_argument("--update-batch", type=int, default=32,
                     help="rows per trainer-emitted delta batch (--updates)")
+    ap.add_argument("--mesh-faults", action="store_true",
+                    help="run the degraded-mesh regime (kill a tp shard "
+                         "mid-serving, gate on elastic re-mesh recovery: "
+                         "availability, bounded MTTR, zero retraces, "
+                         "bit-exact post-recovery scores) instead of the "
+                         "policy-comparison regimes")
+    ap.add_argument("--prefer-tp", type=int, default=2,
+                    help="survivor-mesh tp preference for the elastic "
+                         "re-mesh policy (--mesh-faults; "
+                         "repro.runtime.elastic.scale_plan)")
     args = ap.parse_args()
-    if args.faults and args.updates:
-        ap.error("--faults and --updates are mutually exclusive sections")
+    if sum((args.faults, args.updates, args.mesh_faults)) > 1:
+        ap.error("--faults, --updates, and --mesh-faults are mutually "
+                 "exclusive sections")
 
     cfg = reduced(get_config(args.arch))
+
+    if args.mesh_faults:
+        # the section builds its own per-config meshes/bindings (the
+        # whole point is that the mesh changes mid-run); --storage/--dedup
+        # are superseded by the per-config matrix
+        n_requests = 96 if args.smoke else 192
+        print(f"serve bench: arch={args.arch} mode={args.mode} "
+              f"impl={args.impl} section=mesh_faults "
+              f"prefer_tp={args.prefer_tp}")
+        runs = run_mesh_fault_section(cfg, args, n_requests, args.prefer_tp)
+        out = {
+            "bench": "serve",
+            "schema": 6,
+            "section": "mesh_faults",
+            "backend": jax.default_backend(),
+            "interpret_mode": jax.default_backend() != "tpu",
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "mesh": {"data": 2, "model": 4},
+            "arch": args.arch, "mode": args.mode, "impl": args.impl,
+            "block_l": args.block_l, "prefer_tp": args.prefer_tp,
+            "n_requests": n_requests,
+            "mesh_fault_runs": runs,
+        }
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"\nwrote {args.out}")
+        return
     mesh = make_mesh((2, 4), ("data", "model"))
 
     # Regimes: the tail-latency gate applies where the policies differ
@@ -615,7 +859,7 @@ def main() -> None:
                 tempfile.mkdtemp(prefix="serve_bench_ckpt_"))
             out = {
                 "bench": "serve",
-                "schema": 5,
+                "schema": 6,
                 "section": "faults",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -649,7 +893,7 @@ def main() -> None:
                                 if k != "latency_hist"}
             out = {
                 "bench": "serve",
-                "schema": 5,
+                "schema": 6,
                 "section": "updates",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -728,7 +972,7 @@ def main() -> None:
 
     out = {
         "bench": "serve",
-        "schema": 5,
+        "schema": 6,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,

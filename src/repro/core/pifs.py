@@ -250,6 +250,95 @@ class PIFSEmbeddingEngine:
         hot_rows = jnp.take(state.hot, jnp.where(is_hot, local_row, 0), axis=0)
         return jnp.where(is_hot[:, None], hot_rows, cold_rows)
 
+    def export_state(self, state: EngineState
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Placement-invariant logical export in each tier's *native* domain.
+
+        Returns ``(codes, values, scales)``: ``codes`` is (padded_rows, D)
+        in the cold-tier storage dtype — cold-resident rows are their stored
+        representation verbatim (int8 codes for ``storage='int8'``), hot-
+        resident rows are their demoted form (re-quantized on the page's
+        carried scale, exactly what :meth:`migrate` would write on a
+        demotion); ``values`` is (padded_rows, D) fp32 — hot rows verbatim,
+        cold rows dequantized with the carried scale (exactly what a
+        promotion would write); ``scales`` is ``state.page_scales``
+        untouched.  For fp32 storage ``codes`` and ``values`` are the same
+        dense table.
+
+        Together with :meth:`pack_state` this is the cross-engine analog of
+        the typed migration gather: page geometry (``page_size`` /
+        ``num_pages``) depends only on dim/page_bytes/storage — never on
+        ``n_shards`` — so the triple round-trips bit-exactly through any
+        placement on any tp size (the elastic re-mesh path,
+        ``repro.runtime.elastic.remesh_engine``, is built on it)."""
+        c = self.cfg
+        ps = c.page_size
+        row = jnp.arange(c.padded_rows)
+        shard, local_row, is_hot = locate(c, state.page_table, row)
+        cold_pos = shard * c.rows_per_shard + local_row
+        cold_rows = jnp.take(state.cold, jnp.where(is_hot, 0, cold_pos),
+                             axis=0)
+        hot_rows = jnp.take(state.hot, jnp.where(is_hot, local_row, 0),
+                            axis=0)
+        if self.quantized:
+            s = state.page_scales[row // ps][:, None]
+            codes = jnp.where(is_hot[:, None],
+                              quant.quantize_rows(hot_rows, s), cold_rows)
+            values = jnp.where(is_hot[:, None], hot_rows,
+                               quant.dequantize_rows(cold_rows, s))
+        else:
+            codes = values = jnp.where(is_hot[:, None], hot_rows, cold_rows)
+        return codes, values, state.page_scales
+
+    def pack_state(self, codes: jax.Array, values: jax.Array,
+                   page_scales: jax.Array, table: Optional[PageTable] = None,
+                   counts=None) -> EngineState:
+        """Inverse of :meth:`export_state` under any placement on *this*
+        engine's mesh: cold slots take their rows from ``codes`` (storage-
+        native, moved verbatim — never re-quantized), hot slots from
+        ``values`` (fp32, moved verbatim), and ``page_scales`` is carried
+        untouched.  Packing therefore preserves the quantized domain
+        exactly: a page that was cold there and lands cold here keeps its
+        codes bit-for-bit, a hot->cold transition is the standard carried-
+        scale demotion, and cold->hot the standard dequantize promotion —
+        the same tier-boundary semantics as :meth:`migrate`."""
+        c = self.cfg
+        if table is None:
+            table = initial_page_table(c)
+        ps = c.page_size
+        shard = np.asarray(table.page_to_shard)
+        slot = np.asarray(table.page_to_slot)
+        cold_dst = (shard.astype(np.int64) * c.rows_per_shard
+                    + slot.astype(np.int64) * ps)
+        hot_dst = slot.astype(np.int64) * ps
+        row_off = np.arange(ps)
+        cold_pages = np.nonzero(shard != HOT_SHARD)[0]
+        hot_pages = np.nonzero(shard == HOT_SHARD)[0]
+        cold = jnp.zeros((c.cold_rows_total, c.dim), self.cold_dtype)
+        hot = jnp.zeros((c.hot_rows, c.dim), self.dtype)
+        codes = jnp.asarray(codes)
+        values = jnp.asarray(values)
+        if cold_pages.size:
+            dst = (cold_dst[cold_pages, None] + row_off).ravel()
+            src = (cold_pages[:, None] * ps + row_off).ravel()
+            cold = cold.at[dst].set(codes[src].astype(self.cold_dtype))
+        if hot_pages.size:
+            dst = (hot_dst[hot_pages, None] + row_off).ravel()
+            src = (hot_pages[:, None] * ps + row_off).ravel()
+            hot = hot.at[dst].set(values[src].astype(self.dtype))
+        if counts is None:
+            counts = jnp.zeros((c.num_pages,), jnp.float32)
+        state = EngineState(
+            cold=cold, hot=hot,
+            page_scales=jnp.asarray(page_scales, jnp.float32),
+            page_to_shard=jnp.asarray(shard, jnp.int32),
+            page_to_slot=jnp.asarray(slot, jnp.int32),
+            counts=jnp.asarray(counts, jnp.float32))
+        # commit to this engine's placement: the inputs may live on a
+        # different (larger/smaller) mesh — the elastic re-mesh path hands
+        # us arrays computed under the pre-loss mesh's sharding
+        return jax.device_put(state, self.state_shardings())
+
     # ----------------------------------------------------------------- lookup
     def _check_ids(self, indices) -> None:
         """Strict-mode OOB guard (``validate_ids=True``): raise host-side on
@@ -1282,6 +1371,15 @@ class ServeBinding:
         reload the EngineState from the last committed checkpoint between
         micro-batches (the observe/replan seam).  State shapes/dtypes are
         unchanged, so a restore never retraces the serve step.
+      * ``attach_remesher``/``remesh`` — mid-serving *elastic* recovery
+        from a lost tp shard: quiesce, pick a survivor mesh
+        (``runtime/elastic.scale_plan``), re-mesh the EngineState in the
+        quantized domain (codes + carried per-page scales move verbatim),
+        and rebuild every jitted serve-step variant against the new shard
+        count.  The caller (the serving runtime) re-warms the rebuilt
+        variants and resumes; steady-state trace counts accumulated before
+        the swap carry across it, so ``plan_stats()`` stays a whole-run
+        ledger.
     """
 
     def __init__(self, engine: PIFSEmbeddingEngine, state: EngineState,
@@ -1328,6 +1426,15 @@ class ServeBinding:
         self.update_capacity = 256
         self.update_seq = 0          # seq of the last applied delta batch
         self.updates_applied = 0     # total unique rows applied
+        # elastic re-mesh (mid-serving tp-shard-loss recovery): the
+        # rebinder rebuilds the jitted serve-step variants for a new
+        # engine/mesh pair (only loadgen knows model families, so it owns
+        # the callable); prefer_tp parameterizes the survivor-mesh policy
+        self._rebind = None          # (engine, mesh) -> (step, steps|None)
+        self.prefer_tp = 4
+        self.remeshes = 0
+        self.remesh_events: list = []
+        self._carried_traces = 0     # pre-remesh steady traces (see remesh)
 
     # ------------------------------------------------------------ variants
     def modes(self) -> tuple:
@@ -1381,14 +1488,57 @@ class ServeBinding:
         With a WAL attached the snapshot manifest records the last applied
         update sequence number, then the WAL truncates: every logged delta
         is already inside the committed state, so the log restarts empty
-        and restore-time replay never double-applies."""
+        and restore-time replay never double-applies.
+
+        The manifest's ``extra`` additionally records the writing engine's
+        mesh shape, shard count, and cold-tier storage mode; ``restore``
+        validates them so a mismatched-mesh (or mismatched-storage)
+        restore fails loudly with a pointer at the elastic path instead of
+        silently mis-placing shards."""
         if self.checkpointer is None:
             raise RuntimeError("no checkpointer attached")
         self.ckpt_step += 1
+        extra = {"update_seq": self.update_seq,
+                 "mesh": {str(a): int(s)
+                          for a, s in self.engine.mesh.shape.items()},
+                 "n_shards": int(self.engine.cfg.n_shards),
+                 "storage": self.engine.cfg.storage}
         self.checkpointer.save(self.ckpt_step, self.state, blocking=True,
-                               extra={"update_seq": self.update_seq})
+                               extra=extra)
         if self.wal is not None:
             self.wal.truncate()
+
+    def _check_restore_extra(self, extra: dict) -> None:
+        """Manifest mesh/storage guard: a checkpoint written under a
+        different shard count cannot be restored in place — the cold tier's
+        physical layout is a function of ``n_shards`` and the page table
+        maps pages to shard ids, so a silent restore would mis-place every
+        shard.  Fail loudly and name the elastic route instead.  (The
+        generic per-leaf dtype/shape guard in the checkpointer would also
+        trip, but with an opaque shape diff; this check explains *why* and
+        *what to do*.)  Pre-metadata manifests (no ``n_shards`` key)
+        validate vacuously."""
+        snap_shards = extra.get("n_shards")
+        if (snap_shards is not None
+                and int(snap_shards) != int(self.engine.cfg.n_shards)):
+            raise ValueError(
+                f"checkpoint was written with n_shards={snap_shards} "
+                f"(mesh {extra.get('mesh')}), but this engine has "
+                f"n_shards={self.engine.cfg.n_shards} (mesh "
+                f"{ {str(a): int(s) for a, s in self.engine.mesh.shape.items()} }"
+                "): an in-place restore would silently mis-place shards. "
+                "Route through the elastic path instead — restore on an "
+                "engine matching the snapshot's mesh, then re-mesh via "
+                "ServeBinding.remesh() / repro.runtime.elastic."
+                "remesh_engine().")
+        snap_storage = extra.get("storage")
+        if (snap_storage is not None
+                and snap_storage != self.engine.cfg.storage):
+            raise ValueError(
+                f"checkpoint was written with storage={snap_storage!r} but "
+                f"this engine uses storage={self.engine.cfg.storage!r}: "
+                "int8 codes and fp32 rows are not interchangeable — "
+                "rebuild the engine with the snapshot's storage mode.")
 
     def restore(self) -> None:
         """Reload EngineState from the latest committed checkpoint (the
@@ -1405,6 +1555,7 @@ class ServeBinding:
         restore loses no updates."""
         if self.checkpointer is None:
             raise RuntimeError("no checkpointer attached")
+        self._check_restore_extra(self.checkpointer.extra())
         self.state = self.checkpointer.restore(
             self.state, shardings=self.engine.state_shardings())
         self.restores += 1
@@ -1412,6 +1563,110 @@ class ServeBinding:
             snap_seq = int(self.checkpointer.extra().get("update_seq", 0))
             self.update_seq = snap_seq
             self.replay_wal(after_seq=snap_seq)
+
+    # ----------------------------------------------------- elastic re-mesh
+    def attach_remesher(self, rebind, prefer_tp: int = 4) -> None:
+        """Arm mid-serving elastic recovery.
+
+        ``rebind(engine, mesh) -> (step, steps|None)`` rebuilds the jitted
+        serve-step callable(s) for a re-meshed engine — only the model
+        binder (``serving.loadgen.bind_model``) knows the model family, so
+        it owns this closure.  ``prefer_tp`` parameterizes the
+        survivor-mesh policy (``runtime/elastic.scale_plan``)."""
+        self._rebind = rebind
+        self.prefer_tp = int(prefer_tp)
+
+    @property
+    def can_remesh(self) -> bool:
+        return self._rebind is not None
+
+    def remesh(self, lost_shard=None, new_mesh=None, heal: bool = False,
+               batch_granule: int = 0) -> dict:
+        """Mid-serving elastic recovery from a lost tp shard.
+
+        Maintenance-seam call (between micro-batches, like observe/replan
+        — its wall time is recovery, never service time).  The sequence:
+
+          1. *Quiesce*: block on the in-flight EngineState so no device
+             work straddles the swap.
+          2. Optionally *heal* first: reload the last committed checkpoint
+             and replay the WAL tail **on the old mesh** (the snapshot was
+             written under the old placement; ``_check_restore_extra``
+             enforces exactly this ordering).
+          3. Pick the survivor mesh: one tp shard is gone, so
+             ``dp * (tp - 1)`` devices survive; ``scale_plan(survivors,
+             prefer_tp, batch_granule)`` chooses the new (dp, tp) split
+             unless the caller pins ``new_mesh`` explicitly —
+             ``batch_granule`` (the gcd of the batcher's bucket batch
+             sizes, supplied by the serving runtime) keeps dp a divisor
+             of every micro-batch the rebuilt step must shard.
+          4. Re-mesh the EngineState in the quantized domain
+             (``runtime/elastic.remesh_engine``: int8 codes and carried
+             per-page scales move verbatim — bit-stable, no requantize).
+          5. Rebuild every jitted serve-step variant via the attached
+             rebinder; the caller re-warms them (warmup traces are not
+             steady-state) and resumes.
+          6. If a checkpointer is attached, commit a post-remesh baseline
+             snapshot — the old-mesh checkpoint can no longer restore in
+             place, and the snapshot truncates the already-replayed WAL.
+
+        Steady-state trace counts accumulated before the swap move into a
+        carried ledger so ``plan_stats()['traces']`` stays a whole-run
+        zero-retrace measure across the re-mesh.  Returns the event record
+        (also appended to ``remesh_events``)."""
+        if self._rebind is None:
+            raise RuntimeError(
+                "no rebinder attached — call attach_remesher() (or "
+                "bind_model(elastic=True)) before remesh()")
+        # deferred: elastic imports this module at its top level
+        from repro.runtime.elastic import remesh_engine, scale_plan
+        from repro.distributed.sharding import make_mesh
+        old_engine = self.engine
+        # 1. quiesce: nothing may straddle the placement swap
+        jax.block_until_ready((self.state.cold, self.state.hot))
+        if heal:
+            # 2. heal on the *old* mesh: checkpoint + WAL tail were written
+            # under the old placement, and restore validates exactly that
+            self.restore()
+        if new_mesh is None:
+            old_tp = old_engine.axes.tp_size(old_engine.mesh)
+            old_dp = old_engine.axes.dp_size(old_engine.mesh)
+            if old_tp < 2:
+                raise RuntimeError(
+                    f"cannot drop a tp shard from mesh "
+                    f"{dict(old_engine.mesh.shape)}: tp={old_tp} has no "
+                    "survivor — shard loss at tp=1 is total loss")
+            survivors = old_dp * (old_tp - 1)
+            shape, names = scale_plan(survivors, prefer_tp=self.prefer_tp,
+                                      batch_granule=batch_granule)
+            new_mesh = make_mesh(shape, names)
+        new_engine, new_state = remesh_engine(
+            old_engine, new_mesh, self.state)
+        # pre-swap steady traces move to the carried ledger (the new
+        # engine's counter starts at zero and the caller's post-warm
+        # reset only clears engine-level counts)
+        self._carried_traces += old_engine._trace_count
+        self.engine = new_engine
+        self.state = new_state
+        step, steps = self._rebind(new_engine, new_mesh)
+        self.steps = dict(steps or {})
+        self.steps.setdefault("full", step)
+        self.step = self.steps["full"]
+        if self.active not in self.steps:
+            self.active = "full"
+        if self.checkpointer is not None:
+            # 6. new baseline: the pre-remesh checkpoint is now
+            # mesh-mismatched (restore would refuse it) and any WAL tail
+            # was replayed in step 2 — snapshot commits + truncates
+            self.snapshot()
+        event = {"from_mesh": dict(old_engine.mesh.shape),
+                 "to_mesh": dict(new_mesh.shape),
+                 "lost_shard": lost_shard,
+                 "n_shards": int(new_engine.cfg.n_shards),
+                 "healed": bool(heal)}
+        self.remeshes += 1
+        self.remesh_events.append(event)
+        return event
 
     # ----------------------------------------------------- streaming updates
     def attach_wal(self, wal) -> None:
@@ -1511,10 +1766,17 @@ class ServeBinding:
         return stats
 
     def plan_stats(self) -> dict:
-        return self.engine.plan_stats()
+        """Engine plan-cache stats plus the carried trace ledger: traces
+        counted on pre-remesh engines accumulate here, so the zero-
+        steady-state-retrace contract is measured across the whole run,
+        re-meshes included."""
+        out = self.engine.plan_stats()
+        out["traces"] = out["traces"] + self._carried_traces
+        return out
 
     def reset_plan_stats(self) -> None:
         self.engine.reset_plan_stats()
+        self._carried_traces = 0
 
 
 def engine_for_tables(vocab_sizes, dim, mesh, hot_fraction=0.05,

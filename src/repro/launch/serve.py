@@ -20,9 +20,14 @@ from typing import Dict, Optional, Tuple
 import jax
 
 from repro.configs import get_config, reduced
-from repro.serving import (BatcherConfig, BindingExecutor, ClosedLoopSource,
-                           DynamicBatcher, FixedBatcher, LoadConfig,
-                           OpenLoopSource, RuntimeConfig, ServingRuntime,
+from repro.runtime.fault_tolerance import StragglerWatchdog
+from repro.serving import (BatcherConfig, BindingExecutor, BreakerConfig,
+                           ClosedLoopSource, DegradationController,
+                           DynamicBatcher, FaultConfig,
+                           FaultInjectingExecutor, FixedBatcher,
+                           LadderConfig, LoadConfig,
+                           OpenLoopSource, RetryPolicy, RuntimeConfig,
+                           ServingRuntime,
                            StreamingUpdater, UpdateConfig, bind_model,
                            closed_loop_factory, dummy_request_factory,
                            make_padder, prime_dedup_auto, request_stream,
@@ -41,15 +46,21 @@ def build_serving(cfg, mesh, *, mode: str = "pifs", impl: str = "jnp",
                   front_end: str = "split",
                   runtime_cfg: RuntimeConfig = RuntimeConfig(),
                   validate_ids: bool = False,
+                  elastic: bool = False, prefer_tp: int = 2,
                   ) -> Tuple[ServingRuntime, "object"]:
     """Compose (runtime, binding) for a config; buckets warmed by the
     caller via ``runtime.warmup``.  ``validate_ids`` arms the binding's
     host-side strict OOB-id check (raise loudly instead of letting the
-    device gather clamp bad ids silently)."""
+    device gather clamp bad ids silently).  ``elastic`` additionally
+    binds degraded serve-step variants and attaches the re-mesh rebinder
+    so a persistent shard loss can recover mid-serving onto the
+    survivors (tp preference ``prefer_tp``)."""
     binding = bind_model(cfg, mesh, mode=mode, impl=impl, block_l=block_l,
                          hot_fraction=hot_fraction, storage=storage,
                          dedup=dedup, front_end=front_end,
-                         validate_ids=validate_ids)
+                         validate_ids=validate_ids,
+                         degraded_variants=elastic, scrub_scores=elastic,
+                         elastic=elastic, prefer_tp=prefer_tp)
     levels = tuple(sorted(set(poolings))) or (
         (cfg.pooling,) if hasattr(cfg, "pooling") else (1,))
     if batcher == "dynamic":
@@ -75,6 +86,8 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                        validate_ids: bool = False,
                        update_cfg: Optional[UpdateConfig] = None,
                        wal_path: Optional[str] = None,
+                       mesh_faults: bool = False, prefer_tp: int = 2,
+                       fault_seed: int = 13,
                        ) -> Dict[str, object]:
     """End-to-end: bind, warm every bucket, serve the stream, and report
     metrics + the steady-state retrace count (must be 0).  The engine's
@@ -88,15 +101,46 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
     micro-batches by a ``StreamingUpdater`` (warmed *before* plan stats
     reset, so steady state stays retrace-free), with staleness p50/p99 in
     the summary and, when ``wal_path`` is given, every applied batch
-    write-ahead-logged for mid-serving replay."""
+    write-ahead-logged for mid-serving replay.
+
+    ``mesh_faults`` arms the degraded-mesh regime: a ``shard_loss`` fault
+    kills the highest tp shard at live attempt 2, the degradation
+    controller attributes the same-shard streak and escalates past the
+    brown-out ladder to an elastic re-mesh (quiesce, export, re-plan on
+    the survivor mesh, re-pack, rebuild + re-warm the serve steps), and
+    the run finishes on the survivors.  The summary carries the remesh
+    record (MTTR = maintenance-seam wall time), watchdog trips, and the
+    degradation report."""
     runtime, binding = build_serving(
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
         hot_fraction=hot_fraction, storage=load.storage, dedup=load.dedup,
         front_end=load.front_end, runtime_cfg=runtime_cfg,
-        validate_ids=validate_ids)
+        validate_ids=validate_ids, elastic=mesh_faults, prefer_tp=prefer_tp)
+    if mesh_faults:
+        if dict(mesh.shape).get("model", 1) < 2:
+            raise ValueError(
+                "--mesh-faults needs a tp-sharded mesh (model >= 2): "
+                "losing the only model shard is total loss, not a "
+                f"degraded mesh (got {dict(mesh.shape)})")
+        runtime.controller = DegradationController(
+            binding=binding,
+            retry=RetryPolicy(max_attempts=3),
+            breaker=BreakerConfig(trip_after=6, cooldown_s=0.02),
+            ladder=LadderConfig(min_dwell_batches=4, remesh_after=3))
+        runtime.watchdog = StragglerWatchdog(threshold=4.0, warmup=4)
     with mesh:
-        runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
+        if mesh_faults:
+            # warm every ladder rung over every bucket through the clean
+            # executor (fault schedules index live attempts only); the
+            # fault wrapper is armed after all warmup, right before run
+            factory = dummy_request_factory(cfg, storage=load.storage)
+            for rung in binding.modes():
+                binding.set_mode(rung)
+                runtime.warmup(factory)
+            binding.set_mode("full")
+        else:
+            runtime.warmup(dummy_request_factory(cfg, storage=load.storage))
         # the open-loop stream is only materialized when something uses it
         # (the serving source, or the 'auto' priming prefix) — closed-loop
         # runs draw from their own factory
@@ -115,6 +159,11 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                                        ucfg, wal=wal)
             updater.warmup()              # compile the apply plan now
             runtime.updater = updater
+        if mesh_faults:
+            runtime.executor = FaultInjectingExecutor(
+                runtime.executor,
+                FaultConfig(seed=fault_seed, shard_loss_at=(2,)),
+                idx_key=binding.idx_key)
         binding.reset_plan_stats()        # steady state begins here
         binding.dedup_stats.clear()       # drop warmup-dummy observations
         warm_replans = binding.replans
@@ -128,6 +177,9 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
         summary = runtime.run(source)
     stats = binding.plan_stats()
     summary["steady_traces"] = stats["traces"]
+    if mesh_faults:
+        summary["remeshes"] = binding.remeshes
+        summary["faults_fired"] = runtime.executor.report()
     summary["plans"] = stats["plans"]
     summary["front_end"] = stats.get("front_end", {})
     summary["replans"] = binding.replans - warm_replans
@@ -187,6 +239,15 @@ def main() -> None:
     ap.add_argument("--wal", default=None, metavar="PATH",
                     help="write-ahead-log applied update batches to PATH "
                          "(mid-serving restore replays it)")
+    ap.add_argument("--mesh-faults", action="store_true",
+                    help="degraded-mesh regime: inject a persistent "
+                         "shard_loss fault (highest tp shard, live attempt "
+                         "2) and require a mid-serving elastic re-mesh "
+                         "onto the survivors — prints the remesh record "
+                         "(MTTR, from/to mesh) and the degradation report")
+    ap.add_argument("--prefer-tp", type=int, default=2,
+                    help="tp preference handed to scale_plan when the "
+                         "elastic re-mesh lays out the survivor mesh")
     ap.add_argument("--observe-every", type=int, default=4)
     ap.add_argument("--replan-every", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
@@ -212,14 +273,30 @@ def main() -> None:
         runtime_cfg=RuntimeConfig(observe_every=args.observe_every,
                                   replan_every=args.replan_every),
         closed_loop_users=args.closed_loop_users,
-        validate_ids=args.validate_ids, wal_path=args.wal)
+        validate_ids=args.validate_ids, wal_path=args.wal,
+        mesh_faults=args.mesh_faults, prefer_tp=args.prefer_tp)
     out.pop("latency_hist", None)
     fe_plans = out.pop("front_end", {})
     dedup_factors = out.pop("dedup_factors", {})
     staleness = out.pop("staleness", None)
     updates = out.pop("updates", None)
+    remesh = out.pop("remesh", None)
+    watchdog = out.pop("watchdog", None)
+    degradation = out.pop("degradation", None)
     for k, v in out.items():
         print(f"  {k:24s} {v}")
+    if remesh is not None:
+        print("  -- elastic re-mesh --")
+        for k, v in remesh.items():
+            print(f"  {k:24s} {v}")
+    if watchdog is not None:
+        print(f"  watchdog_trips           {watchdog['trips']} "
+              f"(ewma={watchdog['ewma_s']:.4f}s)")
+    if degradation is not None:
+        print(f"  degradation              rung={degradation['rung']} "
+              f"remeshes={degradation['remeshes']} "
+              f"suspect_shard={degradation['suspect_shard']} "
+              f"straggler_trips={degradation['straggler_trips']}")
     if updates is not None:
         print("  -- streaming updates --")
         for k, v in updates.items():

@@ -41,37 +41,76 @@ def remesh_engine(old_engine: PIFSEmbeddingEngine, new_mesh: Mesh,
                   ) -> Tuple[PIFSEmbeddingEngine, Any]:
     """Re-shard a PIFS engine state onto a new mesh (different tp size).
 
-    Strategy: export to the dense logical table (placement-invariant), build
-    a fresh engine for the new shard count, re-plan placement from the saved
-    access histogram, and re-pack.  Cost: one gather each way — the same
-    cache-line-granular move the migration path uses.
+    Strategy: export the state through the engine's placement-invariant
+    logical view (``export_state``: cold rows as storage-native codes, hot
+    rows as fp32 values, per-page scales carried verbatim), build a fresh
+    engine for the new shard count, re-plan placement from the saved access
+    histogram, and re-pack (``pack_state``).  Cost: one gather each way —
+    the same cache-line-granular move the migration path uses.
+
+    The quantized domain matters: page geometry (``page_size``,
+    ``num_pages``, ``padded_rows``) is a function of dim / page_bytes /
+    storage only — never ``n_shards`` — so an int8 cold page's codes and
+    its carried scale move bit-for-bit to wherever the new plan places the
+    page.  No dequantize/requantize round trip, no fresh scales: re-mesh
+    composes with PR 3/7's carried-scale idempotency, and a tp 4→2→4 round
+    trip is bitwise the identity on (codes, values, scales).
+
+    Engine-level serving knobs (dedup default/threshold/staging,
+    validate_ids, the measured dedup-auto hint, the host counts mirror)
+    carry over so a re-meshed serving engine resolves its plans from the
+    same evidence the old one did.
     """
     from repro.distributed.sharding import axes_for
-    dense = old_engine.to_dense(state)
+    codes, values, page_scales = old_engine.export_state(state)
+    jax.block_until_ready((codes, values))
     new_axes = axes_for(new_mesh)
     new_cfg = dataclasses.replace(
         old_engine.cfg, n_shards=new_axes.tp_size(new_mesh))
-    new_engine = PIFSEmbeddingEngine(new_cfg, new_mesh, axes=new_axes,
-                                     planner=old_engine.planner,
-                                     dtype=old_engine.dtype)
+    new_engine = PIFSEmbeddingEngine(
+        new_cfg, new_mesh, axes=new_axes,
+        planner=old_engine.planner,
+        dtype=old_engine.dtype,
+        dedup=old_engine.default_dedup,
+        dedup_auto_threshold=old_engine.dedup_auto_threshold,
+        dedup_staging_bytes=old_engine.dedup_staging_bytes,
+        validate_ids=old_engine.validate_ids)
+    new_engine.dedup_auto_hint = old_engine.dedup_auto_hint
+    new_engine._host_counts = (
+        None if old_engine._host_counts is None
+        else np.array(old_engine._host_counts, copy=True))
     counts = counts if counts is not None else np.asarray(
         jax.device_get(state.counts))
     # re-plan under the new shard count using the carried histogram
     from repro.core.paging import initial_page_table
     table0 = initial_page_table(new_cfg)
     new_table, _ = plan(new_cfg, table0, counts, new_engine.planner)
-    new_state = new_engine.from_dense(dense, new_table)
-    new_state = dataclasses.replace(
-        new_state, counts=jax.numpy.asarray(counts, jax.numpy.float32))
+    new_state = new_engine.pack_state(codes, values, page_scales,
+                                      table=new_table, counts=counts)
     return new_engine, new_state
 
 
-def scale_plan(n_devices: int, prefer_tp: int = 16
+def scale_plan(n_devices: int, prefer_tp: int = 16, batch_granule: int = 0
                ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
     """Pick a (data, model) mesh for an arbitrary surviving device count —
     the re-mesh policy after partial failure.  Keeps tp at `prefer_tp` when
     divisible (table shards move less), else the largest power-of-two
-    divisor."""
+    divisor.
+
+    ``batch_granule`` > 0 adds the serving constraint: the data axis
+    shards bucket-shaped micro-batches, so dp must divide the bucket
+    batch granule (the gcd of the batcher's batch sizes).  When the full
+    survivor count cannot satisfy it (e.g. 6 survivors -> dp=3 against
+    power-of-two buckets), the plan shrinks the *used* device count until
+    it can — an idle survivor beats a mesh the serve step cannot shard
+    over."""
+    if batch_granule:
+        for n in range(n_devices, 0, -1):
+            tp = prefer_tp
+            while tp > 1 and n % tp:
+                tp //= 2
+            if batch_granule % (n // tp) == 0:
+                return (n // tp, tp), ("data", "model")
     tp = prefer_tp
     while tp > 1 and n_devices % tp:
         tp //= 2

@@ -25,7 +25,8 @@ from repro.serving.degradation import (RUNGS, BreakerConfig, CircuitBreaker,
                                        DegradationController, LadderConfig,
                                        RetryPolicy)
 from repro.serving.faults import (FaultConfig, FaultInjectingExecutor,
-                                  TransientServingFailure, corrupt_store)
+                                  ShardLossFailure, TransientServingFailure,
+                                  corrupt_store)
 from repro.core.updates import UpdateConfig
 from repro.serving.loadgen import (LoadConfig, bind_model,
                                    closed_loop_factory,
@@ -47,7 +48,8 @@ __all__ = [
     "FaultInjectingExecutor", "FixedBatcher", "FixedServiceModel", "Flush",
     "LadderConfig", "LatencyHistogram", "LoadConfig", "OpenLoopSource",
     "RUNGS", "Request", "RetryPolicy", "RuntimeConfig", "ServiceModel",
-    "ServingMetrics", "ServingRuntime", "SimulatedExecutor",
+    "ServingMetrics", "ServingRuntime", "ShardLossFailure",
+    "SimulatedExecutor",
     "StreamingUpdater", "TransientServingFailure", "UpdateBatch",
     "UpdateConfig", "Wait", "arrival_times", "bind_model",
     "closed_loop_factory", "corrupt_store", "dummy_request_factory",

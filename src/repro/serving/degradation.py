@@ -33,6 +33,17 @@ Under injected (or real) faults the runtime should bend, not break:
     batches with scrubbed (non-finite) scores signal a corrupted store;
     the runtime heals it between micro-batches via ``ServeBinding.restore()``
     (checkpoint reload on the maintenance seam — no retrace, no restart).
+  * **Remesh escalation** — the ladder and breaker handle *transient*
+    pressure; a dead tp shard is *persistent* and per-shard.  The
+    distinguisher is attribution: attempt failures carrying a ``shard``
+    id (:class:`~repro.serving.faults.ShardLossFailure`) build a
+    consecutive same-shard streak, while any interleaved *non*-attributed
+    transient breaks the evidence chain (a genuinely flaky fabric does
+    not blame one shard consistently).  ``remesh_after`` same-shard
+    failures escalate past the ladder to the ``remesh`` recovery action:
+    the runtime quiesces, re-meshes the engine onto the survivors
+    (``ServeBinding.remesh``), re-warms, and ``note_remeshed`` resets the
+    breaker/pressure/ladder — the fault is *gone*, not cooling down.
 
 All state advances on the runtime's virtual clock, so chaos runs are
 deterministic and replayable.
@@ -72,6 +83,12 @@ class LadderConfig:
     min_dwell_batches: int = 8       # hysteresis: batches between moves
     shed_capacity: int = 64          # admission bound while on 'shed'
     poison_restore_after: int = 2    # consecutive poisoned batches -> restore
+    # consecutive attempt failures *attributed to one shard* before the
+    # controller escalates to elastic re-mesh (0 disables).  The default
+    # equals RetryPolicy.max_attempts: one retry-exhausted batch whose
+    # every attempt blamed the same shard is already persistent-failure
+    # evidence no transient produces.
+    remesh_after: int = 3
 
 
 class CircuitBreaker:
@@ -133,6 +150,12 @@ class DegradationController:
         self._dwell = 0
         self._poison_streak = 0
         self.restores = 0
+        # per-shard failure attribution (remesh escalation)
+        self._shard_streak = 0
+        self.suspect_shard: Optional[int] = None
+        self.remeshes = 0
+        self.remesh_events: List[dict] = []
+        self.straggler_trips = 0
 
     # --------------------------------------------------------------- wiring
     @property
@@ -148,8 +171,33 @@ class DegradationController:
     def allow_execute(self, now: float) -> bool:
         return self.breaker.allow(now)
 
-    def on_attempt_failure(self, now: float) -> None:
+    def on_attempt_failure(self, now: float, exc=None) -> None:
         self.breaker.record_failure(now)
+        # per-shard attribution: failures carrying a shard id build a
+        # same-shard streak; an interleaved *non*-attributed transient
+        # breaks the chain (flaky fabrics don't blame one shard
+        # consistently — that inconsistency IS the transient/persistent
+        # distinguisher).  exc=None (legacy callers) leaves the streak
+        # untouched.
+        shard = getattr(exc, "shard", None)
+        if shard is not None:
+            if shard == self.suspect_shard:
+                self._shard_streak += 1
+            else:
+                self.suspect_shard = shard
+                self._shard_streak = 1
+        elif exc is not None:
+            self.suspect_shard = None
+            self._shard_streak = 0
+
+    def on_straggler(self, now: float) -> None:
+        """Watchdog trip: one micro-batch served far above the service-time
+        EWMA.  A half-weight pressure bump — slow-but-correct is pressure,
+        not failure — so sustained straggling walks the ladder down while
+        one blip decays away."""
+        l = self.ladder
+        self.pressure = (1 - l.alpha) * self.pressure + l.alpha * 0.5
+        self.straggler_trips += 1
 
     # --------------------------------------------------------------- ladder
     def on_batch_done(self, now: float, ok: bool, poisoned: int = 0) -> None:
@@ -158,6 +206,12 @@ class DegradationController:
         if ok:
             self.breaker.record_success()
             self._poison_streak = self._poison_streak + 1 if poisoned else 0
+            if self.rung < RUNGS.index("hot_only"):
+                # a success through the cross-shard datapath exonerates the
+                # suspect; hot-only/shed successes don't touch the cold
+                # shards, so they are not evidence either way
+                self.suspect_shard = None
+                self._shard_streak = 0
         l = self.ladder
         self.pressure = ((1 - l.alpha) * self.pressure
                          + l.alpha * (0.0 if ok else 1.0))
@@ -192,6 +246,32 @@ class DegradationController:
         self._poison_streak = 0
         self.restores += 1
 
+    @property
+    def wants_remesh(self) -> bool:
+        """Escalate past the ladder: enough consecutive failures blamed on
+        one shard, and the binding can actually re-mesh."""
+        return (self.ladder.remesh_after > 0
+                and self.binding is not None
+                and getattr(self.binding, "can_remesh", False)
+                and self._shard_streak >= self.ladder.remesh_after)
+
+    def note_remeshed(self, now: float, event: Optional[dict] = None
+                      ) -> None:
+        """The dead shard left the mesh: unlike a breaker cooldown, the
+        fault is *gone* — reset breaker, pressure, and ladder so serving
+        resumes at full quality on the survivor mesh."""
+        self.remeshes += 1
+        self.remesh_events.append(
+            {"t": round(now, 6), "shard": self.suspect_shard,
+             **(event or {})})
+        self.suspect_shard = None
+        self._shard_streak = 0
+        self.breaker.state = "closed"
+        self.breaker.consecutive = 0
+        self.pressure = 0.0
+        if self.rung != 0:
+            self._move(now, 0, "remesh recovery")
+
     # --------------------------------------------------------------- report
     def report(self) -> dict:
         return {
@@ -202,4 +282,8 @@ class DegradationController:
             "breaker_state": self.breaker.state,
             "breaker_trips": self.breaker.trips,
             "restores": self.restores,
+            "remeshes": self.remeshes,
+            "remesh_events": list(self.remesh_events),
+            "suspect_shard": self.suspect_shard,
+            "straggler_trips": self.straggler_trips,
         }

@@ -21,6 +21,12 @@ chaos, reproducible across runs):
   * **stall** — maintenance (``observe``/``replan``) takes ``stall_s``
     extra seconds (a fabric-switch firmware pause landing on the
     maintenance path).
+  * **shard_loss** — a tp shard's device disappears: once fired, every
+    attempt that exercises the cross-shard datapath raises
+    :class:`ShardLossFailure` (carrying the dead shard id) until the
+    runtime re-meshes onto the survivors and calls :meth:`on_remesh`.
+    Persistent, not transient — the class the elastic recovery path
+    exists for.
   * **corruption** — the *data plane* is poisoned: some ids pushed out of
     range (``corrupt_oob``; the device gather would clamp them silently —
     ``validate_ids`` exists to catch exactly this) or dense rows set to
@@ -50,10 +56,26 @@ class TransientServingFailure(SimulatedFailure):
     """A retryable serving-path failure (transient device/RPC error)."""
 
 
+class ShardLossFailure(TransientServingFailure):
+    """A tp shard's device is gone: its psum contribution is dead.
+
+    Unlike a transient, this is *persistent* — retries keep failing until
+    the dead shard leaves the mesh (an elastic re-mesh onto the
+    survivors).  ``shard`` identifies the lost tp index, which is what
+    lets the degradation controller attribute consecutive failures to one
+    shard and escalate past the brown-out ladder to the ``remesh``
+    recovery action instead of uselessly cycling the breaker."""
+
+    def __init__(self, msg: str, shard: int):
+        super().__init__(msg)
+        self.shard = int(shard)
+
+
 # distinct per-class seed salts so one FaultConfig.seed yields independent
 # (but individually reproducible) schedules per fault class
 _SALTS = {"straggler": 0x57A6, "transient": 0x7EA4, "stall": 0x57A1,
-          "corrupt_oob": 0x00B0, "corrupt_nan": 0x0A17}
+          "corrupt_oob": 0x00B0, "corrupt_nan": 0x0A17,
+          "shard_loss": 0x10AD}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +102,14 @@ class FaultConfig:
     corrupt_oob_at: Tuple[int, ...] = ()
     corrupt_nan_prob: float = 0.0
     corrupt_nan_at: Tuple[int, ...] = ()
+    # shard_loss: once fired, *every* subsequent attempt that exercises the
+    # cross-shard datapath fails until the executor is told the shard left
+    # the mesh (on_remesh) — the persistent-failure class the elastic
+    # recovery path exists for.  shard_loss_shard = -1 picks the highest
+    # tp index from the bound engine at fire time.
+    shard_loss_prob: float = 0.0
+    shard_loss_at: Tuple[int, ...] = ()
+    shard_loss_shard: int = -1
 
     def injectors(self) -> Dict[str, FailureInjector]:
         def inj(name: str, prob: float, at: Tuple[int, ...]):
@@ -95,6 +125,8 @@ class FaultConfig:
                                self.corrupt_oob_at),
             "corrupt_nan": inj("corrupt_nan", self.corrupt_nan_prob,
                                self.corrupt_nan_at),
+            "shard_loss": inj("shard_loss", self.shard_loss_prob,
+                              self.shard_loss_at),
         }
 
 
@@ -121,6 +153,7 @@ class FaultInjectingExecutor:
         self._step = 0           # run_batch attempts
         self._mstep = 0          # maintenance calls (observe + replan)
         self._transient_left = 0
+        self.lost_shard: Optional[int] = None   # armed by shard_loss
         self.fired: Dict[str, int] = {k: 0 for k in self._inj}
         self.corrupted_batches: list = []
 
@@ -160,10 +193,44 @@ class FaultInjectingExecutor:
         self.corrupted_batches.append(step)
         return batch
 
+    def _resolve_lost_shard(self) -> int:
+        """Which tp index dies: the configured one, else the highest tp
+        index on the bound engine's mesh (the canonical 'last device on
+        the fabric port' victim), else 0."""
+        if self.cfg.shard_loss_shard >= 0:
+            return self.cfg.shard_loss_shard
+        binding = getattr(self.inner, "binding", None)
+        if binding is not None:
+            eng = binding.engine
+            return max(0, eng.axes.tp_size(eng.mesh) - 1)
+        return 0
+
+    def on_remesh(self, event=None) -> None:
+        """The runtime tells us the dead shard left the mesh: the
+        persistent failure clears (the survivors' collectives no longer
+        wait on the lost device)."""
+        self.lost_shard = None
+
     # ------------------------------------------------ executor protocol
     def run_batch(self, bucket, batch) -> float:
         step = self._step
         self._step += 1
+        if self.lost_shard is None and self._inj["shard_loss"].fires(step):
+            self.lost_shard = self._resolve_lost_shard()
+        if self.lost_shard is not None:
+            # persistent until on_remesh(): every attempt that crosses
+            # shards dies on the dead device's collective.  The hot-only
+            # and shed rungs run zero cross-shard work (replicated hot
+            # tier only), so a dead cold shard is invisible to them —
+            # which is exactly why the ladder alone cannot *recover*,
+            # only limp.
+            binding = getattr(self.inner, "binding", None)
+            rung = getattr(binding, "active", None)
+            if rung not in ("hot_only", "shed"):
+                self.fired["shard_loss"] += 1
+                raise ShardLossFailure(
+                    f"injected shard loss: tp shard {self.lost_shard} "
+                    f"dead at attempt {step}", shard=self.lost_shard)
         if self._transient_left > 0:
             self._transient_left -= 1
             self.fired["transient"] += 1

@@ -69,6 +69,50 @@ class LoadConfig:
 # ---------------------------------------------------------------------------
 
 
+def _dlrm_steps(cfg, engine, mesh, *, mode, impl, block_l, dedup,
+                front_end, degraded_variants):
+    """Jitted serve-step variants for a DLRM (engine, mesh) pair — split
+    out of :func:`bind_model` so an elastic re-mesh can rebuild them
+    against the survivor mesh with identical knobs (``front_end`` re-
+    resolves per mesh: tp>1 picks ``fused_tp``, tp=1 plain fused)."""
+    step = jax.jit(dlrm_mod.make_serve_step(
+        cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l,
+        dedup=dedup, front_end=front_end))
+    steps = None
+    if degraded_variants:
+        def dlrm_step(**kw):
+            return jax.jit(dlrm_mod.make_serve_step(
+                cfg, engine, mesh, mode=mode, impl=impl,
+                block_l=block_l, **kw))
+        hot_only = dlrm_step(dedup="off", front_end="split",
+                             tiers="hot_only")
+        steps = {
+            "split_fe": dlrm_step(dedup=dedup, front_end="split"),
+            "no_dedup": dlrm_step(dedup="off", front_end="split"),
+            "hot_only": hot_only,
+            "shed": hot_only,
+        }
+    return step, steps
+
+
+def _rec_steps(cfg, engine, offs, mesh, *, mode, impl, block_l, dedup,
+               degraded_variants):
+    """Rec-family analogue of :func:`_dlrm_steps` (``offs`` are page-size
+    offsets — a function of storage, not of the mesh, so they carry
+    verbatim across a re-mesh)."""
+    step = jax.jit(rec_mod.make_serve_step(
+        cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l,
+        dedup=dedup))
+    steps = None
+    if degraded_variants:
+        no_dedup = jax.jit(rec_mod.make_serve_step(
+            cfg, engine, offs, mesh, mode=mode, impl=impl,
+            block_l=block_l, dedup="off"))
+        steps = {"split_fe": step, "no_dedup": no_dedup,
+                 "hot_only": no_dedup, "shed": no_dedup}
+    return step, steps
+
+
 def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                block_l: int = 8, hot_fraction: float = 0.05,
                seed: int = 0, storage: str = "fp32",
@@ -76,7 +120,9 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                degraded_variants: bool = False,
                validate_ids: bool = False,
                scrub_scores: bool = False,
-               update_capacity: int = 0) -> ServeBinding:
+               update_capacity: int = 0,
+               elastic: bool = False,
+               prefer_tp: int = 4) -> ServeBinding:
     """Build engine + params + jitted serve step for a DLRM or Rec config.
 
     ``storage`` selects the engine's cold-tier format (fp32 passthrough or
@@ -109,46 +155,46 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
     ``update_capacity`` (> 0) sets the binding's fixed streaming-update
     apply width (rows per device chunk — one plan signature, zero
     steady-state retraces; see ``repro.serving.updates``).
+
+    ``elastic`` arms mid-serving shard-loss recovery: the binding gets a
+    rebinder closure that rebuilds every serve-step variant (same knobs)
+    for a re-meshed engine, so ``ServeBinding.remesh`` can survive losing
+    a tp shard — ``prefer_tp`` parameterizes the survivor-mesh policy
+    (``runtime/elastic.scale_plan``).
     """
     k_params, k_state = jax.random.split(jax.random.PRNGKey(seed), 2)
-    steps = None
     if isinstance(cfg, DLRMConfig):
         engine, _ = dlrm_mod.build_engine(cfg, mesh,
                                           hot_fraction=hot_fraction,
                                           storage=storage, dedup=dedup)
         params = prm.initialize(dlrm_mod.model_specs(cfg, mesh), k_params)
-        step = jax.jit(dlrm_mod.make_serve_step(
+        step, steps = _dlrm_steps(
             cfg, engine, mesh, mode=mode, impl=impl, block_l=block_l,
-            dedup=dedup, front_end=front_end))
+            dedup=dedup, front_end=front_end,
+            degraded_variants=degraded_variants)
         idx_key = "indices"
-        if degraded_variants:
-            def dlrm_step(**kw):
-                return jax.jit(dlrm_mod.make_serve_step(
-                    cfg, engine, mesh, mode=mode, impl=impl,
-                    block_l=block_l, **kw))
-            hot_only = dlrm_step(dedup="off", front_end="split",
-                                 tiers="hot_only")
-            steps = {
-                "split_fe": dlrm_step(dedup=dedup, front_end="split"),
-                "no_dedup": dlrm_step(dedup="off", front_end="split"),
-                "hot_only": hot_only,
-                "shed": hot_only,
-            }
+
+        def rebind(new_engine, new_mesh):
+            return _dlrm_steps(
+                cfg, new_engine, new_mesh, mode=mode, impl=impl,
+                block_l=block_l, dedup=dedup, front_end=front_end,
+                degraded_variants=degraded_variants)
     elif isinstance(cfg, RecConfig):
         engine, offs = rec_mod.build_engine(cfg, mesh,
                                             hot_fraction=hot_fraction,
                                             storage=storage, dedup=dedup)
         params = prm.initialize(rec_mod.model_specs(cfg, mesh), k_params)
-        step = jax.jit(rec_mod.make_serve_step(
-            cfg, engine, offs, mesh, mode=mode, impl=impl, block_l=block_l,
-            dedup=dedup))
+        step, steps = _rec_steps(
+            cfg, engine, offs, mesh, mode=mode, impl=impl,
+            block_l=block_l, dedup=dedup,
+            degraded_variants=degraded_variants)
         idx_key = None     # field ids are table-local; profiler stays off
-        if degraded_variants:
-            no_dedup = jax.jit(rec_mod.make_serve_step(
-                cfg, engine, offs, mesh, mode=mode, impl=impl,
-                block_l=block_l, dedup="off"))
-            steps = {"split_fe": step, "no_dedup": no_dedup,
-                     "hot_only": no_dedup, "shed": no_dedup}
+
+        def rebind(new_engine, new_mesh):
+            return _rec_steps(
+                cfg, new_engine, offs, new_mesh, mode=mode, impl=impl,
+                block_l=block_l, dedup=dedup,
+                degraded_variants=degraded_variants)
     else:
         raise TypeError(f"unsupported serving config {type(cfg)}")
     state = engine.init_state(k_state)
@@ -157,6 +203,8 @@ def bind_model(cfg, mesh, mode: str = "pifs", impl: str = "jnp",
                            scrub_scores=scrub_scores)
     if update_capacity > 0:
         binding.update_capacity = int(update_capacity)
+    if elastic:
+        binding.attach_remesher(rebind, prefer_tp=prefer_tp)
     return binding
 
 

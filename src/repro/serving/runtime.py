@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -156,7 +157,8 @@ class ServingRuntime:
                  padder: Callable[[Sequence[Request], Bucket], dict],
                  cfg: RuntimeConfig = RuntimeConfig(),
                  service_model: Optional[ServiceModel] = None,
-                 controller=None, updater=None):
+                 controller=None, updater=None, watchdog=None,
+                 warmup_factory=None):
         self.executor = executor
         self.batcher = batcher
         self.padder = padder
@@ -172,6 +174,17 @@ class ServingRuntime:
         # trainer's delta stream between micro-batches on the maintenance
         # seam (same accounting as observe/replan)
         self.updater = updater
+        # optional repro.runtime.fault_tolerance.StragglerWatchdog over
+        # per-batch *service* times: warmup seeds its EWMA baseline, each
+        # successful batch feeds it, and a trip bumps the degradation
+        # controller's pressure (on_straggler) — a slow shard walks the
+        # ladder down before it ever fails outright
+        self.watchdog = watchdog
+        # dummy-request factory for post-remesh re-warm of the rebuilt
+        # serve-step variants; warmup() records the one it was given, or
+        # pass one at construction when warmup happens out-of-band
+        self.warmup_factory = warmup_factory
+        self.remesh_record: Optional[dict] = None
 
     # ----------------------------------------------------------- warmup
     def warmup(self, request_factory: Callable[[int, int], Request],
@@ -184,6 +197,7 @@ class ServingRuntime:
         not mid-serving), and seeds the service model with the *second*
         measured execution (the first includes compile time)."""
         times = {}
+        self.warmup_factory = request_factory
         for bucket in self.batcher.buckets():
             reqs = [request_factory(i, bucket.pooling)
                     for i in range(bucket.batch)]
@@ -191,6 +205,10 @@ class ServingRuntime:
             self.executor.run_batch(bucket, batch)          # traces/compiles
             svc = self.executor.run_batch(bucket, batch)    # steady measure
             self.service_model.update(bucket, svc)
+            if self.watchdog is not None:
+                # seed the EWMA baseline with healthy steady measures so
+                # the first live batches aren't judged against nothing
+                self.watchdog.observe(-1, svc)
             if observe and self.cfg.observe_every:
                 self.executor.observe(batch)
             times[f"{bucket.batch}x{bucket.pooling}"] = svc
@@ -213,13 +231,58 @@ class ServingRuntime:
         while True:
             try:
                 return self.executor.run_batch(bucket, batch), delay
-            except ctrl.retryable:
+            except ctrl.retryable as e:
                 failures += 1
-                ctrl.on_attempt_failure(now + delay)
+                ctrl.on_attempt_failure(now + delay, e)
                 if failures >= ctrl.retry.max_attempts:
                     return None, delay
                 self.metrics.retries += 1
                 delay += ctrl.retry.backoff(failures)
+
+    def _remesh_recover(self, now: float) -> float:
+        """Elastic recovery on the maintenance seam: re-mesh the binding
+        onto the survivor mesh, tell the fault layer the dead shard left,
+        re-warm every rebuilt serve-step variant across all buckets and
+        rungs (warmup traces are not steady-state — the engine-level trace
+        counter resets after, while pre-remesh steady traces stay in the
+        binding's carried ledger), and reset the degradation state.
+        Returns the wall time spent, recorded as 'remesh' maintenance —
+        recovery is maintenance-seam time, never service time."""
+        ctrl = self.controller
+        binding = ctrl.binding
+        t0 = time.perf_counter()
+        # the survivor mesh's dp axis must divide every bucket batch the
+        # rebuilt step will shard — the batcher knows the granule
+        granule = math.gcd(*(b.batch for b in self.batcher.buckets()))
+        event = binding.remesh(lost_shard=ctrl.suspect_shard,
+                               batch_granule=granule)
+        if hasattr(self.executor, "on_remesh"):
+            self.executor.on_remesh(event)
+        if self.warmup_factory is not None:
+            # re-warm through the *inner* executor: fault injection must
+            # not advance its schedule (or fire) on warmup traffic
+            inner = getattr(self.executor, "inner", self.executor)
+            active = binding.active
+            for rung in binding.modes():
+                binding.set_mode(rung)
+                for bucket in self.batcher.buckets():
+                    reqs = [self.warmup_factory(i, bucket.pooling)
+                            for i in range(bucket.batch)]
+                    batch = self.padder(reqs, bucket)
+                    inner.run_batch(bucket, batch)
+                    if rung == active and self.cfg.observe_every:
+                        inner.observe(batch)
+            binding.set_mode(active)
+            if self.cfg.replan_every:
+                inner.replan()
+            binding.engine.reset_plan_stats()
+        dt = time.perf_counter() - t0
+        self.metrics.record_maintenance("remesh", dt)
+        ctrl.note_remeshed(now, event)
+        self.remesh_record = {**event, "mttr_s": dt,
+                              "at_batch": self.n_batches,
+                              "t_virtual": round(now, 6)}
+        return dt
 
     def _fail_batch(self, reqs, start: float, finish: float, source, heap,
                     seq, fast: bool) -> None:
@@ -285,6 +348,16 @@ class ServingRuntime:
                 ctrl.on_batch_done(now, ok=False)
                 continue
             svc, delay = self._attempt(decision.bucket, batch, now)
+            if svc is None and ctrl is not None and ctrl.wants_remesh:
+                # persistent per-shard failure: escalate past the ladder —
+                # re-mesh onto the survivors, then re-attempt this same
+                # micro-batch on the recovered engine (availability holds
+                # because the batch is served, late, not failed)
+                dt = self._remesh_recover(now + delay)
+                if cfg.account_maintenance:
+                    delay += dt
+                svc, d2 = self._attempt(decision.bucket, batch, now + delay)
+                delay += d2
             if svc is None:                      # retry budget exhausted
                 finish = now + delay
                 self._fail_batch(reqs, now, finish, source, heap, seq,
@@ -295,6 +368,10 @@ class ServingRuntime:
             self.service_model.update(decision.bucket, svc)
             finish = now + delay + svc
             self.n_batches += 1
+            if (self.watchdog is not None
+                    and self.watchdog.observe(self.n_batches, svc)
+                    and ctrl is not None):
+                ctrl.on_straggler(now)
             if cfg.observe_every and self.n_batches % cfg.observe_every == 0:
                 dt = self.executor.observe(batch)
                 self.metrics.record_maintenance("observe", dt)
@@ -350,4 +427,10 @@ class ServingRuntime:
         s["failed_batches"] = self.failed_batches
         if ctrl is not None:
             s["degradation"] = ctrl.report()
+        if self.watchdog is not None:
+            s["watchdog"] = {"trips": len(self.watchdog.events),
+                             "ewma_s": self.watchdog.ewma,
+                             "events": list(self.watchdog.events)}
+        if self.remesh_record is not None:
+            s["remesh"] = dict(self.remesh_record)
         return s

@@ -418,6 +418,241 @@ def test_heal_replays_wal_for_post_snapshot_updates(mesh, rmc1, tmp_path):
     assert binding.engine.plan_stats()["traces"] == 0
 
 
+# ---------------------------------------------------------------------------
+# Shard loss -> elastic re-mesh (degraded-mesh serving)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_loss_persists_until_remesh():
+    """Unlike a transient, shard loss keeps failing every attempt until
+    the executor is told the dead shard left the mesh (on_remesh)."""
+    from repro.serving import Bucket, ShardLossFailure
+    model = FixedServiceModel(base_s=1e-3, per_row_s=0.0)
+    fex = FaultInjectingExecutor(
+        SimulatedExecutor(model),
+        FaultConfig(shard_loss_at=(1,), shard_loss_shard=3))
+    bucket = Bucket(4, 4)
+    fex.run_batch(bucket, {})                 # step 0: healthy
+    for _ in range(3):                        # persistent, not one-shot
+        with pytest.raises(ShardLossFailure) as ei:
+            fex.run_batch(bucket, {})
+        assert ei.value.shard == 3
+    assert fex.lost_shard == 3
+    fex.on_remesh({})                         # the dead shard left the mesh
+    fex.run_batch(bucket, {})                 # healthy again
+    assert fex.lost_shard is None
+    assert fex.report()["shard_loss"] == 3
+    assert isinstance(ShardLossFailure("x", 0), TransientServingFailure)
+
+
+def test_shard_loss_spares_replicated_only_rungs():
+    """hot_only/shed run zero cross-shard work (replicated hot tier only),
+    so a dead cold shard is invisible to them — the ladder can limp, but
+    only a re-mesh recovers full quality."""
+    from repro.serving import Bucket, ShardLossFailure
+
+    class _Binding:
+        active = "hot_only"
+
+    class _Inner:
+        binding = _Binding()
+
+        def run_batch(self, bucket, batch):
+            return 1e-3
+
+    fex = FaultInjectingExecutor(
+        _Inner(), FaultConfig(shard_loss_at=(0,), shard_loss_shard=1))
+    bucket = Bucket(4, 4)
+    fex.run_batch(bucket, {})            # fires, but hot_only passes through
+    assert fex.lost_shard == 1           # ...the shard is still dead
+    assert fex.report()["shard_loss"] == 0
+    fex.inner.binding.active = "full"    # back on the cross-shard datapath
+    with pytest.raises(ShardLossFailure):
+        fex.run_batch(bucket, {})
+
+
+def test_controller_shard_attribution_escalates_and_transient_clears():
+    """The persistent/transient distinguisher: only a *consecutive*
+    same-shard failure streak escalates to remesh; an interleaved
+    non-attributed transient breaks the evidence chain (a genuinely flaky
+    fabric does not blame one shard consistently)."""
+    from repro.serving import ShardLossFailure
+
+    class _Binding:
+        can_remesh = True
+        checkpointer = None
+
+        def set_mode(self, label):
+            pass
+
+    ctrl = DegradationController(binding=_Binding(),
+                                 ladder=LadderConfig(remesh_after=3))
+    for _ in range(2):
+        ctrl.on_attempt_failure(0.0, ShardLossFailure("x", shard=2))
+    assert not ctrl.wants_remesh
+    ctrl.on_attempt_failure(0.0, TransientServingFailure("flaky"))
+    assert ctrl.suspect_shard is None          # chain broken
+    for _ in range(3):
+        ctrl.on_attempt_failure(0.0, ShardLossFailure("x", shard=2))
+    assert ctrl.wants_remesh and ctrl.suspect_shard == 2
+    ctrl.note_remeshed(0.0, {"to_mesh": {"data": 2, "model": 2}})
+    assert not ctrl.wants_remesh
+    assert ctrl.remeshes == 1 and ctrl.pressure == 0.0
+    assert ctrl.breaker.state == "closed"
+    rep = ctrl.report()
+    assert rep["remeshes"] == 1 and rep["suspect_shard"] is None
+    assert rep["remesh_events"][0]["shard"] == 2
+
+
+def test_watchdog_trips_surface_in_summary_and_feed_controller():
+    """One spiked micro-batch trips the service-time watchdog; the trip
+    lands in the runtime summary and bumps the controller's pressure
+    (half-weight: slow-but-correct is pressure, not failure)."""
+    from repro.runtime.fault_tolerance import StragglerWatchdog
+
+    class SpikyExecutor:
+        def __init__(self):
+            self.n = 0
+
+        def run_batch(self, bucket, batch):
+            self.n += 1
+            return 0.1 if self.n == 10 else 0.004
+
+        def observe(self, batch):
+            return 0.0
+
+        def replan(self):
+            return 0.0
+
+    ctrl = DegradationController()
+    wd = StragglerWatchdog(threshold=4.0, warmup=2)
+    rt = ServingRuntime(SpikyExecutor(), FixedBatcher(batch=4, pooling=4),
+                        padder=lambda reqs, bucket: {"n": len(reqs)},
+                        cfg=RuntimeConfig(observe_every=0, replan_every=0),
+                        controller=ctrl, watchdog=wd)
+    s = rt.run(OpenLoopSource(_reqs(64)))
+    assert s["watchdog"]["trips"] == 1
+    assert s["watchdog"]["events"][0]["dt"] == pytest.approx(0.1)
+    assert ctrl.straggler_trips == 1
+    assert s["degradation"]["straggler_trips"] == 1
+    assert ctrl.pressure > 0.0
+
+
+def test_binding_checkpoint_mesh_mismatch_routes_to_elastic(mesh, rmc1,
+                                                            tmp_path):
+    """A checkpoint written under tp=4 must refuse an in-place restore on
+    a tp=2 binding — loudly, naming the elastic path — instead of
+    silently mis-placing shards."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.distributed.sharding import make_mesh
+    from repro.serving import bind_model
+    binding = bind_model(rmc1, mesh, storage="int8")
+    with mesh:
+        binding.attach_checkpointer(Checkpointer(str(tmp_path)),
+                                    save_now=True)
+    extra = binding.checkpointer.extra()
+    assert extra["n_shards"] == 4
+    assert extra["mesh"] == {"data": 2, "model": 4}
+    assert extra["storage"] == "int8"
+    m2 = make_mesh((4, 2), ("data", "model"))
+    other = bind_model(rmc1, m2, storage="int8")
+    other.attach_checkpointer(Checkpointer(str(tmp_path)), save_now=False)
+    with pytest.raises(ValueError, match="elastic"):
+        other.restore()
+    # same mesh but mismatched storage fails loudly too
+    other32 = bind_model(rmc1, mesh, storage="fp32")
+    other32.attach_checkpointer(Checkpointer(str(tmp_path)), save_now=False)
+    with pytest.raises(ValueError, match="storage"):
+        other32.restore()
+
+
+def test_serving_survives_shard_loss_with_elastic_remesh(mesh, rmc1):
+    """The degraded-mesh tentpole end to end, on the full feature stack
+    (int8 cold tier + dedup + fused front end): a tp shard dies
+    mid-serving, the controller attributes the same-shard streak and
+    escalates to remesh, the runtime re-meshes onto the survivors
+    (tp 4 -> 2 under prefer_tp=2 with the bucket-granule constraint),
+    re-warms every rung, re-attempts the stranded micro-batch —
+    availability holds, zero steady-state retraces across BOTH sides of
+    the re-mesh, the front end re-resolves fused_tp at the survivor tp,
+    and the recovered engine serves scores bit-identical to a fresh
+    engine packed onto the same degraded mesh."""
+    import jax
+    from repro.runtime.fault_tolerance import StragglerWatchdog
+    from repro.serving import (BatcherConfig, BindingExecutor, Bucket,
+                               DynamicBatcher, bind_model,
+                               dummy_request_factory, make_padder,
+                               request_stream)
+    binding = bind_model(rmc1, mesh, storage="int8", dedup="on",
+                         front_end="fused", degraded_variants=True,
+                         scrub_scores=True, elastic=True, prefer_tp=2)
+    bat = BatcherConfig(batch_sizes=(8, 16), poolings=(rmc1.pooling,))
+    ctrl = DegradationController(
+        binding=binding, retry=RetryPolicy(max_attempts=3),
+        breaker=BreakerConfig(trip_after=6, cooldown_s=0.02),
+        ladder=LadderConfig(min_dwell_batches=4, remesh_after=3))
+    inner = BindingExecutor(binding)
+    fex = FaultInjectingExecutor(
+        inner, FaultConfig(seed=13, shard_loss_at=(2,)),
+        idx_key=binding.idx_key)
+    wd = StragglerWatchdog(threshold=4.0, warmup=4)
+    rt = ServingRuntime(inner, DynamicBatcher(bat), make_padder(rmc1),
+                        RuntimeConfig(observe_every=4, replan_every=8),
+                        controller=ctrl, watchdog=wd)
+    factory = dummy_request_factory(rmc1, storage="int8")
+    load = LoadConfig(n_requests=96,
+                      arrival=ArrivalConfig(rate_qps=400.0, seed=2),
+                      slo_ms=500.0, seed=2, storage="int8", dedup="on",
+                      front_end="fused")
+    with mesh:
+        for rung in binding.modes():
+            binding.set_mode(rung)
+            rt.warmup(factory)
+        binding.set_mode("full")
+        rt.executor = fex
+        binding.reset_plan_stats()
+        s = rt.run(OpenLoopSource(request_stream(rmc1, load)))
+
+        # gates — the trace ledger FIRST: probe batches below are fresh
+        # jit signatures and would pollute a later read
+        assert binding.plan_stats()["traces"] == 0
+        assert s["served"] + s["failed"] == 96
+        assert s["availability"] >= 0.99
+        assert binding.remeshes == 1
+        rec = s["remesh"]
+        assert rec["lost_shard"] == 3              # highest tp index died
+        assert rec["from_mesh"] == {"data": 2, "model": 4}
+        assert rec["to_mesh"] == {"data": 2, "model": 2}
+        assert dict(binding.engine.mesh.shape) == {"data": 2, "model": 2}
+        assert rec["mttr_s"] > 0.0
+        assert fex.report()["shard_loss"] >= 3     # the attribution streak
+        assert fex.lost_shard is None              # on_remesh cleared it
+        assert s["degradation"]["remeshes"] == 1
+        fe_recs = [r for r in
+                   binding.engine.plan_stats().get("front_end", {}).values()
+                   if r["requested"] == "fused"]
+        assert fe_recs and all(r["resolved"] == "fused_tp" and r["tp"] == 2
+                               for r in fe_recs)
+
+        # bit-exactness: recovered binding vs a fresh engine packed onto
+        # the same survivor mesh from the same logical triple + page table
+        codes, values, scales = binding.engine.export_state(binding.state)
+        fresh = bind_model(rmc1, binding.engine.mesh, storage="int8",
+                           dedup="on", front_end="fused")
+        fresh.params = binding.params
+        fresh.state = fresh.engine.pack_state(
+            codes, values, scales, table=binding.state.page_table,
+            counts=np.asarray(jax.device_get(binding.state.counts)))
+        padder = make_padder(rmc1)
+        for b in bat.batch_sizes:
+            bucket = Bucket(b, rmc1.pooling)
+            probe = padder([factory(i, bucket.pooling)
+                            for i in range(bucket.batch)], bucket)
+            np.testing.assert_array_equal(
+                np.asarray(jax.device_get(binding.execute(probe))),
+                np.asarray(jax.device_get(fresh.execute(probe))))
+
+
 def test_fault_injected_serving_run_end_to_end(mesh, rmc1):
     """Transient chaos + controller over a real binding: every request is
     accounted, availability holds, retries happen, and the plan cache

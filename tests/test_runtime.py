@@ -192,6 +192,30 @@ def test_scale_plan_prefers_tp():
     assert scale_plan(24, prefer_tp=16) == ((3, 8), ("data", "model"))
 
 
+def test_scale_plan_edge_cases():
+    # odd survivor counts (a shard loss rarely leaves a power of two),
+    # prime counts (tp collapses to 1), non-power-of-two prefer_tp
+    assert scale_plan(6, prefer_tp=4) == ((3, 2), ("data", "model"))
+    assert scale_plan(7, prefer_tp=16) == ((7, 1), ("data", "model"))
+    assert scale_plan(10, prefer_tp=12) == ((10, 1), ("data", "model"))
+    assert scale_plan(9, prefer_tp=6) == ((3, 3), ("data", "model"))
+    assert scale_plan(1) == ((1, 1), ("data", "model"))
+
+
+def test_scale_plan_batch_granule_shrinks_used_devices():
+    """Serving constraint: dp shards bucket-shaped micro-batches, so dp
+    must divide the bucket batch granule.  6 survivors against
+    power-of-two buckets idles devices rather than building a mesh the
+    serve step cannot shard over."""
+    assert scale_plan(6, prefer_tp=2,
+                      batch_granule=8) == ((2, 2), ("data", "model"))
+    assert scale_plan(6, prefer_tp=4,
+                      batch_granule=8) == ((1, 4), ("data", "model"))
+    # already-compatible plans are untouched by the constraint
+    assert scale_plan(8, prefer_tp=2,
+                      batch_granule=8) == ((4, 2), ("data", "model"))
+
+
 def test_validate_mesh_divisibility():
     validate_mesh_for((16, 16), ("data", "model"),
                       {"data": 256, "model": 4096})
@@ -209,6 +233,66 @@ def test_remesh_engine_preserves_table(mesh):
     dense_after = np.asarray(eng2.to_dense(state2))
     np.testing.assert_allclose(dense_before, dense_after, rtol=0, atol=0)
     assert eng2.cfg.n_shards == 2
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_remesh_roundtrip_bitwise_identity(mesh, storage):
+    """tp 4 -> 2 -> 4: the logical (codes, values, scales) triple is
+    bitwise the identity after the round trip.  For int8 that means the
+    re-mesh moved cold pages in the *quantized* domain — codes and the
+    carried per-page scales verbatim — never through a dequantize /
+    requantize cycle (which would drift one code per trip)."""
+    m2 = make_mesh((4, 2), ("data", "model"))
+    eng, _ = engine_for_tables([300, 200], dim=16, mesh=mesh,
+                               hot_fraction=0.1, storage=storage)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    idx = jnp.asarray(np.arange(64).reshape(8, 2, 4) % 300, jnp.int32)
+    with mesh:
+        state = eng.observe(state, idx)
+        state, _ = eng.plan_and_migrate(state)     # non-trivial placement
+    before = [np.asarray(jax.device_get(x))
+              for x in eng.export_state(state)]
+    eng2, st2 = remesh_engine(eng, m2, state)
+    eng3, st3 = remesh_engine(eng2, mesh, st2)
+    after = [np.asarray(jax.device_get(x))
+             for x in eng3.export_state(st3)]
+    for a, b in zip(before, after):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    if storage == "int8":
+        assert st3.cold.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(st3.page_scales),
+                                      np.asarray(state.page_scales))
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+@pytest.mark.parametrize("target", [(4, 2), (8, 1)])
+def test_remesh_lookup_matches_fresh_engine(mesh, storage, target):
+    """Property sweep {storage} x {tp 4 -> 2, tp -> 1 collapse}: a
+    re-meshed engine must be indistinguishable from a fresh engine on the
+    target mesh packed from the same logical triple and the same page
+    table — lookups bit-equal."""
+    mt = make_mesh(target, ("data", "model"))
+    eng, _ = engine_for_tables([300, 200], dim=16, mesh=mesh,
+                               hot_fraction=0.1, storage=storage)
+    state = eng.init_state(jax.random.PRNGKey(1))
+    idx = jnp.asarray((np.arange(96).reshape(8, 3, 4) * 7) % 500,
+                      jnp.int32)
+    with mesh:
+        state = eng.observe(state, idx)
+        state, _ = eng.plan_and_migrate(state)
+    codes, values, scales = eng.export_state(state)
+    eng2, st2 = remesh_engine(eng, mt, state)
+    fresh, _ = engine_for_tables([300, 200], dim=16, mesh=mt,
+                                 hot_fraction=0.1, storage=storage)
+    fresh_state = fresh.pack_state(
+        codes, values, scales, table=st2.page_table,
+        counts=np.asarray(jax.device_get(state.counts)))
+    with mt:
+        a = np.asarray(eng2.lookup(st2, idx))
+        b = np.asarray(fresh.lookup(fresh_state, idx))
+    np.testing.assert_array_equal(a, b)
+    assert eng2.cfg.n_shards == target[1]
 
 
 # ---------------------------------------------------------------------------
