@@ -61,6 +61,20 @@ and a mid-serving corrupt -> restore -> WAL-replay probe whose state AND
 lookups are bit-identical to the pre-corruption engine (EXPERIMENTS.md
 §Online embedding updates).
 
+``--scrub`` switches to the silent-corruption regime: the same offered
+load served twice — once clean, once with deterministic *finite* bit
+flips seeded into live store pages (``bit_flip`` fault class — the case
+the NaN score scrub structurally misses) while a ``ScrubController``
+audits a rotating page window against the per-page checksum ledger on
+the maintenance seam and repairs divergent pages surgically (snapshot
+page slice + filtered WAL replay).  Hard gates: every flipped page
+detected within one full sweep of the store, repaired pages == detected
+pages with bounded per-page MTTR, availability >= 0.99, measured p99
+within 10 % of the no-scrub leg at equal offered load, zero
+steady-state retraces in both legs, and the post-run store leaves AND
+probe scores bitwise identical to the never-corrupted engine
+(EXPERIMENTS.md §Silent-corruption scrubbing).
+
 The policy-comparison section also runs a fused front-end leg on a
 (4, 2) dp x tp mesh (DLRM archs): ``front_end='fused'`` — resolved
 ``fused_tp`` by the engine (partial-pool per shard, psum the (B, F, d)
@@ -69,7 +83,7 @@ against the ``front_end='split'`` control on the same arrival stream,
 gated on zero steady-state retraces in both runs and probe-batch scores
 bit-equal between the bindings.
 
-Writes ``BENCH_serve.json`` (schema 6); schema documented in
+Writes ``BENCH_serve.json`` (schema 7); schema documented in
 EXPERIMENTS.md §Serving.
 
 Service times are real measured device executions (interpret-mode caveat
@@ -104,12 +118,13 @@ from repro.serving import (ArrivalConfig, BatcherConfig,  # noqa: E402
                            DynamicBatcher, FaultConfig,
                            FaultInjectingExecutor, FixedBatcher,
                            LadderConfig, LoadConfig, OpenLoopSource,
-                           RetryPolicy, RuntimeConfig, ServiceModel,
+                           RetryPolicy, RuntimeConfig, ScrubConfig,
+                           ScrubController, ServiceModel,
                            ServingRuntime,
                            StreamingUpdater, UpdateConfig, bind_model,
                            corrupt_store, dummy_request_factory,
-                           make_padder, prime_dedup_auto, request_stream,
-                           update_stream)
+                           flip_store_bits, make_padder, prime_dedup_auto,
+                           request_stream, update_stream)
 
 
 def run_policy(binding, cfg, batcher, load, runtime_cfg, updater=None) -> dict:
@@ -220,7 +235,9 @@ def run_fault_regime(binding, cfg, bat_cfg, load, runtime_cfg, svc_model,
                              np.broadcast_to(idx[None], (dp,) + idx.shape)})
         binding.replan()
         binding.attach_checkpointer(Checkpointer(ckpt_dir), save_now=True)
-        corrupt_store(binding, frac=0.5, seed=3)
+        # explicit mode="nan": this regime heals through the NaN score
+        # scrub -> poison-restore path; finite flips are --scrub's job
+        corrupt_store(binding, frac=0.5, seed=3, mode="nan")
     elif binding.checkpointer is None:
         binding.attach_checkpointer(Checkpointer(ckpt_dir), save_now=True)
     binding.reset_plan_stats()
@@ -587,7 +604,7 @@ def run_update_section(binding, cfg, bat_cfg, runtime_cfg, n_requests,
          for i in range(probe_bucket.batch)], probe_bucket)
     before_scores = np.asarray(jax.device_get(binding.execute(probe)))
     before_leaves = _state_leaves(binding)
-    corrupt_store(binding, frac=0.5, seed=5)
+    corrupt_store(binding, frac=0.5, seed=5, mode="nan")
     binding.restore()
     after_leaves = _state_leaves(binding)
     after_scores = np.asarray(jax.device_get(binding.execute(probe)))
@@ -617,6 +634,214 @@ def run_update_section(binding, cfg, bat_cfg, runtime_cfg, n_requests,
         "recovery_bit_identical": bool(leaves_ok and scores_ok),
         "base": base,
         "updates": upd,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Silent-corruption regime (--scrub): checksum scrubbing + page-level repair
+# ---------------------------------------------------------------------------
+
+
+def run_scrub_section(binding, cfg, bat_cfg, runtime_cfg, n_requests,
+                      capacity_qps, slo_ms, storage, dedup, pages_per_cycle,
+                      ckpt_dir) -> dict:
+    """Clean leg vs bit-flip + scrub leg at the same offered load.
+
+    Both legs run with observe/replan disabled: the whole point is that
+    the *only* store mutations in the treated leg are the injected flips
+    and the scrubber's repairs, so the post-run store must be bitwise
+    identical to the never-corrupted truth captured after the clean leg.
+    Hot pages are promoted and a WAL-logged delta tail is landed *before*
+    the legs, so repairs exercise both tiers and must actually replay
+    WAL records past the snapshot rather than just reload it."""
+    rt_cfg = dataclasses.replace(runtime_cfg, observe_every=0,
+                                 replan_every=0)
+    arrival = ArrivalConfig(rate_qps=0.3 * capacity_qps, process="poisson",
+                            seed=7)
+    load = LoadConfig(n_requests=n_requests, arrival=arrival, slo_ms=slo_ms,
+                      seed=7, storage=storage, dedup=dedup)
+    reqs = request_stream(cfg, load)
+
+    # ---- arm the store: hot tier, ledger, snapshot (+ledger), WAL tail
+    dp = max(1, binding.engine.axes.dp_size(binding.engine.mesh))
+    for r in reqs[:16]:
+        idx = np.asarray(r.features[binding.idx_key])
+        binding.observe({binding.idx_key:
+                         np.broadcast_to(idx[None], (dp,) + idx.shape)})
+    binding.replan()
+    binding.attach_integrity()
+    binding.attach_wal(WriteAheadLog(os.path.join(ckpt_dir, "scrub.wal")))
+    binding.attach_checkpointer(Checkpointer(ckpt_dir), save_now=True)
+    # a logged delta batch past the snapshot: every repair below must
+    # replay it (filtered to the repaired page) to reach the live state
+    rng = np.random.default_rng(17)
+    n_tail = binding.update_capacity
+    tail_rows = rng.integers(0, binding.engine.cfg.total_rows,
+                             size=n_tail).astype(np.int64)
+    tail_deltas = (1e-3 * rng.standard_normal(
+        (n_tail, binding.engine.cfg.dim))).astype(np.float32)
+    binding.apply_deltas(tail_rows, tail_deltas)
+    if not len(binding.wal):
+        raise AssertionError("scrub regime expected a non-empty WAL")
+
+    # ---- clean leg, then the never-corrupted truth
+    base = run_policy(binding, cfg, DynamicBatcher(bat_cfg), load, rt_cfg)
+    factory = dummy_request_factory(cfg, storage=storage)
+    probe_bucket = Bucket(bat_cfg.batch_sizes[-1], bat_cfg.poolings[-1])
+    probe = make_padder(cfg)(
+        [factory(i, probe_bucket.pooling)
+         for i in range(probe_bucket.batch)], probe_bucket)
+    truth_scores = np.asarray(jax.device_get(binding.execute(probe)))
+    truth_leaves = _state_leaves(binding)
+
+    # ---- treated leg: seeded finite flips + scrubbing repairs
+    flip_at = (2, 5)
+    ctrl = DegradationController(binding=binding,
+                                 ladder=LadderConfig(min_dwell_batches=4))
+    inner = BindingExecutor(binding)
+    fex = FaultInjectingExecutor(
+        inner, FaultConfig(seed=13, bit_flip_at=flip_at, bit_flip_rows=2,
+                           bit_flip_tier="both"),
+        idx_key=binding.idx_key)
+    scrub = ScrubController(
+        binding, ScrubConfig(pages_per_cycle=pages_per_cycle),
+        controller=ctrl)
+    runtime = ServingRuntime(inner, DynamicBatcher(bat_cfg),
+                             make_padder(cfg), rt_cfg, controller=ctrl,
+                             scrubber=scrub)
+    # warm through the clean executor (fault schedules index live
+    # attempts only), compile the scrub/repair plans, then arm the flips
+    runtime.warmup(factory)
+    scrub.warmup()
+    # the first serve step over device_put-committed state arrays is a
+    # fresh executable signature on some backends (observed for the int8
+    # cold tier), per bucket: absorb those one-time recompiles outside
+    # the timed leg with a self-inverse double flip — same seed XORs the
+    # same bits twice, so the store stays bit-identical while the arrays
+    # round-trip through the injector's exact write-back path — then one
+    # execute per bucket signature
+    for _ in range(2):
+        flip_store_bits(binding, n_rows=2, seed=29, tier="both")
+    padder = make_padder(cfg)
+    for bs in bat_cfg.batch_sizes:
+        for pl in bat_cfg.poolings:
+            wb = Bucket(bs, pl)
+            wbatch = padder([factory(i, wb.pooling)
+                             for i in range(wb.batch)], wb)
+            jax.block_until_ready(binding.execute(wbatch))
+    runtime.executor = fex
+    binding.reset_plan_stats()
+    treated = runtime.run(OpenLoopSource(request_stream(cfg, load)))
+    # retrace gate read BEFORE any probe executes (probe batches reuse
+    # warmed signatures, but the discipline matches the other sections)
+    treated["steady_traces"] = binding.plan_stats()["traces"]
+    rep = treated["scrub_run"]
+
+    print(f"[scrub     ] base    p99={base['p99_ms']:8.2f} "
+          f"qps={base['qps']:8.1f} steady_traces={base['steady_traces']}")
+    print(f"[scrub     ] treated p99={treated['p99_ms']:8.2f} "
+          f"qps={treated['qps']:8.1f} "
+          f"steady_traces={treated['steady_traces']} "
+          f"avail={treated['availability']:.4f} "
+          f"cycles={rep['cycles']} sweep={rep['sweep_cycles']} "
+          f"flips={fex.bit_flip_events} "
+          f"detected={rep['pages_detected']} "
+          f"repaired={rep['pages_repaired']} "
+          f"mttr_max={rep.get('repair_mttr_max_s', 0.0):.4f}s "
+          f"corruption_trips={ctrl.corruption_trips}")
+
+    # ---- gates ----
+    for name, r in (("base", base), ("treated", treated)):
+        if r["steady_traces"]:
+            raise AssertionError(
+                f"plan cache failed under scrubbing: steady-state retrace "
+                f"in the {name} leg")
+    if len(fex.bit_flip_events) != len(flip_at):
+        raise AssertionError(
+            f"bit_flip schedule under-fired: {fex.bit_flip_events} "
+            f"(expected one event per step in {flip_at})")
+    flipped = sorted({int(p) for e in fex.bit_flip_events
+                      for p in e["pages"]})
+    # detection within one full sweep of the flip (+1 cycle slack for the
+    # attempt-index/cycle-index offset: the flip lands mid-batch, the
+    # audit runs on that batch's maintenance turn at the earliest)
+    sweep = rep["sweep_cycles"]
+    for e in fex.bit_flip_events:
+        for p in e["pages"]:
+            cyc = rep["detections"].get(int(p))
+            if cyc is None:
+                raise AssertionError(
+                    f"page {p} flipped at step {e['step']} was never "
+                    f"detected ({rep['cycles']} cycles run)")
+            if cyc > e["step"] + sweep + 1:
+                raise AssertionError(
+                    f"detection latency gate failed: page {p} flipped at "
+                    f"step {e['step']} detected at cycle {cyc} > one full "
+                    f"sweep ({sweep} cycles) later")
+    if rep["pages_repaired"] < rep["pages_detected"] or rep["quarantined"]:
+        raise AssertionError(
+            f"repair gate failed: detected={rep['pages_detected']} "
+            f"repaired={rep['pages_repaired']} "
+            f"still_quarantined={rep['quarantined']}")
+    if not ctrl.corruption_trips:
+        raise AssertionError(
+            "detections never reached the degradation controller "
+            "(on_corruption)")
+    if treated["availability"] < 0.99:
+        raise AssertionError(
+            f"availability gate failed under scrubbing: "
+            f"{treated['availability']:.4f} < 0.99")
+    p99_gate = 1.10 * base["p99_ms"]
+    if treated["p99_ms"] >= p99_gate:
+        raise AssertionError(
+            f"scrubbing blew the service tail: p99 "
+            f"{treated['p99_ms']:.2f} ms >= 1.10 x clean-leg p99 "
+            f"({base['p99_ms']:.2f} ms) at equal offered load")
+    # per-page repair MTTR: snapshot slice + filtered WAL replay over warm
+    # plans — bounded loosely in SLO multiples (floored for CPU hosts
+    # where jit dispatch dominates), same convention as the mesh MTTR
+    mttr_bound = max(100.0 * slo_ms * 1e-3, 60.0)
+    for r in rep["repairs"]:
+        if not (0.0 < r["mttr_s"] < mttr_bound):
+            raise AssertionError(
+                f"repair MTTR unbounded: page {r['page']} took "
+                f"{r['mttr_s']:.3f} s >= {mttr_bound:.1f} s")
+    if "scrub" not in treated["maintenance_s"]:
+        raise AssertionError(
+            "scrub wall time missing from maintenance accounting")
+
+    # ---- bitwise truth: repaired store == never-corrupted store
+    after_leaves = _state_leaves(binding)
+    after_scores = np.asarray(jax.device_get(binding.execute(probe)))
+    leaves_ok = all(a.dtype == b.dtype and (a == b).all()
+                    for a, b in zip(truth_leaves, after_leaves))
+    scores_ok = (truth_scores == after_scores).all()
+    print(f"[scrub     ] repaired_state_identical={bool(leaves_ok)} "
+          f"lookups_identical={bool(scores_ok)}")
+    if not leaves_ok:
+        raise AssertionError(
+            "scrub repairs did not reproduce the never-corrupted store "
+            "bit-for-bit")
+    if not scores_ok:
+        raise AssertionError("scrub repairs changed lookup results")
+
+    treated.pop("latency_hist", None)
+    treated.pop("dedup_factors", None)
+    base.pop("latency_hist", None)
+    base.pop("dedup_factors", None)
+    return {
+        "offered_qps": 0.3 * capacity_qps,
+        "pages_per_cycle": pages_per_cycle,
+        "sweep_cycles": sweep,
+        "flip_at": list(flip_at),
+        "flip_events": list(fex.bit_flip_events),
+        "flipped_pages": flipped,
+        "p99_gate_ms": p99_gate,
+        "mttr_bound_s": mttr_bound,
+        "corruption_trips": ctrl.corruption_trips,
+        "repaired_bit_identical": bool(leaves_ok and scores_ok),
+        "base": base,
+        "treated": treated,
     }
 
 
@@ -736,10 +961,19 @@ def main() -> None:
                     help="survivor-mesh tp preference for the elastic "
                          "re-mesh policy (--mesh-faults; "
                          "repro.runtime.elastic.scale_plan)")
+    ap.add_argument("--scrub", action="store_true",
+                    help="run the silent-corruption regime (clean vs "
+                         "bit-flip + checksum-scrub legs at equal offered "
+                         "load, page-granular snapshot/WAL repair, bitwise "
+                         "post-repair equality) instead of the "
+                         "policy-comparison regimes")
+    ap.add_argument("--scrub-pages-per-cycle", type=int, default=8,
+                    help="pages audited per maintenance turn (--scrub; "
+                         "full sweep every ceil(num_pages / K) cycles)")
     args = ap.parse_args()
-    if sum((args.faults, args.updates, args.mesh_faults)) > 1:
-        ap.error("--faults, --updates, and --mesh-faults are mutually "
-                 "exclusive sections")
+    if sum((args.faults, args.updates, args.mesh_faults, args.scrub)) > 1:
+        ap.error("--faults, --updates, --mesh-faults, and --scrub are "
+                 "mutually exclusive sections")
 
     cfg = reduced(get_config(args.arch))
 
@@ -754,7 +988,7 @@ def main() -> None:
         runs = run_mesh_fault_section(cfg, args, n_requests, args.prefer_tp)
         out = {
             "bench": "serve",
-            "schema": 6,
+            "schema": 7,
             "section": "mesh_faults",
             "backend": jax.default_backend(),
             "interpret_mode": jax.default_backend() != "tpu",
@@ -859,7 +1093,7 @@ def main() -> None:
                 tempfile.mkdtemp(prefix="serve_bench_ckpt_"))
             out = {
                 "bench": "serve",
-                "schema": 6,
+                "schema": 7,
                 "section": "faults",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -893,7 +1127,7 @@ def main() -> None:
                                 if k != "latency_hist"}
             out = {
                 "bench": "serve",
-                "schema": 6,
+                "schema": 7,
                 "section": "updates",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu",
@@ -906,6 +1140,35 @@ def main() -> None:
                 "capacity_qps": capacity_qps, "slo_ms": slo_ms,
                 "n_requests": n_requests,
                 "update_run": section,
+            }
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"\nwrote {args.out}")
+            return
+
+        if args.scrub:
+            import tempfile
+            bat_cfg_s = dataclasses.replace(bat_cfg, max_wait_ms=max_wait_ms)
+            section = run_scrub_section(
+                binding, cfg, bat_cfg_s, runtime_cfg, n_requests,
+                capacity_qps, slo_ms, args.storage, args.dedup,
+                args.scrub_pages_per_cycle,
+                tempfile.mkdtemp(prefix="serve_bench_scrub_"))
+            out = {
+                "bench": "serve",
+                "schema": 7,
+                "section": "scrub",
+                "backend": jax.default_backend(),
+                "interpret_mode": jax.default_backend() != "tpu",
+                "jax_version": jax.__version__,
+                "platform": platform.platform(),
+                "mesh": {"data": 2, "model": 4},
+                "arch": args.arch, "mode": args.mode, "impl": args.impl,
+                "block_l": args.block_l, "storage": args.storage,
+                "dedup": args.dedup,
+                "capacity_qps": capacity_qps, "slo_ms": slo_ms,
+                "n_requests": n_requests,
+                "scrub_run": section,
             }
             with open(args.out, "w") as f:
                 json.dump(out, f, indent=2)
@@ -972,7 +1235,7 @@ def main() -> None:
 
     out = {
         "bench": "serve",
-        "schema": 6,
+        "schema": 7,
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "jax_version": jax.__version__,

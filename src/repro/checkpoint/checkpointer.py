@@ -145,6 +145,78 @@ class Checkpointer:
         with open(os.path.join(d, "manifest.json")) as f:
             return dict(json.load(f).get("extra", {}))
 
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The full manifest dict of a committed checkpoint (latest by
+        default): ``{step, leaves: {key: {file, shape, dtype, crc}},
+        time, extra}``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
+    def read_leaf(self, key: str, step: Optional[int] = None,
+                  validate: bool = True) -> np.ndarray:
+        """Load ONE leaf by manifest key (CRC-checked by default).
+
+        The partial-read companion to :meth:`restore`: page repair loads
+        the small metadata leaves (page tables, scales) whole without
+        touching the multi-GB store leaves."""
+        step = step if step is not None else self.latest_step()
+        manifest = self.manifest(step)
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(
+                f"no leaf {key!r} in checkpoint step {manifest['step']} "
+                f"(has {sorted(manifest['leaves'])})")
+        d = os.path.join(self.dir, f"step_{manifest['step']:012d}")
+        arr = np.load(os.path.join(d, meta["file"]))
+        if validate and _crc(arr) != meta["crc"]:
+            raise IOError(f"checksum mismatch on {key}")
+        return arr
+
+    def read_page(self, key: str, start: int, rows: int,
+                  step: Optional[int] = None) -> np.ndarray:
+        """Read ``rows`` consecutive rows of a leaf starting at row
+        ``start`` without materializing the full array.
+
+        The leaf is opened as a read-only memory map and only the
+        requested row slice is copied out — this is what lets page-
+        granular repair pull one page out of a store-sized snapshot leaf
+        for the cost of one page.  The manifest CRC covers the whole
+        leaf, so a partial read cannot be CRC-verified here; repair
+        verifies the slice against the snapshot-time *page* checksum
+        ledger instead (``repro.core.integrity.fetch_snapshot_page``).
+        """
+        return self.read_pages(key, [(start, rows)], step=step)[0]
+
+    def read_pages(self, key: str, spans, step: Optional[int] = None
+                   ) -> List[np.ndarray]:
+        """Batched :meth:`read_page`: ``spans`` is a list of
+        ``(start_row, n_rows)`` pairs, read through one shared memory
+        map of the leaf."""
+        step = step if step is not None else self.latest_step()
+        manifest = self.manifest(step)
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(
+                f"no leaf {key!r} in checkpoint step {manifest['step']} "
+                f"(has {sorted(manifest['leaves'])})")
+        d = os.path.join(self.dir, f"step_{manifest['step']:012d}")
+        mm = np.load(os.path.join(d, meta["file"]), mmap_mode="r")
+        n = int(meta["shape"][0]) if meta["shape"] else 0
+        out = []
+        for start, rows in spans:
+            start, rows = int(start), int(rows)
+            if start < 0 or start + rows > n:
+                raise IndexError(
+                    f"page read [{start}, {start + rows}) outside leaf "
+                    f"{key!r} with {n} rows")
+            out.append(np.array(mm[start:start + rows]))
+        del mm
+        return out
+
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None, validate: bool = True) -> Any:
         """Restore into the structure of `tree_like`.  `shardings` (same

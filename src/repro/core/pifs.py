@@ -1338,6 +1338,165 @@ class PIFSEmbeddingEngine:
 
         return jax.jit(traced)
 
+    def page_checksums(self, state: EngineState, pages: jax.Array
+                       ) -> jax.Array:
+        """Per-page Fletcher-pair checksums over native-domain content.
+
+        ``pages``: (K,) int32 global page ids, -1 for pads.  Returns
+        (K, 2) uint32 ``[s1, s2]`` per page (zeros for pads) — the
+        definition shared bit-for-bit with the numpy twin in
+        ``repro.core.integrity.page_checksum_host``: uint32 wraparound
+        sums over the page's rows reinterpreted as unsigned lanes (int8
+        codes -> uint8, fp32 values -> IEEE bit patterns) plus the page
+        scale's fp32 bits, with a 1-based position weight on ``s2``.
+
+        Each tp shard computes both tier candidates for every listed
+        page; exactly one shard contributes per page (the owning shard
+        for cold pages, shard 0 for the replicated hot tier) and a psum
+        collects the replicated result.  One compiled plan per K,
+        through the traced counter — callers chunk every request through
+        a single fixed K so steady-state scrubbing never retraces.
+        """
+        if pages.ndim != 1:
+            raise ValueError(f"pages must be (K,); got {pages.shape}")
+        key = ("checksum", self.cfg.storage, int(pages.shape[0]),
+               jnp.dtype(pages.dtype).name)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._build_checksum_plan()
+            self._plans[key] = plan
+        self._plan_calls += 1
+        return plan(state.cold, state.hot, state.page_scales,
+                    state.page_to_shard, state.page_to_slot, pages)
+
+    def _build_checksum_plan(self):
+        axes, mesh = self.axes, self.mesh
+        tp = axes.tp
+        c = self.cfg
+
+        def lanes_of(rows_flat):
+            # (K*ps, D) native rows -> (K, N) uint32 lane stream
+            if rows_flat.dtype == jnp.int8:
+                u = jax.lax.bitcast_convert_type(rows_flat, jnp.uint8)
+                return u.astype(jnp.uint32)
+            return jax.lax.bitcast_convert_type(
+                rows_flat.astype(jnp.float32), jnp.uint32)
+
+        def fold(lanes, scale_bits):
+            # lanes (K, N) uint32, scale_bits (K,) uint32 -> (K, 2) uint32
+            n = lanes.shape[1]
+            w = jnp.arange(1, n + 1, dtype=jnp.uint32)[None, :]
+            s1 = lanes.sum(axis=1, dtype=jnp.uint32) + scale_bits
+            s2 = ((lanes * w).sum(axis=1, dtype=jnp.uint32)
+                  + scale_bits * jnp.uint32(n + 1))
+            return jnp.stack([s1, s2], axis=1)
+
+        def block(cold, hot, scales, p2s, p2slot, pages):
+            ps = c.page_size
+            k = pages.shape[0]
+            valid = pages >= 0
+            pg = jnp.where(valid, pages, 0)
+            shard = p2s[pg]
+            is_hot = shard == HOT_SHARD
+            my = jax.lax.axis_index(tp)
+            rows = (p2slot[pg][:, None] * ps
+                    + jnp.arange(ps, dtype=pages.dtype)[None, :])  # (K, ps)
+            rows_flat = rows.reshape(-1)
+            # gather both tier candidates (index-clamped: non-resident
+            # gathers read garbage but are masked out of the psum)
+            hot_rows = jnp.take(hot,
+                                jnp.minimum(rows_flat, hot.shape[0] - 1),
+                                axis=0)
+            cold_rows = jnp.take(cold,
+                                 jnp.minimum(rows_flat, cold.shape[0] - 1),
+                                 axis=0)
+            sb = jax.lax.bitcast_convert_type(
+                scales[pg].astype(jnp.float32), jnp.uint32)
+            cs_hot = fold(lanes_of(hot_rows).reshape(k, -1), sb)
+            cs_cold = fold(lanes_of(cold_rows).reshape(k, -1), sb)
+            cs = jnp.where(is_hot[:, None], cs_hot, cs_cold)
+            # exactly one contributor per valid page: the owning shard
+            # for cold pages, shard 0 for the replicated hot tier
+            contrib = valid & jnp.where(is_hot, my == 0, shard == my)
+            cs = cs * contrib[:, None].astype(jnp.uint32)
+            return jax.lax.psum(cs, tp)
+
+        f = shard_map(block, mesh=mesh,
+                      in_specs=(P(tp), P(), P(), P(), P(), P()),
+                      out_specs=P(), check_vma=False)
+
+        def traced(*args):
+            self._trace_count += 1
+            return f(*args)
+
+        return jax.jit(traced)
+
+    def write_page(self, state: EngineState, page, cold_rows: jax.Array,
+                   hot_rows: jax.Array, scale) -> EngineState:
+        """Surgically overwrite ONE page's resident rows and scale (the
+        repair path: page content fetched from a snapshot + WAL tail).
+
+        ``page``: a scalar global page id (or -1: compile-only no-op —
+        every scatter target lands out of bounds and drops, leaving the
+        state bit-untouched, which is what warmup uses).  ``cold_rows``:
+        (page_size, D) in the cold tier's native dtype, ``hot_rows``:
+        (page_size, D) fp32, ``scale``: the page's carried scale.  Only
+        the payload matching the page's *current* tier lands (the other
+        tier's scatter drops); callers pass zeros for the unused one.
+        One compiled plan per storage mode, through the traced counter.
+        """
+        key = ("page_write", self.cfg.storage)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._build_page_write_plan()
+            self._plans[key] = plan
+        self._plan_calls += 1
+        pg = jnp.asarray(np.asarray(page, np.int32).reshape(1))
+        sc = jnp.asarray(np.asarray(scale, np.float32).reshape(1))
+        new_cold, new_hot, new_scales = plan(
+            state.cold, state.hot, state.page_scales, state.page_to_shard,
+            state.page_to_slot, pg,
+            jnp.asarray(cold_rows, self.cold_dtype),
+            jnp.asarray(hot_rows, jnp.float32), sc)
+        return dataclasses.replace(state, cold=new_cold, hot=new_hot,
+                                   page_scales=new_scales)
+
+    def _build_page_write_plan(self):
+        axes, mesh = self.axes, self.mesh
+        tp = axes.tp
+        c = self.cfg
+
+        def block(cold, hot, scales, p2s, p2slot, page, pc, ph, sc):
+            ps = c.page_size
+            pg0 = page[0]
+            valid = pg0 >= 0
+            pg = jnp.where(valid, pg0, 0)
+            shard = p2s[pg]
+            is_hot = shard == HOT_SHARD
+            my = jax.lax.axis_index(tp)
+            rows = p2slot[pg] * ps + jnp.arange(ps, dtype=jnp.int32)
+            # hot tier is replicated: every device writes the identical
+            # rows (or drops, for cold/pad pages)
+            hot_tgt = jnp.where(valid & is_hot, rows, hot.shape[0])
+            new_hot = hot.at[hot_tgt].set(ph.astype(hot.dtype), mode="drop")
+            cold_tgt = jnp.where(valid & (shard == my), rows, cold.shape[0])
+            new_cold = cold.at[cold_tgt].set(pc.astype(cold.dtype),
+                                             mode="drop")
+            sc_tgt = jnp.where(valid, pg, scales.shape[0])
+            new_scales = scales.at[sc_tgt].set(sc[0], mode="drop")
+            return new_cold, new_hot, new_scales
+
+        f = shard_map(block, mesh=mesh,
+                      in_specs=(P(tp), P(), P(), P(), P(), P(), P(), P(),
+                                P()),
+                      out_specs=(P(tp), P(), P()), check_vma=False)
+
+        def traced(*args):
+            self._trace_count += 1
+            return f(*args)
+
+        return jax.jit(traced)
+
 
 class ServeBinding:
     """The serving subsystem's seam onto the engine.
@@ -1417,6 +1576,10 @@ class ServeBinding:
         self.checkpointer = None
         self.ckpt_step = 0
         self.restores = 0
+        # silent-corruption detection: per-page checksum ledger, kept
+        # incrementally consistent by every mutation path below (see
+        # repro.core.integrity); None = integrity checking disarmed
+        self.integrity = None
         # streaming updates: write-ahead log + fixed apply capacity (one
         # plan signature) + applied-batch sequence number.  The WAL is the
         # delta counterpart of the checkpointer: every applied batch is
@@ -1471,6 +1634,22 @@ class ServeBinding:
         self.last_poisoned = 0
         return out
 
+    # ------------------------------------------------------------ integrity
+    def attach_integrity(self, ledger=None, chunk: int = 64) -> None:
+        """Arm the per-page checksum ledger over the live state.
+
+        Builds a fully-populated ``repro.core.integrity``
+        ``PageChecksumLedger`` (or adopts the one passed in).  From this
+        point every mutation path — :meth:`apply_deltas`, :meth:`replan`
+        migrations, :meth:`requant_hot_pages`, :meth:`remesh` — keeps the
+        ledger consistent, so any divergence a scrub sweep finds is
+        silent corruption by construction."""
+        from repro.core.integrity import PageChecksumLedger
+        if ledger is None:
+            ledger = PageChecksumLedger.build(self.engine, self.state,
+                                              chunk=chunk)
+        self.integrity = ledger
+
     # ------------------------------------------------------------ recovery
     def attach_checkpointer(self, checkpointer, save_now: bool = True
                             ) -> None:
@@ -1503,6 +1682,11 @@ class ServeBinding:
                           for a, s in self.engine.mesh.shape.items()},
                  "n_shards": int(self.engine.cfg.n_shards),
                  "storage": self.engine.cfg.storage}
+        if self.integrity is not None:
+            # snapshot-time ledger: page repair verifies the rows it reads
+            # back out of this snapshot against these entries, so a rotted
+            # snapshot fails loudly instead of being written into the store
+            extra["page_checksums"] = self.integrity.export()
         self.checkpointer.save(self.ckpt_step, self.state, blocking=True,
                                extra=extra)
         if self.wal is not None:
@@ -1559,6 +1743,18 @@ class ServeBinding:
         self.state = self.checkpointer.restore(
             self.state, shardings=self.engine.state_shardings())
         self.restores += 1
+        if self.integrity is not None:
+            # adopt the snapshot-time ledger (it describes exactly the
+            # state just loaded); the WAL replay below routes through
+            # apply_deltas, which keeps it consistent from here on.  A
+            # pre-ledger snapshot forces a full rebuild instead.
+            rec = self.checkpointer.extra().get("page_checksums")
+            if rec is not None:
+                self.integrity.load(rec)
+            else:
+                self.integrity.note_pages(
+                    self.state,
+                    np.arange(self.engine.cfg.num_pages, dtype=np.int64))
         if self.wal is not None:
             snap_seq = int(self.checkpointer.extra().get("update_seq", 0))
             self.update_seq = snap_seq
@@ -1640,6 +1836,8 @@ class ServeBinding:
             shape, names = scale_plan(survivors, prefer_tp=self.prefer_tp,
                                       batch_granule=batch_granule)
             new_mesh = make_mesh(shape, names)
+        old_p2s = (np.asarray(self.state.page_to_shard)
+                   if self.integrity is not None else None)
         new_engine, new_state = remesh_engine(
             old_engine, new_mesh, self.state)
         # pre-swap steady traces move to the carried ledger (the new
@@ -1648,6 +1846,13 @@ class ServeBinding:
         self._carried_traces += old_engine._trace_count
         self.engine = new_engine
         self.state = new_state
+        if self.integrity is not None:
+            # page geometry is shard-count-invariant, so the checksum
+            # ledger survives the re-mesh verbatim — only pages the
+            # re-planned placement flipped across tiers need refreshing
+            self.integrity.rebind(new_engine)
+            self.integrity.note_tier_changes(
+                self.state, old_p2s, np.asarray(self.state.page_to_shard))
         step, steps = self._rebind(new_engine, new_mesh)
         self.steps = dict(steps or {})
         self.steps.setdefault("full", step)
@@ -1702,6 +1907,11 @@ class ServeBinding:
             jax.block_until_ready((new.cold, new.hot))
             self.state = new
         self.updates_applied += int(rows.size)
+        if self.integrity is not None:
+            # every page a delta landed in gets its ledger entry refreshed
+            # from the post-apply state (maintenance-path device work, one
+            # fixed-chunk checksum signature — no retraces)
+            self.integrity.note_rows(self.state, rows)
         return int(rows.size)
 
     def replay_wal(self, after_seq: int = 0) -> int:
@@ -1758,11 +1968,47 @@ class ServeBinding:
                 "factor": rec["entries"] / max(rec["unique_rows"], 1)}
         return out
 
+    def requant_hot_pages(self, pages) -> int:
+        """Snap listed hot pages onto their carried-scale grid
+        (maintenance-path wrapper around the engine op: blocks, notes the
+        ledger, and WAL-fences — see :meth:`replan` for why).  Returns
+        the number of non-pad pages listed."""
+        pages = np.asarray(pages, np.int32).ravel()
+        new = self.engine.requant_hot_pages(self.state, jnp.asarray(pages))
+        jax.block_until_ready(new.hot)
+        self.state = new
+        valid = pages[pages >= 0]
+        if self.integrity is not None and valid.size:
+            self.integrity.note_pages(self.state, valid)
+            if (self.engine.quantized and self.wal is not None
+                    and self.checkpointer is not None):
+                # a requant snap mutates pages outside the WAL: fence with
+                # a snapshot so page repair never replays across it
+                self.snapshot()
+        return int(valid.size)
+
     def replan(self) -> dict:
+        old_p2s = (np.asarray(self.state.page_to_shard)
+                   if self.integrity is not None else None)
         new, stats = self.engine.plan_and_migrate(self.state)
         jax.block_until_ready((new.cold, new.hot))   # same: no timing leak
         self.state = new
         self.replans += 1
+        if self.integrity is not None:
+            # pages that flipped tier changed native-domain content
+            # (promote/demote through the carried scale): refresh them
+            flipped = self.integrity.note_tier_changes(
+                self.state, old_p2s, np.asarray(self.state.page_to_shard))
+            if (flipped.size and self.engine.quantized
+                    and self.wal is not None
+                    and self.checkpointer is not None):
+                # WAL fence: quantized-domain RMW (cold) and fp32 adds
+                # (hot) do not commute through a tier flip, so a WAL tail
+                # spanning one cannot be replayed bit-exactly onto a
+                # snapshot page.  Committing a fresh snapshot (which
+                # truncates the WAL) pins every future page repair to a
+                # post-flip baseline.
+                self.snapshot()
         return stats
 
     def plan_stats(self) -> dict:

@@ -27,11 +27,12 @@ from repro.serving import (BatcherConfig, BindingExecutor, BreakerConfig,
                            FaultInjectingExecutor, FixedBatcher,
                            LadderConfig, LoadConfig,
                            OpenLoopSource, RetryPolicy, RuntimeConfig,
-                           ServingRuntime,
+                           ScrubConfig, ScrubController, ServingRuntime,
                            StreamingUpdater, UpdateConfig, bind_model,
                            closed_loop_factory, dummy_request_factory,
                            make_padder, prime_dedup_auto, request_stream,
                            update_stream)
+from repro.checkpoint.checkpointer import Checkpointer
 from repro.checkpoint.wal import WriteAheadLog
 from repro.launch.mesh import make_test_mesh
 from repro.serving.request import ArrivalConfig
@@ -88,6 +89,7 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                        wal_path: Optional[str] = None,
                        mesh_faults: bool = False, prefer_tp: int = 2,
                        fault_seed: int = 13,
+                       scrub: bool = False, scrub_pages_per_cycle: int = 8,
                        ) -> Dict[str, object]:
     """End-to-end: bind, warm every bucket, serve the stream, and report
     metrics + the steady-state retrace count (must be 0).  The engine's
@@ -110,7 +112,15 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
     the survivor mesh, re-pack, rebuild + re-warm the serve steps), and
     the run finishes on the survivors.  The summary carries the remesh
     record (MTTR = maintenance-seam wall time), watchdog trips, and the
-    degradation report."""
+    degradation report.
+
+    ``scrub`` arms the integrity subsystem: a per-page checksum ledger
+    over the live store, a snapshot (into a temp dir) whose manifest
+    records the snapshot-time ledger, and a ``ScrubController`` on the
+    runtime's maintenance seam auditing ``scrub_pages_per_cycle`` pages
+    per micro-batch and repairing any diverged page surgically (snapshot
+    page slice + filtered WAL replay).  The summary carries the scrub
+    report (``scrub_run``: coverage, detections, per-page repair MTTR)."""
     runtime, binding = build_serving(
         cfg, mesh, mode=mode, impl=impl, block_l=block_l, batcher=batcher,
         batch_sizes=batch_sizes, poolings=load.poolings, slo_ms=load.slo_ms,
@@ -159,6 +169,22 @@ def serve_offered_load(cfg, mesh, load: LoadConfig, *, mode: str = "pifs",
                                        ucfg, wal=wal)
             updater.warmup()              # compile the apply plan now
             runtime.updater = updater
+        if scrub:
+            # arm the ledger over the live store, snapshot it (manifest
+            # records the snapshot-time checksums the repair path
+            # verifies against), and ride the maintenance seam
+            import tempfile
+            binding.attach_integrity()
+            if binding.checkpointer is None:
+                binding.attach_checkpointer(
+                    Checkpointer(tempfile.mkdtemp(prefix="serve_scrub_")),
+                    save_now=True)
+            scrubber = ScrubController(
+                binding,
+                ScrubConfig(pages_per_cycle=scrub_pages_per_cycle),
+                controller=runtime.controller)
+            scrubber.warmup()             # compile audit/repair plans now
+            runtime.scrubber = scrubber
         if mesh_faults:
             runtime.executor = FaultInjectingExecutor(
                 runtime.executor,
@@ -248,6 +274,16 @@ def main() -> None:
     ap.add_argument("--prefer-tp", type=int, default=2,
                     help="tp preference handed to scale_plan when the "
                          "elastic re-mesh lays out the survivor mesh")
+    ap.add_argument("--scrub", action="store_true",
+                    help="arm the integrity scrubber: per-page checksum "
+                         "ledger + snapshot, then audit a rotating page "
+                         "window between micro-batches and repair any "
+                         "diverged page from the snapshot + WAL tail "
+                         "(prints the scrub report)")
+    ap.add_argument("--scrub-pages-per-cycle", type=int, default=8,
+                    help="pages audited per maintenance turn (--scrub); "
+                         "a full store sweep every ceil(num_pages / K) "
+                         "micro-batches")
     ap.add_argument("--observe-every", type=int, default=4)
     ap.add_argument("--replan-every", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
@@ -274,12 +310,15 @@ def main() -> None:
                                   replan_every=args.replan_every),
         closed_loop_users=args.closed_loop_users,
         validate_ids=args.validate_ids, wal_path=args.wal,
-        mesh_faults=args.mesh_faults, prefer_tp=args.prefer_tp)
+        mesh_faults=args.mesh_faults, prefer_tp=args.prefer_tp,
+        scrub=args.scrub,
+        scrub_pages_per_cycle=args.scrub_pages_per_cycle)
     out.pop("latency_hist", None)
     fe_plans = out.pop("front_end", {})
     dedup_factors = out.pop("dedup_factors", {})
     staleness = out.pop("staleness", None)
     updates = out.pop("updates", None)
+    scrub_run = out.pop("scrub_run", None)
     remesh = out.pop("remesh", None)
     watchdog = out.pop("watchdog", None)
     degradation = out.pop("degradation", None)
@@ -301,6 +340,23 @@ def main() -> None:
         print("  -- streaming updates --")
         for k, v in updates.items():
             print(f"  {k:24s} {v}")
+    if scrub_run is not None:
+        print("  -- scrub --")
+        print(f"  audited                  "
+              f"{scrub_run['pages_audited']} pages over "
+              f"{scrub_run['cycles']} cycles "
+              f"(window={scrub_run['pages_per_cycle']}, full sweep every "
+              f"{scrub_run['sweep_cycles']} cycles, "
+              f"{scrub_run['sweeps_completed']} sweeps, "
+              f"coverage={scrub_run['coverage']:.2f})")
+        print(f"  detected/repaired        "
+              f"{scrub_run['pages_detected']}/"
+              f"{scrub_run['pages_repaired']} "
+              f"(quarantined={scrub_run['quarantined']})")
+        if "repair_mttr_mean_s" in scrub_run:
+            print(f"  repair_mttr              "
+                  f"mean={scrub_run['repair_mttr_mean_s']:.4f}s "
+                  f"max={scrub_run['repair_mttr_max_s']:.4f}s")
     if staleness is not None:
         print("  -- staleness (rows / seconds behind) --")
         print(f"  rows_behind   p50={staleness['rows_behind_p50']:.1f} "

@@ -14,6 +14,8 @@ engine's compiled-lookup plan cache:
   degradation.py — retry / circuit breaker / brown-out ladder controller
   updates.py     — streaming embedding updates between micro-batches
                    (WAL-logged delta apply, staleness SLOs, requant-demote)
+  scrub.py       — integrity scrubbing: per-page checksum audits on the
+                   maintenance seam + page-granular snapshot/WAL repair
 
 The engine-facing seam is ``repro.core.pifs.ServeBinding``.
 """
@@ -26,7 +28,7 @@ from repro.serving.degradation import (RUNGS, BreakerConfig, CircuitBreaker,
                                        RetryPolicy)
 from repro.serving.faults import (FaultConfig, FaultInjectingExecutor,
                                   ShardLossFailure, TransientServingFailure,
-                                  corrupt_store)
+                                  corrupt_store, flip_store_bits)
 from repro.core.updates import UpdateConfig
 from repro.serving.loadgen import (LoadConfig, bind_model,
                                    closed_loop_factory,
@@ -39,6 +41,7 @@ from repro.serving.request import (AdmissionQueue, ArrivalConfig, Request,
 from repro.serving.runtime import (BindingExecutor, ClosedLoopSource,
                                    OpenLoopSource, RuntimeConfig,
                                    ServingRuntime, SimulatedExecutor)
+from repro.serving.scrub import ScrubConfig, ScrubController
 from repro.serving.updates import StreamingUpdater, UpdateBatch
 
 __all__ = [
@@ -47,12 +50,13 @@ __all__ = [
     "DegradationController", "DynamicBatcher", "FaultConfig",
     "FaultInjectingExecutor", "FixedBatcher", "FixedServiceModel", "Flush",
     "LadderConfig", "LatencyHistogram", "LoadConfig", "OpenLoopSource",
-    "RUNGS", "Request", "RetryPolicy", "RuntimeConfig", "ServiceModel",
+    "RUNGS", "Request", "RetryPolicy", "RuntimeConfig", "ScrubConfig",
+    "ScrubController", "ServiceModel",
     "ServingMetrics", "ServingRuntime", "ShardLossFailure",
     "SimulatedExecutor",
     "StreamingUpdater", "TransientServingFailure", "UpdateBatch",
     "UpdateConfig", "Wait", "arrival_times", "bind_model",
     "closed_loop_factory", "corrupt_store", "dummy_request_factory",
-    "make_padder", "pad_pooled_indices", "prime_dedup_auto",
-    "request_stream", "stack_feature", "update_stream",
+    "flip_store_bits", "make_padder", "pad_pooled_indices",
+    "prime_dedup_auto", "request_stream", "stack_feature", "update_stream",
 ]

@@ -156,6 +156,7 @@ class DegradationController:
         self.remeshes = 0
         self.remesh_events: List[dict] = []
         self.straggler_trips = 0
+        self.corruption_trips = 0
 
     # --------------------------------------------------------------- wiring
     @property
@@ -198,6 +199,17 @@ class DegradationController:
         l = self.ladder
         self.pressure = (1 - l.alpha) * self.pressure + l.alpha * 0.5
         self.straggler_trips += 1
+
+    def on_corruption(self, now: float) -> None:
+        """Scrub detection: a page's live checksum diverged from the
+        ledger (silent store corruption).  The page is being repaired on
+        the maintenance seam, so like a straggler this is evidence of
+        trouble, not a failed batch — the same half-weight pressure bump:
+        sustained flips walk the ladder down, one cosmic ray decays
+        away."""
+        l = self.ladder
+        self.pressure = (1 - l.alpha) * self.pressure + l.alpha * 0.5
+        self.corruption_trips += 1
 
     # --------------------------------------------------------------- ladder
     def on_batch_done(self, now: float, ok: bool, poisoned: int = 0) -> None:
@@ -286,4 +298,5 @@ class DegradationController:
             "remesh_events": list(self.remesh_events),
             "suspect_shard": self.suspect_shard,
             "straggler_trips": self.straggler_trips,
+            "corruption_trips": self.corruption_trips,
         }

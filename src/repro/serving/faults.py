@@ -35,12 +35,22 @@ chaos, reproducible across runs):
     micro-batch sees the *original* data, matching a re-read from the
     (healthy) feature store.
 
+  * **bit_flip** — a *silent* store corruption: a seeded, deterministic
+    bit flip lands in live hot/cold page content, producing finite wrong
+    values (fp32 flips stay inside the mantissa, int8 flips are always
+    finite).  ``validate_ids`` never sees it (the ids are fine) and the
+    NaN score scrub structurally cannot (nothing is non-finite) — this
+    is the fault class the per-page checksum ledger + scrub sweep
+    (``repro.core.integrity`` / ``serving/scrub.py``) exists to catch.
+
 Every ``run_batch`` *attempt* advances the fault step, so a retried batch
 re-rolls the dice rather than deterministically re-failing forever.
 
-``corrupt_store`` poisons the engine's replicated hot tier in place (NaN
-rows) — the stand-in for a corrupted memory page — which only
-``ServeBinding.restore()`` (reload from the checkpointer) heals.
+``corrupt_store`` poisons the engine's replicated hot tier in place — NaN
+rows (``mode='nan'``: the score scrub catches the fallout) or finite
+mantissa flips (``mode='finite'``: only a checksum audit can see it) —
+the stand-in for a corrupted memory page, healed by
+``ServeBinding.restore()`` or page-granular repair.
 """
 from __future__ import annotations
 
@@ -75,7 +85,7 @@ class ShardLossFailure(TransientServingFailure):
 # (but individually reproducible) schedules per fault class
 _SALTS = {"straggler": 0x57A6, "transient": 0x7EA4, "stall": 0x57A1,
           "corrupt_oob": 0x00B0, "corrupt_nan": 0x0A17,
-          "shard_loss": 0x10AD}
+          "shard_loss": 0x10AD, "bit_flip": 0xB17F}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +120,14 @@ class FaultConfig:
     shard_loss_prob: float = 0.0
     shard_loss_at: Tuple[int, ...] = ()
     shard_loss_shard: int = -1
+    # bit_flip: silent store corruption — deterministic seeded flips of
+    # live page content (finite values, invisible to the score scrub).
+    # Fires against the wrapped executor's binding; each firing flips
+    # bit_flip_rows rows across bit_flip_tier ('hot' / 'cold' / 'both').
+    bit_flip_prob: float = 0.0
+    bit_flip_at: Tuple[int, ...] = ()
+    bit_flip_rows: int = 2
+    bit_flip_tier: str = "both"
 
     def injectors(self) -> Dict[str, FailureInjector]:
         def inj(name: str, prob: float, at: Tuple[int, ...]):
@@ -127,6 +145,8 @@ class FaultConfig:
                                self.corrupt_nan_at),
             "shard_loss": inj("shard_loss", self.shard_loss_prob,
                               self.shard_loss_at),
+            "bit_flip": inj("bit_flip", self.bit_flip_prob,
+                            self.bit_flip_at),
         }
 
 
@@ -156,6 +176,7 @@ class FaultInjectingExecutor:
         self.lost_shard: Optional[int] = None   # armed by shard_loss
         self.fired: Dict[str, int] = {k: 0 for k in self._inj}
         self.corrupted_batches: list = []
+        self.bit_flip_events: list = []   # [{step, pages}] per firing
 
     # ------------------------------------------------------------- helpers
     def _fire(self, name: str, step: int) -> bool:
@@ -240,6 +261,19 @@ class FaultInjectingExecutor:
             self._transient_left = self.cfg.transient_runs - 1
             raise TransientServingFailure(
                 f"injected transient failure at attempt {step}")
+        if self._fire("bit_flip", step):
+            # silent store corruption: flip live page bits *before* this
+            # attempt serves — the batch succeeds with finite wrong
+            # scores, which is the whole point
+            binding = getattr(self.inner, "binding", None)
+            if binding is not None:
+                pages = flip_store_bits(
+                    binding, n_rows=self.cfg.bit_flip_rows,
+                    seed=hash((self.cfg.seed, _SALTS["bit_flip"], step))
+                    & 0x7FFFFFFF,
+                    tier=self.cfg.bit_flip_tier)
+                self.bit_flip_events.append(
+                    {"step": step, "pages": [int(p) for p in pages]})
         batch = self._corrupt(step, batch)
         svc = self.inner.run_batch(bucket, batch)
         if self._fire("straggler", step):
@@ -266,12 +300,21 @@ class FaultInjectingExecutor:
         return dict(self.fired)
 
 
-def corrupt_store(binding, frac: float = 0.25, seed: int = 0) -> int:
-    """Scribble NaNs over a fraction of the binding's replicated hot tier
+def corrupt_store(binding, frac: float = 0.25, seed: int = 0,
+                  mode: str = "nan") -> int:
+    """Corrupt a fraction of the binding's replicated hot tier in place
     (the stand-in for a corrupted fabric-attached memory page).  Returns
-    the number of poisoned rows.  Only ``binding.restore()`` (reload from
-    the checkpointer) heals this — lookups hitting poisoned rows produce
-    non-finite scores that the scrub then catches."""
+    the number of poisoned rows.
+
+    ``mode='nan'``: rows become NaN — lookups hitting them produce
+    non-finite scores, which the ``scrub_scores`` path catches (and only
+    ``binding.restore()`` heals).  ``mode='finite'``: each chosen row gets
+    one mantissa bit flipped — the values stay finite, the score scrub is
+    structurally blind to them, and only a checksum audit
+    (``repro.core.integrity``) can detect the damage.  The NaN-only
+    default used to overstate what ``scrub_scores`` covers; fault drills
+    that claim scrub coverage must say ``mode='nan'`` explicitly.
+    """
     import dataclasses as _dc
 
     import jax
@@ -280,8 +323,97 @@ def corrupt_store(binding, frac: float = 0.25, seed: int = 0) -> int:
     n = max(1, int(hot.shape[0] * frac))
     rng = np.random.default_rng(seed)
     rows = rng.choice(hot.shape[0], size=n, replace=False)
-    hot[rows] = np.nan
+    if mode == "nan":
+        hot[rows] = np.nan
+    elif mode == "finite":
+        # flip one mantissa bit per row: the exponent is untouched, so
+        # finite values stay finite (zero becomes a subnormal) — wrong
+        # embeddings that serve without a single non-finite score
+        cols = rng.integers(0, hot.shape[1], size=n)
+        bits = hot[rows, cols].astype(np.float32).view(np.uint32)
+        bits ^= (np.uint32(1) << rng.integers(0, 23, size=n,
+                                              dtype=np.uint32))
+        hot[rows, cols] = bits.view(np.float32)
+    else:
+        raise ValueError(f"unknown corrupt_store mode {mode!r} "
+                         "(expected 'nan' or 'finite')")
     sh = binding.engine.state_shardings().hot
     binding.state = _dc.replace(
         binding.state, hot=jax.device_put(hot.astype(np.float32), sh))
     return n
+
+
+def flip_store_bits(binding, n_rows: int = 2, seed: int = 0,
+                    tier: str = "both") -> list:
+    """Flip one bit in each of ``n_rows`` live store rows — deterministic,
+    seeded, always *finite* (fp32 flips stay in the mantissa; int8 code
+    flips are finite by construction).  Returns the sorted list of global
+    page ids touched (what a scrub sweep must detect).
+
+    ``tier`` picks victim pages: ``'hot'`` (replicated fp32 tier),
+    ``'cold'`` (sharded fp32-or-int8 tier), or ``'both'``.  The flip is
+    applied to the page's *native-domain* content — exactly the bytes the
+    per-page checksum covers — so every flip is detectable by one audit
+    of its page.
+    """
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.core.paging import HOT_SHARD
+
+    eng = binding.engine
+    cfg = eng.cfg
+    ps = cfg.page_size
+    rng = np.random.default_rng(seed)
+    p2s = np.asarray(binding.state.page_to_shard)
+    p2slot = np.asarray(binding.state.page_to_slot)
+    hot_pages = np.nonzero(p2s == HOT_SHARD)[0]
+    cold_pages = np.nonzero(p2s != HOT_SHARD)[0]
+    if tier == "hot":
+        candidates = hot_pages
+    elif tier == "cold":
+        candidates = cold_pages
+    elif tier == "both":
+        candidates = np.concatenate([hot_pages, cold_pages])
+    else:
+        raise ValueError(f"unknown tier {tier!r} "
+                         "(expected 'hot', 'cold', or 'both')")
+    if candidates.size == 0:
+        raise ValueError(f"no pages resident in tier {tier!r} to corrupt")
+
+    hot = np.array(binding.state.hot, copy=True)
+    cold = np.array(binding.state.cold, copy=True)
+    touched = set()
+    hot_dirty = cold_dirty = False
+    for _ in range(int(n_rows)):
+        page = int(rng.choice(candidates))
+        off = int(rng.integers(0, ps))
+        col = int(rng.integers(0, cfg.dim))
+        touched.add(page)
+        if p2s[page] == HOT_SHARD:
+            r = int(p2slot[page]) * ps + off
+            bits = np.float32(hot[r, col]).view(np.uint32)
+            bits ^= np.uint32(1) << rng.integers(0, 23, dtype=np.uint32)
+            hot[r, col] = bits.view(np.float32)
+            hot_dirty = True
+        else:
+            r = int(p2s[page]) * cfg.rows_per_shard + int(p2slot[page]) * ps \
+                + off
+            if cold.dtype == np.int8:
+                bits = np.int8(cold[r, col]).view(np.uint8)
+                bits ^= np.uint8(1) << rng.integers(0, 8, dtype=np.uint8)
+                cold[r, col] = bits.view(np.int8)
+            else:
+                bits = np.float32(cold[r, col]).view(np.uint32)
+                bits ^= np.uint32(1) << rng.integers(0, 23, dtype=np.uint32)
+                cold[r, col] = bits.view(np.float32)
+            cold_dirty = True
+    sh = eng.state_shardings()
+    new = binding.state
+    if hot_dirty:
+        new = _dc.replace(new, hot=jax.device_put(hot, sh.hot))
+    if cold_dirty:
+        new = _dc.replace(new, cold=jax.device_put(cold, sh.cold))
+    binding.state = new
+    return sorted(int(p) for p in touched)

@@ -102,6 +102,14 @@ class ServingMetrics:
         # lags the trainer's delta stream
         self.staleness_rows: List[float] = []
         self.staleness_s: List[float] = []
+        # integrity-scrub counters (recorded by the ScrubController on the
+        # maintenance seam): audit coverage, detections, per-page repair
+        # MTTR samples
+        self.scrub_cycles = 0
+        self.scrub_pages_audited = 0
+        self.scrub_pages_detected = 0
+        self.scrub_pages_repaired = 0
+        self.scrub_repair_s: List[float] = []
 
     # ------------------------------------------------------------ recording
     def record_request(self, req: Request) -> None:
@@ -147,6 +155,22 @@ class ServingMetrics:
         micro-batch boundary, and the age of the oldest pending batch."""
         self.staleness_rows.append(float(rows_behind))
         self.staleness_s.append(float(seconds_behind))
+
+    def record_scrub(self, pages: int) -> None:
+        """One scrub cycle audited ``pages`` pages."""
+        self.scrub_cycles += 1
+        self.scrub_pages_audited += int(pages)
+
+    def record_scrub_detection(self, page: int) -> None:
+        """A page's live checksum diverged from the ledger (first
+        detection of that page)."""
+        self.scrub_pages_detected += 1
+
+    def record_scrub_repair(self, page: int, seconds: float) -> None:
+        """One page repaired; ``seconds`` is its repair MTTR (detection
+        to verified write-back)."""
+        self.scrub_pages_repaired += 1
+        self.scrub_repair_s.append(float(seconds))
 
     # ------------------------------------------------------------- summary
     def summary(self) -> Dict[str, object]:
@@ -203,5 +227,19 @@ class ServingMetrics:
                 "seconds_behind_p99": float(np.percentile(secs, 99.0)),
                 "seconds_behind_max": float(secs.max()),
             }
+        # present only when a scrub controller ran: runs without one keep
+        # the exact legacy summary shape
+        if self.scrub_cycles:
+            scrub: Dict[str, object] = {
+                "cycles": self.scrub_cycles,
+                "pages_audited": self.scrub_pages_audited,
+                "pages_detected": self.scrub_pages_detected,
+                "pages_repaired": self.scrub_pages_repaired,
+            }
+            if self.scrub_repair_s:
+                rep = np.asarray(self.scrub_repair_s)
+                scrub["repair_mttr_mean_s"] = float(rep.mean())
+                scrub["repair_mttr_max_s"] = float(rep.max())
+            out["scrub"] = scrub
         out["latency_hist"] = self.latency.export()
         return out

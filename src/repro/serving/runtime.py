@@ -158,7 +158,7 @@ class ServingRuntime:
                  cfg: RuntimeConfig = RuntimeConfig(),
                  service_model: Optional[ServiceModel] = None,
                  controller=None, updater=None, watchdog=None,
-                 warmup_factory=None):
+                 warmup_factory=None, scrubber=None):
         self.executor = executor
         self.batcher = batcher
         self.padder = padder
@@ -174,6 +174,11 @@ class ServingRuntime:
         # trainer's delta stream between micro-batches on the maintenance
         # seam (same accounting as observe/replan)
         self.updater = updater
+        # optional repro.serving.scrub.ScrubController: audits a rotating
+        # window of store pages against the per-page checksum ledger on
+        # the same maintenance cadence and repairs divergent pages
+        # page-granularly (snapshot slice + filtered WAL replay)
+        self.scrubber = scrubber
         # optional repro.runtime.fault_tolerance.StragglerWatchdog over
         # per-batch *service* times: warmup seeds its EWMA baseline, each
         # successful batch feeds it, and a trip bumps the degradation
@@ -391,6 +396,15 @@ class ServingRuntime:
                     self.metrics.record_maintenance("updates", dt)
                     if cfg.account_maintenance:
                         finish += dt
+            if self.scrubber is not None:
+                # integrity scrub: audit the next page window (and repair
+                # any divergence) on the maintenance seam — the wall time
+                # is maintenance-accounted, never in the service EMA
+                dt = self.scrubber.on_batch(finish, self.metrics)
+                if dt:
+                    self.metrics.record_maintenance("scrub", dt)
+                    if cfg.account_maintenance:
+                        finish += dt
             for r in reqs:
                 r.start_s = now
                 r.finish_s = finish
@@ -431,6 +445,8 @@ class ServingRuntime:
             s["watchdog"] = {"trips": len(self.watchdog.events),
                              "ewma_s": self.watchdog.ewma,
                              "events": list(self.watchdog.events)}
+        if self.scrubber is not None:
+            s["scrub_run"] = self.scrubber.report()
         if self.remesh_record is not None:
             s["remesh"] = dict(self.remesh_record)
         return s

@@ -166,6 +166,12 @@ class StreamingUpdater:
         new = eng.migrate(state, new_table, count_decay=1.0)
         jax.block_until_ready((new.cold, new.hot))
         binding.state = new
+        if getattr(binding, "integrity", None) is not None:
+            # demoted pages change native-domain content (hot fp32 ->
+            # requantized codes): refresh their checksum ledger entries
+            binding.integrity.note_tier_changes(
+                new, np.asarray(table.page_to_shard),
+                np.asarray(new_table.page_to_shard))
         self.tracker.note_requantized(pages)
         self.demoted_pages += int(pages.size)
         # Demotions move rows between tiers and are NOT WAL-logged (the

@@ -370,7 +370,10 @@ def test_scrub_and_checkpoint_restore_heal_corrupted_store(mesh, rmc1,
         binding.reset_plan_stats()
         binding.attach_checkpointer(Checkpointer(str(tmp_path)),
                                     save_now=True)
-        n_bad = corrupt_store(binding, frac=1.0, seed=1)
+        # explicit mode="nan": this scenario heals through the NaN score
+        # scrub; finite flips are the checksum scrubber's territory
+        # (test_integrity.py)
+        n_bad = corrupt_store(binding, frac=1.0, seed=1, mode="nan")
         assert n_bad > 0
         poisoned = np.asarray(binding.execute(batch))
         assert binding.last_poisoned > 0 and binding.poisoned_batches == 1
@@ -409,7 +412,7 @@ def test_heal_replays_wal_for_post_snapshot_updates(mesh, rmc1, tmp_path):
         fresh = np.asarray(binding.execute(batch))  # post-update scores
         assert not np.array_equal(stale, fresh)     # updates visible
         binding.reset_plan_stats()
-        assert corrupt_store(binding, frac=1.0, seed=4) > 0
+        assert corrupt_store(binding, frac=1.0, seed=4, mode="nan") > 0
         binding.restore()
         healed = np.asarray(binding.execute(batch))
     assert binding.restores == 1

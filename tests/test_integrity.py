@@ -1,0 +1,513 @@
+"""Silent-corruption detection + page-granular self-healing.
+
+Pins the per-page checksum ledger (``repro.core.integrity``): host/device
+checksum bit-identity, incremental consistency across every mutation path
+(delta apply, replan migration, requant snaps, elastic re-mesh — the
+hypothesis sweep interleaves them randomly), detection of finite bit
+flips the NaN score scrub is structurally blind to, and the snapshot +
+WAL-replay repair path restoring the store bit-identically to a
+never-corrupted engine.  Plus the serving-seam accounting contract:
+scrub wall time is maintenance, never service latency.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.wal import WriteAheadLog
+from repro.core.integrity import (PageChecksumLedger, fetch_snapshot_page,
+                                  page_checksum_host)
+from repro.core.paging import HOT_SHARD
+from repro.serving import (DegradationController, FixedBatcher,
+                           FixedServiceModel, OpenLoopSource, Request,
+                           RuntimeConfig, ScrubConfig, ScrubController,
+                           ServingMetrics, ServingRuntime,
+                           SimulatedExecutor, bind_model, corrupt_store,
+                           flip_store_bits)
+
+
+@pytest.fixture(scope="module")
+def rmc1():
+    from repro.configs import get_config, reduced
+    return reduced(get_config("rmc1"))
+
+
+def _dlrm_batch(cfg, B=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"dense": rng.normal(size=(B, cfg.n_dense)).astype(np.float32),
+            "indices": rng.integers(0, cfg.emb_num,
+                                    (B, cfg.n_tables, cfg.pooling)
+                                    ).astype(np.int32)}
+
+
+def _promote_hot(binding, cfg, seed=0):
+    """Observe a skewed stream and replan so some pages land hot."""
+    dp = max(1, binding.engine.axes.dp_size(binding.engine.mesh))
+    idx = _dlrm_batch(cfg, B=8, seed=seed)["indices"] % 64
+    binding.observe({binding.idx_key:
+                     np.broadcast_to(idx[None], (dp,) + idx.shape)})
+    binding.replan()
+    p2s = np.asarray(binding.state.page_to_shard)
+    return np.nonzero(p2s == HOT_SHARD)[0]
+
+
+def _page_rows_host(binding, page):
+    """A page's native-domain rows + scale pulled from host copies of the
+    live leaves — the independent reference the ledger must agree with."""
+    eng = binding.engine
+    ps = eng.cfg.page_size
+    p2s = np.asarray(binding.state.page_to_shard)
+    p2slot = np.asarray(binding.state.page_to_slot)
+    scale = float(np.asarray(binding.state.page_scales)[page])
+    if p2s[page] == HOT_SHARD:
+        hot = np.asarray(binding.state.hot)
+        slot = int(p2slot[page])
+        return hot[slot * ps:(slot + 1) * ps], scale
+    cold = np.asarray(binding.state.cold)
+    start = int(p2s[page]) * eng.cfg.rows_per_shard + int(p2slot[page]) * ps
+    return cold[start:start + ps], scale
+
+
+def _state_leaves(binding):
+    st = binding.state
+    return [np.asarray(x) for x in (st.cold, st.hot, st.page_scales,
+                                    st.page_to_shard, st.page_to_slot)]
+
+
+# ---------------------------------------------------------------------------
+# Checksum definition: host twin == device reduction, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_host_checksum_matches_device_both_tiers(mesh, rmc1, storage):
+    binding = bind_model(rmc1, mesh, storage=storage)
+    with mesh:
+        hot_pages = _promote_hot(binding, rmc1)
+        assert hot_pages.size > 0
+        binding.attach_integrity()
+        ledger = binding.integrity
+        # every legitimate path updated the ledger (here: build time), so
+        # a full audit is clean
+        assert ledger.verify(binding.state).size == 0
+        for page in range(binding.engine.cfg.num_pages):
+            rows, scale = _page_rows_host(binding, page)
+            assert page_checksum_host(rows, scale) == \
+                int(ledger.checksums[page]), f"page {page}"
+
+
+def test_host_checksum_rejects_unsupported_dtype():
+    with pytest.raises(TypeError, match="int8 codes or fp32"):
+        page_checksum_host(np.zeros((4, 4), np.float64), 1.0)
+
+
+def test_checksum_position_weighted_catches_row_swap():
+    """The Fletcher s2 term: swapped rows change the checksum even though
+    the lane *sum* is identical — a sum-only checksum would miss it."""
+    rows = np.arange(32, dtype=np.float32).reshape(8, 4)
+    swapped = rows.copy()
+    swapped[[0, 1]] = swapped[[1, 0]]
+    assert page_checksum_host(rows, 1.0) != page_checksum_host(swapped, 1.0)
+    # while the unweighted lane sums agree
+    assert rows.view(np.uint32).sum() == swapped.view(np.uint32).sum()
+
+
+# ---------------------------------------------------------------------------
+# Detection: finite flips are invisible to the score scrub, caught by audit
+# ---------------------------------------------------------------------------
+
+
+def test_finite_flip_evades_score_scrub_but_not_ledger(mesh, rmc1):
+    binding = bind_model(rmc1, mesh, scrub_scores=True)
+    batch = _dlrm_batch(rmc1)
+    with mesh:
+        _promote_hot(binding, rmc1)
+        binding.attach_integrity()
+        flipped = flip_store_bits(binding, n_rows=3, seed=11, tier="both")
+        scores = np.asarray(binding.execute(batch))
+        # wrong-but-finite scores sail through the NaN/Inf scrub
+        assert np.isfinite(scores).all()
+        assert binding.last_poisoned == 0 and binding.poisoned_rows == 0
+        # ...while one checksum audit names exactly the flipped pages
+        bad = binding.integrity.verify(binding.state)
+        assert sorted(int(p) for p in bad) == flipped
+
+
+def test_corrupt_store_finite_mode_and_mode_validation(mesh, rmc1):
+    binding = bind_model(rmc1, mesh, scrub_scores=True)
+    batch = _dlrm_batch(rmc1)
+    with mesh:
+        hot_pages = _promote_hot(binding, rmc1)
+        binding.attach_integrity()
+        with pytest.raises(ValueError, match="unknown corrupt_store mode"):
+            corrupt_store(binding, frac=0.5, seed=2, mode="bogus")
+        n = corrupt_store(binding, frac=0.5, seed=2, mode="finite")
+        assert n > 0
+        assert np.isfinite(np.asarray(binding.state.hot)).all()
+        scores = np.asarray(binding.execute(batch))
+        assert np.isfinite(scores).all() and binding.last_poisoned == 0
+        bad = binding.integrity.verify(binding.state)
+        assert bad.size > 0
+        assert set(int(p) for p in bad) <= set(int(p) for p in hot_pages)
+
+
+def test_scrub_controller_requires_armed_ledger(mesh, rmc1):
+    binding = bind_model(rmc1, mesh)
+    with pytest.raises(RuntimeError, match="attach_integrity"):
+        ScrubController(binding)
+
+
+# ---------------------------------------------------------------------------
+# Rotating window: full coverage within one sweep, detection bounded by it
+# ---------------------------------------------------------------------------
+
+
+def test_rotating_window_detects_within_one_sweep(mesh, rmc1):
+    binding = bind_model(rmc1, mesh)
+    with mesh:
+        _promote_hot(binding, rmc1)
+        binding.attach_integrity()
+        n = int(binding.engine.cfg.num_pages)
+        k = max(1, n // 4)
+        scrub = ScrubController(binding,
+                                ScrubConfig(pages_per_cycle=k, repair=False))
+        flipped = flip_store_bits(binding, n_rows=3, seed=5, tier="both")
+        m = ServingMetrics()
+        sweep = -(-n // k)
+        for _ in range(sweep):
+            scrub.on_batch(0.0, m)
+        rep = scrub.report()
+        assert rep["sweep_cycles"] == sweep
+        assert rep["coverage"] == 1.0 and rep["pages_audited"] == sweep * k
+        # every flipped page found inside the first full sweep, and (no
+        # repair path armed) left quarantined
+        assert sorted(rep["detections"]) == flipped
+        assert all(c <= sweep for c in rep["detections"].values())
+        assert rep["quarantined"] == flipped and rep["pages_repaired"] == 0
+        s = m.summary()
+        assert s["scrub"]["cycles"] == sweep
+        assert s["scrub"]["pages_detected"] == len(flipped)
+        assert s["scrub"]["pages_repaired"] == 0
+    # runs without a scrubber keep the exact legacy summary shape
+    assert "scrub" not in ServingMetrics().summary()
+
+
+# ---------------------------------------------------------------------------
+# Repair: snapshot page + filtered WAL replay == never-corrupted, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _arm_full(binding, cfg, tmp_path):
+    """Hot tier + ledger + snapshot (with ledger) + a WAL-logged delta
+    tail past the snapshot touching every page."""
+    _promote_hot(binding, cfg)
+    binding.attach_integrity()
+    binding.attach_wal(WriteAheadLog(os.path.join(str(tmp_path), "t.wal")))
+    binding.attach_checkpointer(Checkpointer(str(tmp_path)), save_now=True)
+    eng = binding.engine
+    n_pages, ps, d = eng.cfg.num_pages, eng.cfg.page_size, eng.cfg.dim
+    rng = np.random.default_rng(23)
+    rows = (np.arange(n_pages, dtype=np.int64) * ps
+            + rng.integers(0, ps, size=n_pages))
+    deltas = (1e-3 * rng.standard_normal((n_pages, d))).astype(np.float32)
+    binding.apply_deltas(rows, deltas)
+    assert len(binding.wal) > 0
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_repair_restores_bit_identical_state(mesh, rmc1, storage, tmp_path):
+    binding = bind_model(rmc1, mesh, storage=storage)
+    batch = _dlrm_batch(rmc1)
+    with mesh:
+        _arm_full(binding, rmc1, tmp_path)
+        truth_scores = np.asarray(binding.execute(batch))
+        truth_leaves = _state_leaves(binding)
+        n = int(binding.engine.cfg.num_pages)
+        scrub = ScrubController(binding, ScrubConfig(pages_per_cycle=n))
+        scrub.warmup()
+        # warmup compiles through all-pad windows/pages: state untouched
+        for a, b in zip(truth_leaves, _state_leaves(binding)):
+            np.testing.assert_array_equal(a, b)
+        flipped = flip_store_bits(binding, n_rows=3, seed=7, tier="both")
+        scrub.on_batch(0.0)                     # one full-store audit
+        rep = scrub.report()
+        assert sorted(rep["detections"]) == flipped
+        assert rep["pages_repaired"] == len(flipped)
+        assert rep["quarantined"] == []
+        # every repair replayed the WAL tail (one record per page landed
+        # after the snapshot) and clocked a positive MTTR
+        assert all(r["wal_batches"] >= 1 and r["mttr_s"] > 0.0
+                   for r in rep["repairs"])
+        for a, b in zip(truth_leaves, _state_leaves(binding)):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(truth_scores,
+                                      np.asarray(binding.execute(batch)))
+        assert binding.integrity.verify(binding.state).size == 0
+
+
+def test_repaired_equals_fresh_property_over_flip_seeds(mesh, rmc1,
+                                                        tmp_path):
+    """Repaired-equals-fresh as a property: any seeded flip pattern, once
+    scrubbed, leaves the store bitwise equal to the never-corrupted
+    truth — so successive rounds always start from the same state."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    binding = bind_model(rmc1, mesh, storage="int8")
+    with mesh:
+        _arm_full(binding, rmc1, tmp_path)
+        truth_leaves = _state_leaves(binding)
+    n = int(binding.engine.cfg.num_pages)
+
+    @settings(deadline=None, max_examples=8,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2 ** 16), n_rows=st.integers(1, 4),
+           tier=st.sampled_from(["hot", "cold", "both"]))
+    def prop(seed, n_rows, tier):
+        with mesh:
+            flipped = flip_store_bits(binding, n_rows=n_rows, seed=seed,
+                                      tier=tier)
+            scrub = ScrubController(binding,
+                                    ScrubConfig(pages_per_cycle=n))
+            scrub.on_batch(0.0)
+            rep = scrub.report()
+            assert sorted(rep["detections"]) == flipped
+            assert rep["pages_repaired"] == len(flipped)
+            for a, b in zip(truth_leaves, _state_leaves(binding)):
+                np.testing.assert_array_equal(a, b)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Invariance: the ledger tracks every legitimate mutation path
+# ---------------------------------------------------------------------------
+
+_prop_bindings: dict = {}
+
+
+def _shared_binding(rmc1, mesh, storage):
+    if storage not in _prop_bindings:
+        b = bind_model(rmc1, mesh, storage=storage)
+        with mesh:
+            _promote_hot(b, rmc1)
+            b.attach_integrity()
+        _prop_bindings[storage] = b
+    return _prop_bindings[storage]
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_ledger_invariant_under_interleaved_mutations(mesh, rmc1, storage):
+    """Hypothesis sweep: random interleavings of delta application,
+    observe/replan migration, and hot-page requant snaps accumulate on a
+    shared live binding — after every op the full audit must be clean
+    (every mutation path kept the ledger consistent incrementally)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    binding = _shared_binding(rmc1, mesh, storage)
+    eng = binding.engine
+    total, d = eng.cfg.total_rows, eng.cfg.dim
+
+    def apply_op(rng):
+        rows = rng.integers(0, total, size=16).astype(np.int64)
+        deltas = (1e-3 * rng.standard_normal((16, d))).astype(np.float32)
+        binding.apply_deltas(rows, deltas)
+
+    def migrate_op(rng):
+        dp = max(1, eng.axes.dp_size(eng.mesh))
+        idx = rng.integers(0, rmc1.emb_num,
+                           (8, rmc1.n_tables, rmc1.pooling)
+                           ).astype(np.int32) % int(rng.integers(32, 256))
+        binding.observe({binding.idx_key:
+                         np.broadcast_to(idx[None], (dp,) + idx.shape)})
+        binding.replan()
+
+    def requant_op(rng):
+        p2s = np.asarray(binding.state.page_to_shard)
+        hot = np.nonzero(p2s == HOT_SHARD)[0]
+        if hot.size:
+            binding.requant_hot_pages(hot[:2].astype(np.int32))
+
+    ops = {"apply": apply_op, "migrate": migrate_op, "requant": requant_op}
+
+    @settings(deadline=None, max_examples=6,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seq=st.lists(st.sampled_from(sorted(ops)), min_size=1,
+                        max_size=4),
+           seed=st.integers(0, 2 ** 16))
+    def prop(seq, seed):
+        rng = np.random.default_rng(seed)
+        with mesh:
+            for name in seq:
+                ops[name](rng)
+                assert binding.integrity.verify(binding.state).size == 0, \
+                    f"ledger diverged after {name} in {seq}"
+
+    prop()
+
+
+@pytest.mark.parametrize("storage", ["fp32", "int8"])
+def test_ledger_survives_elastic_remesh(mesh, rmc1, storage):
+    """Interleave a mid-sequence re-mesh with the other mutation paths:
+    page geometry is shard-count-invariant, so the ledger carries across
+    the survivor mesh verbatim (tier-flipped pages recomputed) and stays
+    consistent for mutations on the new mesh."""
+    binding = bind_model(rmc1, mesh, storage=storage, elastic=True,
+                         prefer_tp=2)
+    eng_cfg = binding.engine.cfg
+    rng = np.random.default_rng(3)
+    with mesh:
+        _promote_hot(binding, rmc1)
+        binding.attach_integrity()
+        before = binding.integrity.checksums.copy()
+        rows = rng.integers(0, eng_cfg.total_rows, size=16).astype(np.int64)
+        deltas = (1e-3 * rng.standard_normal(
+            (16, eng_cfg.dim))).astype(np.float32)
+        binding.apply_deltas(rows, deltas)
+        assert binding.integrity.verify(binding.state).size == 0
+
+        old_p2s = np.asarray(binding.state.page_to_shard)
+        binding.remesh(lost_shard=3)
+        assert dict(binding.engine.mesh.shape)["model"] == 2
+        # rebind carried the ledger onto the re-meshed engine...
+        assert binding.integrity.engine is binding.engine
+        assert binding.integrity.verify(binding.state).size == 0
+        # ...and pages that kept their tier kept their checksum verbatim
+        new_p2s = np.asarray(binding.state.page_to_shard)
+        kept = ((old_p2s == HOT_SHARD) == (new_p2s == HOT_SHARD))
+        touched = np.unique(rows // eng_cfg.page_size)
+        stable = np.setdiff1d(np.nonzero(kept)[0], touched)
+        np.testing.assert_array_equal(binding.integrity.checksums[stable],
+                                      before[stable])
+
+        # the survivor mesh keeps the invariant under further mutations
+        binding.apply_deltas(rows, deltas)
+        assert binding.integrity.verify(binding.state).size == 0
+        # and a flip on the survivor mesh is still detected
+        flipped = flip_store_bits(binding, n_rows=2, seed=9, tier="cold")
+        bad = binding.integrity.verify(binding.state)
+        assert sorted(int(p) for p in bad) == flipped
+
+
+def test_ledger_rebind_rejects_geometry_change(mesh, rmc1):
+    binding = bind_model(rmc1, mesh)
+    with mesh:
+        binding.attach_integrity()
+
+    class _FakeCfg:
+        num_pages = binding.engine.cfg.num_pages + 1
+
+    class _FakeEngine:
+        cfg = _FakeCfg()
+
+    with pytest.raises(ValueError, match="page-geometry change"):
+        binding.integrity.rebind(_FakeEngine())
+
+
+# ---------------------------------------------------------------------------
+# Snapshot plumbing: partial page reads + the ledger in the manifest
+# ---------------------------------------------------------------------------
+
+
+def test_checkpointer_partial_reads_and_snapshot_ledger(mesh, rmc1,
+                                                        tmp_path):
+    binding = bind_model(rmc1, mesh, storage="int8")
+    with mesh:
+        hot_pages = _promote_hot(binding, rmc1)
+        binding.attach_integrity()
+        binding.attach_checkpointer(Checkpointer(str(tmp_path)),
+                                    save_now=True)
+    ck = binding.checkpointer
+    eng = binding.engine
+    ps = eng.cfg.page_size
+
+    # partial reads slice exactly out of the full leaf, through one mmap
+    cold = ck.read_leaf("cold")
+    np.testing.assert_array_equal(ck.read_page("cold", ps, ps),
+                                  cold[ps:2 * ps])
+    spans = [(0, ps), (3 * ps, 2 * ps)]
+    got = ck.read_pages("cold", spans)
+    np.testing.assert_array_equal(got[0], cold[:ps])
+    np.testing.assert_array_equal(got[1], cold[3 * ps:5 * ps])
+    with pytest.raises(KeyError):
+        ck.read_page("no_such_leaf", 0, ps)
+
+    # the manifest carries the snapshot-time ledger, one entry per page
+    rec = ck.extra().get("page_checksums")
+    assert rec is not None
+    assert len(rec["checksums"]) == eng.cfg.num_pages
+
+    # fetch_snapshot_page host-verifies for both tiers
+    cold_pages = np.setdiff1d(np.arange(eng.cfg.num_pages), hot_pages)
+    for page in (int(hot_pages[0]), int(cold_pages[0])):
+        snap = fetch_snapshot_page(ck, eng.cfg, page)
+        assert snap["checksum"] is not None
+        assert page_checksum_host(snap["rows"], snap["scale"]) == \
+            snap["checksum"]
+        assert snap["checksum"] == int(binding.integrity.checksums[page])
+    assert snap["tier"] == "cold"
+
+
+def test_ledger_export_load_roundtrip_and_size_guard(mesh, rmc1):
+    binding = bind_model(rmc1, mesh)
+    with mesh:
+        binding.attach_integrity()
+    ledger = binding.integrity
+    data = ledger.export()
+    fresh = PageChecksumLedger(binding.engine)
+    fresh.load(data)
+    np.testing.assert_array_equal(fresh.checksums, ledger.checksums)
+    with pytest.raises(ValueError, match="size mismatch"):
+        fresh.load({"checksums": data["checksums"][:-1]})
+
+
+# ---------------------------------------------------------------------------
+# Serving-seam accounting + degradation coupling
+# ---------------------------------------------------------------------------
+
+
+def test_scrub_time_is_maintenance_never_latency(mesh, rmc1):
+    """Scrub wall time lands in maintenance_s['scrub'] and never moves a
+    latency percentile: two identical virtual-clock runs, one with the
+    scrubber armed, must report bitwise-equal latency numbers."""
+    binding = bind_model(rmc1, mesh)
+    with mesh:
+        binding.attach_integrity()
+    model = FixedServiceModel(base_s=2e-3, per_row_s=0.0)
+    cfg = RuntimeConfig(observe_every=0, replan_every=0)
+    assert cfg.account_maintenance is False
+
+    def run(scrubber):
+        rt = ServingRuntime(
+            SimulatedExecutor(model), FixedBatcher(batch=4, pooling=4),
+            padder=lambda reqs, bucket: {"n": len(reqs)}, cfg=cfg,
+            service_model=model, scrubber=scrubber)
+        reqs = [Request(rid=i, arrival_s=1e-3 * i, deadline_s=10.0,
+                        features={}, pooling=4) for i in range(32)]
+        with mesh:
+            return rt.run(OpenLoopSource(reqs))
+
+    plain = run(None)
+    scrub = ScrubController(binding, ScrubConfig(pages_per_cycle=4,
+                                                 repair=False))
+    scrubbed = run(scrub)
+    assert "scrub" not in plain["maintenance_s"]
+    assert scrubbed["maintenance_s"]["scrub"] > 0.0
+    assert scrubbed["scrub_run"]["cycles"] == scrub.cycles > 0
+    assert scrubbed["scrub"]["pages_detected"] == 0      # clean store
+    for k in ("p50_ms", "p99_ms", "served", "qps", "availability"):
+        assert plain[k] == scrubbed[k], k
+
+
+def test_on_corruption_matches_straggler_half_weight():
+    a = DegradationController()
+    b = DegradationController()
+    a.on_straggler(0.0)
+    b.on_corruption(0.0)
+    assert b.pressure == a.pressure > 0.0
+    assert b.corruption_trips == 1 and a.corruption_trips == 0
+    assert b.report()["corruption_trips"] == 1
